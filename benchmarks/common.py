@@ -1,0 +1,87 @@
+"""Shared benchmark machinery.
+
+Wall-clock numbers from this container are CPU-XLA timings — useful for
+RELATIVE comparisons (λ sweeps, ablations, single-vs-dual) which is exactly
+how the paper uses its figures; absolute B-KV/s targets are H100/TPU
+numbers and live in the roofline analysis instead.  Each timing is the
+median of `reps` calls after a warmup (jit compile excluded).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, reps: int = 5, warmup: int = 2):
+    """Median seconds per call of an already-jitted fn."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def kv_per_s(batch: int, seconds: float) -> float:
+    return batch / max(seconds, 1e-12)
+
+
+EMPTY_KEY = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def make_insert_jit(cfg):
+    """One jitted insert_or_assign closure reused for every fill batch."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import ops, u64
+
+    @jax.jit
+    def ins(state, kh, kl, v):
+        return ops.insert_or_assign(state, cfg, u64.U64(kh, kl), v).state
+
+    return ins
+
+
+def fill_table(cfg, state, keys: np.ndarray, dim: int, batch: int = 4096,
+               ins=None):
+    import jax.numpy as jnp
+
+    from repro.core import u64
+
+    ins = ins or make_insert_jit(cfg)
+    zeros = jnp.zeros((batch, dim), jnp.float32)
+    for kb in fill_batches(keys, batch):
+        k = u64.from_uint64(kb)
+        state = ins(state, k.hi, k.lo, zeros)
+    return state
+
+
+def fill_batches(keys: np.ndarray, batch: int = 4096):
+    """Yield constant-shape batches padded with the EMPTY sentinel.
+
+    Constant shapes keep every insert on ONE jit cache entry — variable
+    tail batches would otherwise recompile per shape."""
+    n = len(keys)
+    for i in range(0, n, batch):
+        kb = keys[i : i + batch]
+        if len(kb) < batch:
+            kb = np.concatenate([kb, np.full(batch - len(kb), EMPTY_KEY, np.uint64)])
+        yield kb
+
+
+class Csv:
+    """name,us_per_call,derived printer (the benchmarks.run contract)."""
+
+    def __init__(self, title: str):
+        print(f"# === {title} ===")
+        print("name,us_per_call,derived")
+
+    def row(self, name: str, seconds: float | None, derived: str):
+        us = "" if seconds is None else f"{seconds * 1e6:.1f}"
+        print(f"{name},{us},{derived}")

@@ -1,0 +1,91 @@
+"""Exp#2 (paper §5.3, Figs. 7/8): end-to-end API throughput across the
+paper's configs A/B/C (dim 8/32/64) at λ=0.5 and λ=1.0, plus the tiered
+(config D analogue) key-side-vs-value-copy decomposition.
+
+Reproduced structure: find* (pointer-returning / key-side only) is
+dimension-INDEPENDENT; find (value copy) scales with dim; assign varies
+little with λ (non-structural); insert_or_assign pays a bounded eviction
+overhead at λ=1.0.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, fill_table, kv_per_s, make_insert_jit, time_fn
+from repro.core import find as find_mod
+from repro.core import ops, table, u64
+
+CAPACITY = 64 * 128
+BATCH = 4096
+CONFIGS = {"A": 8, "B": 32, "C": 64}
+
+
+def _fill(cfg, rng, lam, ins):
+    state = table.create(cfg)
+    n = int(lam * cfg.capacity)
+    keys = rng.integers(0, 2**50, size=n).astype(np.uint64)
+    state = fill_table(cfg, state, keys, cfg.dim, ins=ins)
+    return state, keys
+
+
+def run(csv: Csv | None = None):
+    csv = csv or Csv("Exp#2 API throughput (configs A-C, Figs. 7/8)")
+    rng = np.random.default_rng(1)
+    for name, dim in CONFIGS.items():
+        cfg = table.HKVConfig(capacity=CAPACITY, dim=dim)
+        ins_shared = make_insert_jit(cfg)
+        for lam in (0.5, 1.0):
+            state, keys = _fill(cfg, rng, lam, ins_shared)
+            hot = u64.from_uint64(rng.choice(keys, size=BATCH))
+            vals = jnp.asarray(rng.normal(size=(BATCH, dim)), jnp.float32)
+
+            find_j = jax.jit(lambda s, h, l: ops.find(s, cfg, u64.U64(h, l)).values)
+            findp_j = jax.jit(lambda s, h, l: find_mod.locate(s, cfg, u64.U64(h, l)).row)
+            cont_j = jax.jit(lambda s, h, l: ops.contains(s, cfg, u64.U64(h, l)))
+            ins_j = jax.jit(
+                lambda s, h, l, v: ops.insert_or_assign(s, cfg, u64.U64(h, l), v).state
+            )
+            ine_j = jax.jit(
+                lambda s, h, l, v: ops.insert_and_evict(s, cfg, u64.U64(h, l), v).state
+            )
+            asg_j = jax.jit(lambda s, h, l, v: ops.assign(s, cfg, u64.U64(h, l), v))
+
+            for api, fn, args in (
+                ("find", find_j, (state, hot.hi, hot.lo)),
+                ("find_ptr", findp_j, (state, hot.hi, hot.lo)),
+                ("contains", cont_j, (state, hot.hi, hot.lo)),
+                ("insert_or_assign", ins_j, (state, hot.hi, hot.lo, vals)),
+                ("insert_and_evict", ine_j, (state, hot.hi, hot.lo, vals)),
+                ("assign", asg_j, (state, hot.hi, hot.lo, vals)),
+            ):
+                t = time_fn(fn, *args)
+                csv.row(f"{api}/cfg{name}(dim={dim})/lf={lam}", t,
+                        f"{kv_per_s(BATCH, t)/1e6:.2f}M-KV/s")
+
+    # config D (paper Table 5): HBM keys + HMEM (host-tier) values. The
+    # paper's claim: the pointer-returning find* is tier-INDEPENDENT (keys
+    # never leave HBM); value-copying find pays the host link per row.
+    import dataclasses as _dc
+
+    from repro.core import table as table_mod
+
+    cfgd = table.HKVConfig(capacity=CAPACITY, dim=64, value_tier="hmem")
+    state, keys = _fill(cfgd, rng, 1.0, make_insert_jit(cfgd))
+    state = table_mod.place_value_tier(state)
+    hot = u64.from_uint64(rng.choice(keys, size=BATCH))
+    findd_j = jax.jit(lambda s, h, l: ops.find(s, cfgd, u64.U64(h, l)).values)
+    findpd_j = jax.jit(lambda s, h, l: find_mod.locate(s, cfgd, u64.U64(h, l)).row)
+    td = time_fn(findd_j, state, hot.hi, hot.lo)
+    tpd = time_fn(findpd_j, state, hot.hi, hot.lo)
+    csv.row("find/cfgD(dim=64,hmem)/lf=1.0", td,
+            f"{kv_per_s(BATCH, td)/1e6:.2f}M-KV/s,values-cross-tier")
+    csv.row("find_ptr/cfgD(dim=64,hmem)/lf=1.0", tpd,
+            f"{kv_per_s(BATCH, tpd)/1e6:.2f}M-KV/s,key-side-only"
+            f"[paper:96% of pure-HBM]")
+
+
+if __name__ == "__main__":
+    run()

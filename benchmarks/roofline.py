@@ -1,0 +1,160 @@
+"""Roofline-term extraction from the dry-run artifacts (§Roofline contract).
+
+Per (arch x shape x mesh) cell, from runs/dryrun/<mesh>/<cell>.json:
+
+  compute term    = FLOPs / (chips x 197e12 bf16 FLOP/s)
+  memory term     = bytes_accessed / (chips x 819e9 B/s HBM)
+  collective term = wire_bytes / (chips x 50e9 B/s ICI link)
+
+All three use PER-DEVICE quantities from the compiled artifact divided by
+per-chip peaks (equivalent to the global/(chips x peak) form).
+
+FLOPs source: XLA's cost analysis counts while-loop bodies ONCE, so any
+cell whose graph still contains loops (scan_layers prefill cells, chunked
+attention/GLA scans) under-reports.  We therefore also compute an ANALYTIC
+per-device FLOPs (6*N*D for train, 2*N_active*D for decode/prefill, +
+attention term 2*B*S^2*H*dh*(2 or 3)/dp) and report both; the roofline
+terms use max(hlo, analytic) and the MODEL/HLO ratio flags the gap.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+
+PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e-class target)
+HBM_BW = 819e9           # B/s per chip
+ICI_BW = 50e9            # B/s per link
+
+SHAPES = {
+    "train_4k": ("train", 4096, 256),
+    "prefill_32k": ("prefill", 32768, 32),
+    "decode_32k": ("decode", 32768, 128),
+    "long_500k": ("decode", 524288, 1),
+}
+
+
+def analytic_flops_per_device(arch, shape_name: str, devices: int,
+                              params: int) -> float:
+    """Rough per-device FLOPs: 6ND train / 2ND decode-prefill + attention."""
+    kind, seq, batch = SHAPES[shape_name]
+    active = _active_params(arch)
+    if kind == "train":
+        tokens = seq * batch
+        base = 6.0 * active * tokens
+        att = _attention_flops(arch, seq, batch, causal=True) * 3.0  # fwd+bwd
+    elif kind == "prefill":
+        tokens = seq * batch
+        base = 2.0 * active * tokens
+        att = _attention_flops(arch, seq, batch, causal=True)
+    else:  # decode: one token, full-cache attention
+        tokens = batch
+        base = 2.0 * active * tokens
+        att = _attention_flops(arch, seq, batch, causal=False, decode=True)
+    return (base + att) / devices
+
+
+def _active_params(arch) -> int:
+    """Per-token active parameters (MoE: top_k of num_experts)."""
+    total = arch.param_count()
+    moe_frac = 0.0
+    for seg in tuple(arch.lm.prelude) + tuple(arch.lm.segments):
+        if seg.block.moe is not None:
+            m = seg.block.moe
+            # expert params scale down by top_k/num_experts
+            expert_params = m.num_experts * (
+                m.d_model * m.d_ff * (3 if m.gated else 2)
+            )
+            layers = seg.count * (arch.lm.repeats if seg in arch.lm.segments else 1)
+            moe_frac += expert_params * layers * (1.0 - m.top_k / m.num_experts)
+    return int(total - moe_frac)
+
+
+def _attention_flops(arch, seq, batch, causal=True, decode=False) -> float:
+    fl = 0.0
+    for seg in tuple(arch.lm.prelude) + tuple(arch.lm.segments):
+        b = seg.block
+        if b.kind != "attn":
+            continue
+        layers = seg.count * (arch.lm.repeats if seg in arch.lm.segments else 1)
+        hd, hq = b.hd, b.heads
+        eff = min(b.window, seq) if b.window else seq
+        if decode:
+            per_tok = 2 * 2 * hq * hd * eff          # qk + pv against cache
+            fl += layers * batch * per_tok
+        else:
+            factor = 0.5 if causal else 1.0
+            fl += layers * batch * 2 * 2 * hq * hd * seq * eff * factor
+    return fl
+
+
+def load_cells(out_dir: str, mesh: str):
+    d = os.path.join(out_dir, mesh)
+    cells = []
+    if not os.path.isdir(d):
+        return cells
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                cells.append(json.load(fh))
+    return cells
+
+
+def terms(rec: dict, arch=None) -> dict:
+    dev = rec["devices"]
+    hlo_flops = rec["cost"]["flops_per_device"]
+    analytic = (
+        analytic_flops_per_device(arch, rec["shape"], dev, rec.get("params", 0))
+        if arch is not None
+        else 0.0
+    )
+    flops = max(hlo_flops, analytic)
+    compute = flops / PEAK_FLOPS
+    memory = rec["cost"]["bytes_accessed_per_device"] / HBM_BW
+    collective = rec["collective_wire_bytes_per_device"] / ICI_BW
+    dominant = max(
+        ("compute", compute), ("memory", memory), ("collective", collective),
+        key=lambda t: t[1],
+    )[0]
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+        "hlo_flops": hlo_flops,
+        "analytic_flops": analytic,
+        "model_hlo_ratio": (analytic / hlo_flops) if hlo_flops else float("inf"),
+        "bound_s": max(compute, memory, collective),
+        "useful_frac": compute / max(compute, memory, collective, 1e-30),
+    }
+
+
+def run(out_dir: str = "runs/dryrun", mesh: str = "single"):
+    from benchmarks.common import Csv
+    from repro.configs import get_arch
+
+    csv = Csv(f"Roofline terms per (arch x shape), mesh={mesh} "
+              f"[seconds per step; bottleneck = max term]")
+    for rec in load_cells(out_dir, mesh):
+        tag = f"{rec['arch']}/{rec['shape']}/{rec.get('backend','dense')}"
+        if "skipped" in rec:
+            csv.row(tag, None, f"SKIP({rec['skipped']})")
+            continue
+        if "error" in rec:
+            csv.row(tag, None, f"ERROR({rec['error'][:60]})")
+            continue
+        t = terms(rec, get_arch(rec["arch"]))
+        csv.row(
+            tag, None,
+            f"compute={t['compute_s']:.3e}s,memory={t['memory_s']:.3e}s,"
+            f"collective={t['collective_s']:.3e}s,bound={t['dominant']},"
+            f"compute_frac={t['useful_frac']:.2f},"
+            f"mem/dev={rec['memory']['peak_estimate_per_device']/2**30:.1f}GiB",
+        )
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(mesh=sys.argv[1] if len(sys.argv) > 1 else "single")

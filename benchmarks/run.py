@@ -1,0 +1,49 @@
+"""Benchmark entry point: one experiment per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all experiments
+  PYTHONPATH=src python -m benchmarks.run exp1 exp4  # subset
+
+Output: `name,us_per_call,derived` CSV blocks per experiment.  Roofline
+rows appear when dry-run artifacts exist under runs/dryrun/.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    sel = set(sys.argv[1:])
+
+    def want(name):
+        return not sel or name in sel
+
+    if want("exp1"):
+        from benchmarks import exp1_load_factor
+
+        exp1_load_factor.run()
+    if want("exp2"):
+        from benchmarks import exp2_throughput
+
+        exp2_throughput.run()
+    if want("exp3"):
+        from benchmarks import exp3_ablation
+
+        exp3_ablation.run()
+    if want("exp4"):
+        from benchmarks import exp4_dual_bucket
+
+        exp4_dual_bucket.run()
+    if want("roofline"):
+        import os
+
+        from benchmarks import roofline
+
+        if os.path.isdir("runs/dryrun/single"):
+            roofline.run(mesh="single")
+        if os.path.isdir("runs/dryrun/multi"):
+            roofline.run(mesh="multi")
+
+
+if __name__ == "__main__":
+    main()

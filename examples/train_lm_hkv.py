@@ -1,0 +1,52 @@
+"""End-to-end driver: train a reduced LM with the HKV dynamic-embedding
+backend for a few hundred steps, with checkpoint/restart fault tolerance.
+
+    PYTHONPATH=src python examples/train_lm_hkv.py [--steps 200]
+
+This is the paper's deployment story in miniature: the token embedding is
+a cache-semantic HKV table (find_or_insert each batch, sparse rowwise-
+adagrad through the updater role), the backbone is a GQA transformer, and
+the driver checkpoints the table + params + data cursor atomically — a
+simulated failure at step 2/3 of the run restores and replays exactly.
+"""
+
+import argparse
+import shutil
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    args = ap.parse_args()
+
+    import sys
+
+    from repro.launch import train as train_mod
+
+    ckpt_dir = "runs/example_hkv_ckpt"
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+    argv = sys.argv
+    sys.argv = [
+        "train", "--arch", args.arch, "--smoke",
+        "--steps", str(args.steps), "--batch", "4", "--seq", "64",
+        "--backend", "hkv", "--ckpt-dir", ckpt_dir,
+        "--checkpoint-every", "25",
+    ]
+    try:
+        hist = train_mod.main()
+    finally:
+        sys.argv = argv
+    losses = hist["loss"]
+    k = max(len(losses) // 10, 1)
+    print(f"loss: first-{k}-avg {np.mean(losses[:k]):.3f} -> "
+          f"last-{k}-avg {np.mean(losses[-k:]):.3f}")
+    assert np.mean(losses[-k:]) < np.mean(losses[:k]), "no learning signal!"
+    print("ok.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from the
+dry-run artifacts.
+
+  PYTHONPATH=src python scripts/gen_roofline_md.py [runs/dryrun]
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.roofline import load_cells, terms  # noqa: E402
+from repro.configs import get_arch  # noqa: E402
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "gemma-2b", "h2o-danube-1.8b", "qwen2-0.5b", "yi-6b",
+    "llama4-maverick-400b-a17b", "moonshot-v1-16b-a3b", "zamba2-1.2b",
+    "qwen2-vl-2b", "musicgen-medium", "xlstm-1.3b",
+]
+
+
+def fmt_sec(x):
+    return f"{x*1e3:.2f}ms" if x >= 1e-3 else f"{x*1e6:.0f}us"
+
+
+def main(out_dir="runs/dryrun"):
+    for mesh in ("single", "multi"):
+        cells = {(r["arch"], r["shape"], r.get("backend", "dense")): r
+                 for r in load_cells(out_dir, mesh)}
+        if not cells:
+            continue
+        print(f"\n### Dry-run grid — mesh `{mesh}` "
+              f"({'2x16x16=512' if mesh=='multi' else '16x16=256'} chips)\n")
+        print("| arch | shape | status | compile | FLOPs/dev | mem/dev | "
+              "wire-bytes/dev | collectives |")
+        print("|---|---|---|---|---|---|---|---|")
+        for a in ARCH_ORDER:
+            for s in SHAPE_ORDER:
+                for backend in ("dense", "hkv"):
+                    r = cells.get((a, s, backend))
+                    if r is None:
+                        continue
+                    tag = f"{a}" + (" +hkv-emb" if backend == "hkv" else "")
+                    if "skipped" in r:
+                        print(f"| {tag} | {s} | SKIP({r['skipped'][:24]}) | | | | | |")
+                        continue
+                    if "error" in r:
+                        print(f"| {tag} | {s} | ERROR | | | | | "
+                              f"{r['error'][:40]} |")
+                        continue
+                    colls = ",".join(
+                        f"{k.split('-')[1] if '-' in k else k}:{v['count']}"
+                        for k, v in sorted(r["collectives"].items())
+                    )
+                    print(
+                        f"| {tag} | {s} | ok | {r['compile_s']:.0f}s "
+                        f"| {r['cost']['flops_per_device']:.2e} "
+                        f"| {r['memory']['peak_estimate_per_device']/2**30:.1f}GiB "
+                        f"| {r['collective_wire_bytes_per_device']/2**20:.0f}MiB "
+                        f"| {colls} |"
+                    )
+        if mesh != "single":
+            continue
+        print(f"\n### Roofline terms — mesh `{mesh}` (per training/serving step)\n")
+        print("| arch | shape | compute | memory | collective | bound | "
+              "MODEL/HLO flops | note |")
+        print("|---|---|---|---|---|---|---|---|")
+        for a in ARCH_ORDER:
+            arch = get_arch(a)
+            for s in SHAPE_ORDER:
+                for backend in ("dense", "hkv"):
+                    r = cells.get((a, s, backend))
+                    if r is None or "skipped" in r or "error" in r:
+                        if r is not None and "skipped" in r:
+                            print(f"| {a} | {s} | | | | SKIP | | {r['skipped'][:30]} |")
+                        continue
+                    t = terms(r, arch)
+                    note = ""
+                    if t["model_hlo_ratio"] > 1.5:
+                        note = "HLO undercounts loops; analytic used"
+                    elif t["model_hlo_ratio"] < 0.7:
+                        note = f"HLO/model={1/max(t['model_hlo_ratio'],1e-9):.1f}x (remat/overhead)"
+                    tag = f"{a}" + (" +hkv" if backend == "hkv" else "")
+                    print(
+                        f"| {tag} | {s} | {fmt_sec(t['compute_s'])} "
+                        f"| {fmt_sec(t['memory_s'])} | {fmt_sec(t['collective_s'])} "
+                        f"| **{t['dominant']}** | {t['model_hlo_ratio']:.2f} | {note} |"
+                    )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun")

@@ -1,0 +1,20 @@
+"""Dictionary-semantic GPU hash-table baselines (paper §5.1, Table 1).
+
+JAX re-implementations of the two baseline *families* the paper compares
+against, preserving their collision-resolution structure so the load-factor
+pathology of Figure 6 / Table 3 reproduces on any hardware:
+
+  OpenAddressingTable  — WarpCore / cuCollections family: linear probing,
+                         unbounded probe chains, insert fails at capacity.
+  BucketedP2CTable     — BGHT / BP2HT family: 16-slot buckets, power-of-two
+                         -choices placement, insert fails when both buckets
+                         fill (BP2HT's silent-drop regime at λ→1).
+
+Both are dictionary-semantic: every inserted key must be preserved, no
+eviction, so λ=1.0 is a failure regime rather than an operating point.
+"""
+
+from repro.baselines.dict_tables import (  # noqa: F401
+    BucketedP2CTable,
+    OpenAddressingTable,
+)

@@ -1,0 +1,272 @@
+"""Dictionary-semantic baseline hash tables (see package docstring).
+
+Both tables expose the same batched API subset as HKV (insert, find) plus
+per-op *probe-transaction counters* — the structural cost metric of paper
+Table 3, which is hardware-independent and therefore the honest way to
+reproduce the Fig. 6 degradation curves on this CPU container.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import u64
+from repro.core.u64 import U64
+
+
+class InsertReport(NamedTuple):
+    state: "object"
+    ok: jax.Array       # bool [N] — False = dictionary-semantic insert FAILURE
+    probes: jax.Array   # int32 [N] — memory transactions consumed
+
+
+class FindReport(NamedTuple):
+    values: jax.Array
+    found: jax.Array
+    probes: jax.Array   # int32 [N]
+
+
+# =============================================================================
+# Open addressing (WarpCore / cuCollections family)
+# =============================================================================
+
+
+class OAState(NamedTuple):
+    key_hi: jax.Array   # uint32 [C]
+    key_lo: jax.Array
+    values: jax.Array   # [C, D]
+
+
+@dataclasses.dataclass(frozen=True)
+class OpenAddressingTable:
+    """Linear probing over a flat slot array; probe chains grow with λ.
+
+    max_probe bounds the emulated probe loop (WarpCore's probing is
+    unbounded; we cap it at `max_probe` and report failure beyond, which is
+    conservative *in the baseline's favor*).
+    """
+
+    capacity: int
+    dim: int
+    max_probe: int = 512
+
+    def create(self) -> OAState:
+        c = self.capacity
+        return OAState(
+            key_hi=jnp.full((c,), u64.EMPTY_HI, jnp.uint32),
+            key_lo=jnp.full((c,), u64.EMPTY_LO, jnp.uint32),
+            values=jnp.zeros((c, self.dim), jnp.float32),
+        )
+
+    def _slot(self, keys: U64, d: jax.Array) -> jax.Array:
+        h1, _ = u64.hash_pair(keys)
+        c = np.uint32(self.capacity)
+        if self.capacity & (self.capacity - 1) == 0:
+            return ((h1 + d.astype(jnp.uint32)) & (c - np.uint32(1))).astype(jnp.int32)
+        return ((h1 + d.astype(jnp.uint32)) % c).astype(jnp.int32)
+
+    def insert(self, state: OAState, keys: U64, values: jax.Array) -> InsertReport:
+        """Batched linear-probe insert, resolving intra-batch claims like the
+        CAS race it emulates: lowest batch index wins a contested slot."""
+        n = keys.hi.shape[0]
+        valid = ~u64.is_empty(keys)
+
+        def cond(carry):
+            state, placed, failed, d, probes = carry
+            return jnp.any(~placed & ~failed) & (d < self.max_probe)
+
+        def body(carry):
+            state, placed, failed, d, probes = carry
+            active = ~placed & ~failed
+            dist = jnp.where(active, d, 0)
+            slot = self._slot(keys, dist)
+            occ_hi, occ_lo = state.key_hi[slot], state.key_lo[slot]
+            occ_key = U64(occ_hi, occ_lo)
+            probes = probes + active.astype(jnp.int32)
+            is_self = u64.eq(occ_key, keys) & active      # update in place
+            is_empty = u64.is_empty(occ_key) & active
+            # claim resolution: among batch entries claiming the same empty
+            # slot this round, the lowest batch index wins (CAS emulation)
+            idx = jnp.arange(n, dtype=jnp.int32)
+            claim_slot = jnp.where(is_empty, slot, self.capacity)
+            winner = jnp.full((self.capacity + 1,), n, jnp.int32).at[claim_slot].min(idx)
+            won = is_empty & (winner[jnp.clip(claim_slot, 0, self.capacity)] == idx)
+            write = is_self | won
+            wslot = jnp.where(write, slot, self.capacity)
+            state = OAState(
+                key_hi=state.key_hi.at[wslot].set(keys.hi, mode="drop"),
+                key_lo=state.key_lo.at[wslot].set(keys.lo, mode="drop"),
+                values=state.values.at[wslot].set(values, mode="drop"),
+            )
+            placed = placed | write
+            d = d + 1
+            return state, placed, failed, d, probes
+
+        placed0 = ~valid
+        failed0 = jnp.zeros_like(placed0)
+        carry = (state, placed0, failed0, jnp.int32(0), jnp.zeros((n,), jnp.int32))
+        state, placed, failed, _, probes = jax.lax.while_loop(cond, body, carry)
+        return InsertReport(state=state, ok=placed, probes=probes)
+
+    def find(self, state: OAState, keys: U64) -> FindReport:
+        n = keys.hi.shape[0]
+        valid = ~u64.is_empty(keys)
+
+        def cond(carry):
+            done, found, slot_at, d, probes = carry
+            return jnp.any(~done) & (d < self.max_probe)
+
+        def body(carry):
+            done, found, slot_at, d, probes = carry
+            active = ~done
+            slot = self._slot(keys, jnp.where(active, d, 0))
+            occ = U64(state.key_hi[slot], state.key_lo[slot])
+            probes = probes + active.astype(jnp.int32)
+            hit = u64.eq(occ, keys) & active
+            miss_stop = u64.is_empty(occ) & active   # definitive miss at empty
+            found = found | hit
+            slot_at = jnp.where(hit, slot, slot_at)
+            done = done | hit | miss_stop
+            return done, found, slot_at, d + 1, probes
+
+        carry = (
+            ~valid,
+            jnp.zeros((n,), bool),
+            jnp.zeros((n,), jnp.int32),
+            jnp.int32(0),
+            jnp.zeros((n,), jnp.int32),
+        )
+        done, found, slot_at, _, probes = jax.lax.while_loop(cond, body, carry)
+        vals = jnp.where(found[:, None], state.values[slot_at], 0.0)
+        return FindReport(values=vals, found=found, probes=probes)
+
+
+# =============================================================================
+# Bucketed power-of-two-choices (BGHT / BP2HT family, 16-slot buckets)
+# =============================================================================
+
+
+class P2CState(NamedTuple):
+    key_hi: jax.Array   # uint32 [B, 16]
+    key_lo: jax.Array
+    values: jax.Array   # [B*16, D]
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketedP2CTable:
+    """BGHT/BP2HT-like: two candidate 16-slot buckets per key, load-based
+    choice, NO eviction — both-full means the insert silently fails (the
+    BP2HT λ=1.0 regime where only 48 % of inserts succeed)."""
+
+    capacity: int
+    dim: int
+    slots: int = 16
+
+    def __post_init__(self):
+        assert self.capacity % self.slots == 0
+
+    @property
+    def num_buckets(self) -> int:
+        return self.capacity // self.slots
+
+    def create(self) -> P2CState:
+        b, s = self.num_buckets, self.slots
+        return P2CState(
+            key_hi=jnp.full((b, s), u64.EMPTY_HI, jnp.uint32),
+            key_lo=jnp.full((b, s), u64.EMPTY_LO, jnp.uint32),
+            values=jnp.zeros((b * s, self.dim), jnp.float32),
+        )
+
+    def _buckets(self, keys: U64) -> tuple[jax.Array, jax.Array]:
+        h1, h2 = u64.hash_pair(keys)
+        nb = np.uint32(self.num_buckets)
+        if self.num_buckets & (self.num_buckets - 1) == 0:
+            return (
+                (h1 & (nb - np.uint32(1))).astype(jnp.int32),
+                (h2 & (nb - np.uint32(1))).astype(jnp.int32),
+            )
+        return (h1 % nb).astype(jnp.int32), (h2 % nb).astype(jnp.int32)
+
+    def _match(self, state: P2CState, bucket: jax.Array, keys: U64):
+        hit = (state.key_hi[bucket] == keys.hi[:, None]) & (
+            state.key_lo[bucket] == keys.lo[:, None]
+        )
+        return jnp.any(hit, axis=1), jnp.argmax(hit, axis=1).astype(jnp.int32)
+
+    def insert(self, state: P2CState, keys: U64, values: jax.Array) -> InsertReport:
+        n, s = keys.hi.shape[0], self.slots
+        valid = ~u64.is_empty(keys)
+        b1, b2 = self._buckets(keys)
+        # update path (2 bucket loads)
+        h1, s1 = self._match(state, b1, keys)
+        h2, s2 = self._match(state, b2, keys)
+        hitb = jnp.where(h1, b1, b2)
+        hits = jnp.where(h1, s1, s2)
+        hit = (h1 | h2) & valid
+        row = jnp.where(hit, hitb * s + hits, self.capacity)
+        state = P2CState(
+            key_hi=state.key_hi,
+            key_lo=state.key_lo,
+            values=state.values.at[row].set(values, mode="drop"),
+        )
+        # insert path: load-based two-choice, rank-resolved within batch.
+        # Placement iterates rounds so that keys bounced from an overfull
+        # round-1 target retry against refreshed occupancy — emulating the
+        # sequential CAS race the GPU baselines run (a one-shot batch
+        # placement would overflow buckets sequential P2C balances).
+        miss0 = valid & ~hit
+        iota = jnp.arange(n, dtype=jnp.int32)
+
+        def cond(carry):
+            state, pending, progress, rounds = carry
+            return jnp.any(pending) & progress & (rounds < 32)
+
+        def body(carry):
+            state, pending, progress, rounds = carry
+            occ = jnp.sum(
+                (~u64.is_empty(U64(state.key_hi, state.key_lo))).astype(jnp.int32), axis=1
+            )
+            target = jnp.where(occ[b2] < occ[b1], b2, b1)
+            tb = jnp.where(pending, target, self.num_buckets).astype(jnp.int32)
+            order = jnp.argsort(tb)
+            tb_s = tb[order]
+            is_new = jnp.concatenate([jnp.ones((1,), bool), tb_s[1:] != tb_s[:-1]])
+            rank = iota - jax.lax.cummax(jnp.where(is_new, iota, -1))
+            free_slot = occ[jnp.clip(tb_s, 0, self.num_buckets - 1)] + rank
+            ok_ins = (tb_s < self.num_buckets) & (free_slot < s)
+            wb = jnp.where(ok_ins, tb_s, self.num_buckets)
+            ws = jnp.clip(free_slot, 0, s - 1)
+            keys_s = U64(keys.hi[order], keys.lo[order])
+            state = P2CState(
+                key_hi=state.key_hi.at[wb, ws].set(keys_s.hi, mode="drop"),
+                key_lo=state.key_lo.at[wb, ws].set(keys_s.lo, mode="drop"),
+                values=state.values.at[
+                    jnp.where(ok_ins, wb * s + ws, self.capacity)
+                ].set(values[order], mode="drop"),
+            )
+            placed = jnp.zeros((n,), bool).at[order].set(ok_ins)
+            return state, pending & ~placed, jnp.any(placed), rounds + 1
+
+        state, pending, _, _ = jax.lax.while_loop(
+            cond, body, (state, miss0, jnp.bool_(True), jnp.int32(0))
+        )
+        ok = hit | (miss0 & ~pending)
+        probes = jnp.where(valid, 2 + miss0.astype(jnp.int32), 0)
+        return InsertReport(state=state, ok=ok, probes=probes)
+
+    def find(self, state: P2CState, keys: U64) -> FindReport:
+        valid = ~u64.is_empty(keys)
+        b1, b2 = self._buckets(keys)
+        h1, s1 = self._match(state, b1, keys)
+        h2, s2 = self._match(state, b2, keys)
+        found = (h1 | h2) & valid
+        # structural cost: always 2 bucket loads (b1 then b2) unless hit in b1
+        probes = jnp.where(h1, 1, 2) * valid.astype(jnp.int32)
+        row = jnp.where(h1, b1 * self.slots + s1, b2 * self.slots + s2)
+        vals = jnp.where(found[:, None], state.values[jnp.clip(row, 0, self.capacity - 1)], 0.0)
+        return FindReport(values=vals, found=found, probes=probes)

@@ -1,0 +1,327 @@
+"""Batch-synchronous bucket merge — the TPU closure of paper Algorithms 2 & 3.
+
+The paper resolves each upsert with a per-warp CAS loop.  XLA/TPU has no
+device-wide CAS; it has world-class sorts and segmented reductions.  This
+module re-derives the paper's in-line score-driven upsert as a deterministic
+*batch closure*:
+
+  Applying Algorithm 2 sequentially, in canonical order (hits first, then
+  misses per bucket in descending incoming-score order), to every entry of a
+  batch yields per bucket exactly the **top-S-by-score union** of
+  (existing entries ∪ incoming entries), with ties won by existing entries
+  (then by lower key).  We compute that closure directly:
+
+  phase 1 (non-structural) — batch keys already present are *updates*:
+      value/score scatter at their (bucket, slot); no structure changes.
+  phase 2 (structural)     — remaining keys are *insertions*: per target
+      bucket, pair the r-th best incoming entry with the r-th weakest
+      existing slot (empties weakest, then ascending score).  The classic
+      two-sorted-lists argument shows this pairing realizes the top-S
+      union merge:  incoming rank r is admitted iff it strictly beats
+      victim rank r; admissions are a prefix of incoming ranks.
+
+Properties preserved from the paper:
+  * CS1 — every full-bucket upsert resolves in place (evict or reject);
+  * CS2 — no rehash, no capacity failure, table shape never changes;
+  * admission control (Alg. 2 line 12 / Alg. 3 line 7): an incoming entry
+    that cannot beat the weakest survivor is Rejected;
+  * eviction always removes the bucket-minimum-score entry(s);
+  * dual-bucket two-phase policy (Alg. 3): D1 less-loaded while free slots
+    exist, D2 lower-min-score at full occupancy.
+
+Deviation (documented): on *exact* score ties Alg. 2 admits the incoming
+key (`s < s_min` rejects), which makes sequential outcomes depend on batch
+order.  The batch closure breaks ties in favor of existing entries, making
+the result order-independent and idempotent.  LRU/epoch clocks are strictly
+monotonic so ties between old and new scores only arise for LFU count
+collisions and custom scores; Exp#3d shows admission behaviour matches the
+paper's Table 9 in both regimes.
+
+Everything is static-shape: a batch of N keys costs O(N log N) sort work
+plus O(N·S) gathered bucket rows — no data-dependent shapes, no host
+round-trips, jit/shard_map friendly.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import find as find_mod
+from repro.core import table as table_mod
+from repro.core import u64
+from repro.core.table import HKVConfig, HKVState
+from repro.core.u64 import U64
+
+# Per-entry status codes (reported in the original batch order).
+STATUS_INVALID = np.int8(0)   # input slot held the EMPTY sentinel
+STATUS_UPDATED = np.int8(1)   # key existed: value/score updated in place
+STATUS_INSERTED = np.int8(2)  # inserted into an empty slot
+STATUS_EVICTED = np.int8(3)   # inserted by evicting a minimum-score entry
+STATUS_REJECTED = np.int8(4)  # admission control refused the entry
+
+
+class MergeResult(NamedTuple):
+    state: HKVState
+    status: jax.Array            # int8 [N] in original batch order
+    # Populated iff return_evicted (else zero-shaped placeholders of same N):
+    evicted_key_hi: jax.Array    # uint32 [N]
+    evicted_key_lo: jax.Array    # uint32 [N]
+    evicted_values: jax.Array    # vdtype [N, D]
+    evicted_score_hi: jax.Array  # uint32 [N]
+    evicted_score_lo: jax.Array  # uint32 [N]
+    evicted_mask: jax.Array      # bool [N]
+
+
+def _dedupe_sort(keys: U64):
+    """Sort batch by key; derive group ids / multiplicities / last-writer index.
+
+    Returns (in key-sorted space): keys_s, idx_s (original positions),
+    gid (group id), count (group multiplicity broadcast to members),
+    last_idx (original index of the group's last occurrence — the batch's
+    last writer), rep_mask (True at each group's first sorted element for
+    valid keys).
+    """
+    n = keys.hi.shape[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    hi_s, lo_s, idx_s = jax.lax.sort((keys.hi, keys.lo, iota), num_keys=2, is_stable=True)
+    keys_s = U64(hi_s, lo_s)
+    prev = U64(jnp.roll(hi_s, 1), jnp.roll(lo_s, 1))
+    is_first = jnp.concatenate(
+        [jnp.ones((1,), bool), u64.ne(keys_s, prev).astype(bool)[1:]]
+    )
+    gid = jnp.cumsum(is_first.astype(jnp.int32)) - 1
+    ones = jnp.ones((n,), jnp.uint32)
+    counts = jax.ops.segment_sum(ones, gid, num_segments=n)
+    last_idx = jax.ops.segment_max(idx_s, gid, num_segments=n)
+    valid_s = ~u64.is_empty(keys_s)
+    rep_mask = is_first & valid_s
+    return keys_s, idx_s, gid, counts[gid], last_idx[gid], rep_mask
+
+
+def _bucket_minscore_and_occ(state: HKVState, bucket: jax.Array):
+    """(occupancy[N], min-score[N] as U64) of the given bucket rows.
+
+    Empty slots are excluded from the min (treated as +inf); a fully empty
+    bucket reports the all-ones max sentinel.
+    """
+    occ_row = ~u64.is_empty(U64(state.key_hi[bucket], state.key_lo[bucket]))
+    occ = jnp.sum(occ_row.astype(jnp.int32), axis=1)
+    shi = jnp.where(occ_row, state.score_hi[bucket], jnp.uint32(0xFFFFFFFF))
+    slo = jnp.where(occ_row, state.score_lo[bucket], jnp.uint32(0xFFFFFFFF))
+    # lexicographic min via single sort-free reduction: min hi, then min lo | hi==minhi
+    min_hi = jnp.min(shi, axis=1)
+    lo_cand = jnp.where(shi == min_hi[:, None], slo, jnp.uint32(0xFFFFFFFF))
+    min_lo = jnp.min(lo_cand, axis=1)
+    return occ, U64(min_hi, min_lo)
+
+
+def _select_target_bucket(
+    state: HKVState, cfg: HKVConfig, probe: find_mod.Probe
+) -> jax.Array:
+    """Dual-bucket two-phase selection (paper Alg. 3 / Fig. 5).
+
+    D1 (warm-up): while either candidate has a free slot, insert into the
+    less-occupied bucket (ties -> primary).  D2 (steady state): both full,
+    evict in the bucket with the lower minimum score (ties -> primary).
+    """
+    if cfg.buckets_per_key == 1:
+        return probe.bucket1
+    s = cfg.slots_per_bucket
+    occ1, min1 = _bucket_minscore_and_occ(state, probe.bucket1)
+    occ2, min2 = _bucket_minscore_and_occ(state, probe.bucket2)
+    any_free = (occ1 < s) | (occ2 < s)
+    d1 = jnp.where(occ2 < occ1, probe.bucket2, probe.bucket1)
+    d2 = jnp.where(u64.lt(min2, min1), probe.bucket2, probe.bucket1)
+    return jnp.where(any_free, d1, d2)
+
+
+def upsert(
+    state: HKVState,
+    cfg: HKVConfig,
+    keys: U64,
+    values: jax.Array,
+    *,
+    custom_scores: Optional[U64] = None,
+    write_hit_values: bool = True,
+    update_hit_scores: bool = True,
+    insert_values: Optional[jax.Array] = None,
+    return_evicted: bool = False,
+) -> MergeResult:
+    """The batch closure of insert_or_assign / find_or_insert / insert_and_evict.
+
+    values        : [N, Dtot] rows written on hit (when write_hit_values)
+                    and inserted on miss (unless insert_values overrides).
+    insert_values : optional distinct rows for the insertion path
+                    (find_or_insert: hits keep their value, misses get inits).
+    """
+    n = keys.hi.shape[0]
+    b, s = cfg.num_buckets, cfg.slots_per_bucket
+    vdim = state.values.shape[1]
+    policy = cfg.policy
+    if insert_values is None:
+        insert_values = values
+
+    # One clock tick per batched op (the paper's per-launch device clock).
+    state = table_mod.advance_clock(state)
+    clock, epoch = state.clock, state.epoch
+
+    # ---- dedupe ------------------------------------------------------------
+    keys_s, idx_s, gid, count_s, last_idx_s, rep_mask = _dedupe_sort(keys)
+    custom_s = None
+    if custom_scores is not None:
+        custom_s = U64(custom_scores.hi[last_idx_s], custom_scores.lo[last_idx_s])
+
+    # status accumulated per group id, mapped back to batch order at the end
+    status_g = jnp.zeros((n,), jnp.int8)
+
+    # ---- phase 1: hits (non-structural updater work) ------------------------
+    probe_s = find_mod.probe_keys(cfg, keys_s)
+    loc = find_mod.locate(state, cfg, keys_s, probe_s)
+    hit = loc.found & rep_mask
+
+    old_sc = U64(state.score_hi[loc.bucket, loc.slot], state.score_lo[loc.bucket, loc.slot])
+    new_sc = policy.update_score(old_sc, clock, epoch, count_s, custom_s)
+    hb = jnp.where(hit & jnp.asarray(update_hit_scores), loc.bucket, b)  # OOB -> drop
+    state = state._replace(
+        score_hi=state.score_hi.at[hb, loc.slot].set(new_sc.hi, mode="drop"),
+        score_lo=state.score_lo.at[hb, loc.slot].set(new_sc.lo, mode="drop"),
+    )
+    if write_hit_values:
+        hrow = jnp.where(hit, loc.row, b * s)
+        state = state._replace(
+            values=table_mod.tier_scatter(
+                cfg.value_tier, state.values, hrow,
+                values[last_idx_s].astype(state.values.dtype),
+            )
+        )
+    status_g = status_g.at[gid].max(jnp.where(hit, STATUS_UPDATED, STATUS_INVALID))
+
+    # ---- phase 2: misses (structural inserter work) --------------------------
+    miss = rep_mask & ~loc.found
+    target = _select_target_bucket(state, cfg, probe_s)
+    init_sc = policy.init_score(clock, epoch, count_s, custom_s, (n,))
+
+    # bucket-sort the misses: (bucket, score desc, key asc) — canonical order
+    bkt_key = jnp.where(miss, target, b).astype(jnp.int32)
+    (bkt_m, _nsh, _nsl, khi_m, klo_m, idx_m, vrow_m, dig_m, shi_m, slo_m, gid_m) = jax.lax.sort(
+        (
+            bkt_key,
+            ~init_sc.hi,       # bitwise-not => descending score order
+            ~init_sc.lo,
+            keys_s.hi,
+            keys_s.lo,
+            idx_s,
+            last_idx_s,
+            probe_s.digest,
+            init_sc.hi,
+            init_sc.lo,
+            gid,
+        ),
+        num_keys=5,
+        is_stable=False,
+    )
+    mask_m = bkt_m < b
+    iota = jnp.arange(n, dtype=jnp.int32)
+    is_newb = jnp.concatenate([jnp.ones((1,), bool), (bkt_m[1:] != bkt_m[:-1])])
+    run_start = jax.lax.cummax(jnp.where(is_newb, iota, -1))
+    rank = iota - run_start  # within-bucket rank r (incoming, descending score)
+
+    # victim order per touched bucket row: empties first, then ascending score,
+    # score ties broken by ascending key (deterministic, oracle-matching)
+    bkt_g = jnp.clip(bkt_m, 0, b - 1)
+    row_occ = ~u64.is_empty(U64(state.key_hi[bkt_g], state.key_lo[bkt_g]))
+    slot_iota = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (n, s))
+    v_occ, v_shi, v_slo, v_khi, v_klo, v_slot = jax.lax.sort(
+        (
+            row_occ.astype(jnp.uint32),
+            state.score_hi[bkt_g],
+            state.score_lo[bkt_g],
+            state.key_hi[bkt_g],
+            state.key_lo[bkt_g],
+            slot_iota,
+        ),
+        dimension=1,
+        num_keys=5,
+        is_stable=False,
+    )
+    r_cl = jnp.clip(rank, 0, s - 1)[:, None]
+    victim_slot = jnp.take_along_axis(v_slot, r_cl, axis=1)[:, 0]
+    victim_occ = jnp.take_along_axis(v_occ, r_cl, axis=1)[:, 0].astype(bool)
+    victim_sc = U64(
+        jnp.take_along_axis(v_shi, r_cl, axis=1)[:, 0],
+        jnp.take_along_axis(v_slo, r_cl, axis=1)[:, 0],
+    )
+    victim_key = U64(
+        jnp.take_along_axis(v_khi, r_cl, axis=1)[:, 0],
+        jnp.take_along_axis(v_klo, r_cl, axis=1)[:, 0],
+    )
+    inc_sc = U64(shi_m, slo_m)
+    # admission control: strictly beat the paired victim (existing wins ties)
+    admitted = mask_m & (rank < s) & (~victim_occ | u64.gt(inc_sc, victim_sc))
+    evicts = admitted & victim_occ
+
+    # evicted outputs must be gathered before the overwrite
+    victim_row = bkt_g * s + victim_slot
+    if return_evicted:
+        ev_rows = table_mod.tier_gather(
+            cfg.value_tier, state.values, jnp.where(evicts, victim_row, 0)
+        )
+        ev_values = jnp.where(evicts[:, None], ev_rows, jnp.zeros_like(ev_rows))
+    else:
+        ev_values = jnp.zeros((n, vdim), state.values.dtype)
+
+    # structural scatter (conflict-free: distinct (bucket, victim_slot) pairs)
+    tb = jnp.where(admitted, bkt_m, b)
+    trow = jnp.where(admitted, victim_row, b * s)
+    state = state._replace(
+        key_hi=state.key_hi.at[tb, victim_slot].set(khi_m, mode="drop"),
+        key_lo=state.key_lo.at[tb, victim_slot].set(klo_m, mode="drop"),
+        digests=state.digests.at[tb, victim_slot].set(dig_m, mode="drop"),
+        score_hi=state.score_hi.at[tb, victim_slot].set(shi_m, mode="drop"),
+        score_lo=state.score_lo.at[tb, victim_slot].set(slo_m, mode="drop"),
+        values=table_mod.tier_scatter(
+            cfg.value_tier, state.values, trow,
+            insert_values[vrow_m].astype(state.values.dtype),
+        ),
+    )
+    status_m = jnp.where(
+        admitted,
+        jnp.where(evicts, STATUS_EVICTED, STATUS_INSERTED),
+        jnp.where(mask_m, STATUS_REJECTED, STATUS_INVALID),
+    ).astype(jnp.int8)
+    status_g = status_g.at[gid_m].max(status_m)
+
+    # map group status back to original batch order (duplicates share status)
+    status = jnp.zeros((n,), jnp.int8).at[idx_s].set(status_g[gid])
+
+    if return_evicted:
+        zero32 = jnp.zeros((n,), jnp.uint32)
+        oe = jnp.where(evicts, idx_m, n)  # original position of the evictor
+        ev = MergeResult(
+            state=state,
+            status=status,
+            evicted_key_hi=zero32.at[oe].set(victim_key.hi, mode="drop"),
+            evicted_key_lo=zero32.at[oe].set(victim_key.lo, mode="drop"),
+            evicted_values=jnp.zeros((n, vdim), state.values.dtype)
+            .at[oe]
+            .set(ev_values, mode="drop"),
+            evicted_score_hi=zero32.at[oe].set(victim_sc.hi, mode="drop"),
+            evicted_score_lo=zero32.at[oe].set(victim_sc.lo, mode="drop"),
+            evicted_mask=jnp.zeros((n,), bool).at[oe].set(evicts, mode="drop"),
+        )
+        return ev
+    zero32 = jnp.zeros((0,), jnp.uint32)
+    return MergeResult(
+        state=state,
+        status=status,
+        evicted_key_hi=zero32,
+        evicted_key_lo=zero32,
+        evicted_values=jnp.zeros((0, vdim), state.values.dtype),
+        evicted_score_hi=zero32,
+        evicted_score_lo=zero32,
+        evicted_mask=jnp.zeros((0,), bool),
+    )

@@ -1,0 +1,392 @@
+"""HKV public API (paper §4.1) — STL-style ops over a pure-functional state.
+
+Triple-group role taxonomy (paper §3.5) survives on TPU as *dependency
+structure* rather than a lock protocol (DESIGN.md §2):
+
+  READERS   (find, find_ptr, contains, size, load_factor, export_batch*):
+            consume the state, produce no new state.  XLA may fuse and
+            reorder them freely — they commute with each other.
+  UPDATERS  (assign, assign_add, assign_scores): produce a new state but
+            touch only values/scores of *existing* keys — no slot
+            allocation, no digest writes, no eviction.  Two updater ops on
+            disjoint keys commute; the training step exploits this by
+            fusing gradient-assign with the forward lookup.
+  INSERTERS (insert_or_assign, find_or_insert, insert_and_evict, erase,
+            clear): structural — bucket membership changes.  These are the
+            only ops that form serialization points in a step schedule.
+
+Every op is batch-synchronous, jittable, static-shape, and accepts the
+EMPTY sentinel (0xFFFF_FFFF_FFFF_FFFF) as a padding key that is ignored.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import find as find_mod
+from repro.core import merge as merge_mod
+from repro.core import table as table_mod
+from repro.core import u64
+from repro.core.merge import (
+    STATUS_EVICTED,
+    STATUS_INSERTED,
+    STATUS_INVALID,
+    STATUS_REJECTED,
+    STATUS_UPDATED,
+    MergeResult,
+)
+from repro.core.table import HKVConfig, HKVState
+from repro.core.u64 import U64
+
+# =============================================================================
+# Readers
+# =============================================================================
+
+
+class FindResult(NamedTuple):
+    values: jax.Array   # [N, dim] (zeros where not found)
+    found: jax.Array    # bool [N]
+    score_hi: jax.Array  # uint32 [N] (0 where not found)
+    score_lo: jax.Array
+
+
+def find(state: HKVState, cfg: HKVConfig, keys: U64) -> FindResult:
+    """Reader. Digest-accelerated lookup with value copy (paper `find`)."""
+    loc = find_mod.locate(state, cfg, keys)
+    vals = find_mod.gather_values(state, loc, cfg.dim, cfg.value_tier)
+    shi = jnp.where(loc.found, state.score_hi[loc.bucket, loc.slot], 0)
+    slo = jnp.where(loc.found, state.score_lo[loc.bucket, loc.slot], 0)
+    return FindResult(values=vals, found=loc.found, score_hi=shi, score_lo=slo)
+
+
+def find_ptr(state: HKVState, cfg: HKVConfig, keys: U64) -> find_mod.Locate:
+    """Reader. The paper's pointer-returning `find*`: key-side work only.
+
+    Returns position handles (bucket, slot, row) instead of copying values —
+    the position-based addressing contract of §3.6 means `row` *is* the
+    value address.  Dimension-independent, like the paper's ~7 B-KV/s path.
+    """
+    return find_mod.locate(state, cfg, keys)
+
+
+def contains(state: HKVState, cfg: HKVConfig, keys: U64) -> jax.Array:
+    """Reader. Membership only (no value traffic)."""
+    return find_mod.locate(state, cfg, keys).found
+
+
+def size(state: HKVState) -> jax.Array:
+    """Reader. Number of live entries."""
+    return jnp.sum(state.occupied_mask().astype(jnp.int32))
+
+
+def load_factor(state: HKVState) -> jax.Array:
+    return state.load_factor()
+
+
+class ExportResult(NamedTuple):
+    key_hi: jax.Array
+    key_lo: jax.Array
+    values: jax.Array
+    score_hi: jax.Array
+    score_lo: jax.Array
+    mask: jax.Array   # bool — live & predicate-matching entries
+
+
+def export_batch(
+    state: HKVState, cfg: HKVConfig, bucket_start: int, bucket_count: int
+) -> ExportResult:
+    """Reader. Stream a contiguous bucket range to the caller (checkpointing).
+
+    Static-shape: returns bucket_count*S entries with a liveness mask.
+    """
+    sl = slice(bucket_start, bucket_start + bucket_count)
+    khi = state.key_hi[sl].reshape(-1)
+    klo = state.key_lo[sl].reshape(-1)
+    mask = ~u64.is_empty(U64(khi, klo))
+    s = cfg.slots_per_bucket
+    rows = state.values[bucket_start * s : (bucket_start + bucket_count) * s]
+    return ExportResult(
+        key_hi=khi,
+        key_lo=klo,
+        values=rows,
+        score_hi=state.score_hi[sl].reshape(-1),
+        score_lo=state.score_lo[sl].reshape(-1),
+        mask=mask,
+    )
+
+
+def export_batch_if(
+    state: HKVState,
+    cfg: HKVConfig,
+    bucket_start: int,
+    bucket_count: int,
+    score_threshold: U64,
+) -> ExportResult:
+    """Reader. export_batch with a score >= threshold predicate (paper §4.1)."""
+    out = export_batch(state, cfg, bucket_start, bucket_count)
+    ge = u64.ge(U64(out.score_hi, out.score_lo), score_threshold)
+    return out._replace(mask=out.mask & ge)
+
+
+# =============================================================================
+# Updaters (non-structural writes)
+# =============================================================================
+
+
+def assign(
+    state: HKVState,
+    cfg: HKVConfig,
+    keys: U64,
+    values: jax.Array,
+    update_scores: bool = False,
+) -> HKVState:
+    """Updater. Write values of *existing* keys in place; misses are no-ops.
+
+    Never allocates slots, never evicts, never touches digests — the
+    non-structural contract that lets updater batches run concurrently in
+    the paper and fuse freely under XLA here.
+    """
+    loc = find_mod.locate(state, cfg, keys)
+    b, s = cfg.num_buckets, cfg.slots_per_bucket
+    # last-writer-wins on within-batch duplicates: scatter in batch order
+    row = jnp.where(loc.found, loc.row, b * s)
+    vdim = state.values.shape[1]
+    if values.shape[1] < vdim:  # caller wrote only the embedding columns
+        pad = jnp.zeros((values.shape[0], vdim - values.shape[1]), state.values.dtype)
+        old = table_mod.tier_gather(
+            cfg.value_tier, state.values, jnp.clip(loc.row, 0, b * s - 1)
+        )[:, values.shape[1]:]
+        values = jnp.concatenate([values, jnp.where(loc.found[:, None], old, pad)], axis=1)
+    new_values = table_mod.tier_scatter(
+        cfg.value_tier, state.values, row, values.astype(state.values.dtype)
+    )
+    state = state._replace(values=new_values)
+    if update_scores:
+        state = table_mod.advance_clock(state)
+        ones = jnp.ones((keys.hi.shape[0],), jnp.uint32)
+        new_sc = cfg.policy.update_score(
+            U64(state.score_hi[loc.bucket, loc.slot], state.score_lo[loc.bucket, loc.slot]),
+            state.clock,
+            state.epoch,
+            ones,
+            None,
+        )
+        hb = jnp.where(loc.found, loc.bucket, b)
+        state = state._replace(
+            score_hi=state.score_hi.at[hb, loc.slot].set(new_sc.hi, mode="drop"),
+            score_lo=state.score_lo.at[hb, loc.slot].set(new_sc.lo, mode="drop"),
+        )
+    return state
+
+
+def assign_add(
+    state: HKVState, cfg: HKVConfig, keys: U64, deltas: jax.Array
+) -> HKVState:
+    """Updater. values[k] += delta for existing keys (duplicates accumulate).
+
+    This is the embedding-gradient path: sparse grads apply as a
+    non-structural scatter-add, the TPU analogue of the paper's concurrent
+    updater kernels.
+    """
+    loc = find_mod.locate(state, cfg, keys)
+    b, s = cfg.num_buckets, cfg.slots_per_bucket
+    row = jnp.where(loc.found, loc.row, b * s)
+    if deltas.shape[1] < state.values.shape[1]:
+        pad = jnp.zeros(
+            (deltas.shape[0], state.values.shape[1] - deltas.shape[1]), state.values.dtype
+        )
+        deltas = jnp.concatenate([deltas.astype(state.values.dtype), pad], axis=1)
+    return state._replace(values=table_mod.tier_scatter(
+        cfg.value_tier, state.values, row, deltas.astype(state.values.dtype), add=True
+    ))
+
+
+def assign_scores(
+    state: HKVState, cfg: HKVConfig, keys: U64, scores: U64
+) -> HKVState:
+    """Updater. Overwrite scores of existing keys (paper `assign_scores`)."""
+    loc = find_mod.locate(state, cfg, keys)
+    hb = jnp.where(loc.found, loc.bucket, cfg.num_buckets)
+    return state._replace(
+        score_hi=state.score_hi.at[hb, loc.slot].set(scores.hi, mode="drop"),
+        score_lo=state.score_lo.at[hb, loc.slot].set(scores.lo, mode="drop"),
+    )
+
+
+# =============================================================================
+# Inserters (structural writes)
+# =============================================================================
+
+
+class UpsertResult(NamedTuple):
+    state: HKVState
+    status: jax.Array  # int8 [N]: 0 invalid / 1 updated / 2 inserted / 3 evicted / 4 rejected
+
+
+def insert_or_assign(
+    state: HKVState,
+    cfg: HKVConfig,
+    keys: U64,
+    values: jax.Array,
+    custom_scores: Optional[U64] = None,
+) -> UpsertResult:
+    """Inserter. Update-or-insert with in-line eviction/admission (Alg. 2/3)."""
+    res = merge_mod.upsert(
+        state, cfg, keys, _pad_aux(values, state), custom_scores=custom_scores
+    )
+    return UpsertResult(state=res.state, status=res.status)
+
+
+class InsertAndEvictResult(NamedTuple):
+    state: HKVState
+    status: jax.Array
+    evicted_key_hi: jax.Array
+    evicted_key_lo: jax.Array
+    evicted_values: jax.Array
+    evicted_score_hi: jax.Array
+    evicted_score_lo: jax.Array
+    evicted_mask: jax.Array
+
+
+def insert_and_evict(
+    state: HKVState,
+    cfg: HKVConfig,
+    keys: U64,
+    values: jax.Array,
+    custom_scores: Optional[U64] = None,
+) -> InsertAndEvictResult:
+    """Inserter. insert_or_assign that returns the displaced entries in the
+    same launch (the paper's single-kernel eviction hand-off — used to spill
+    evictions to a colder tier or a parameter server)."""
+    res = merge_mod.upsert(
+        state,
+        cfg,
+        keys,
+        _pad_aux(values, state),
+        custom_scores=custom_scores,
+        return_evicted=True,
+    )
+    return InsertAndEvictResult(
+        state=res.state,
+        status=res.status,
+        evicted_key_hi=res.evicted_key_hi,
+        evicted_key_lo=res.evicted_key_lo,
+        evicted_values=res.evicted_values,
+        evicted_score_hi=res.evicted_score_hi,
+        evicted_score_lo=res.evicted_score_lo,
+        evicted_mask=res.evicted_mask,
+    )
+
+
+class FindOrInsertResult(NamedTuple):
+    state: HKVState
+    values: jax.Array   # [N, dim] — existing value on hit, init value on admit/reject
+    found: jax.Array    # bool [N] — key existed before this call
+    status: jax.Array
+
+
+def find_or_insert(
+    state: HKVState,
+    cfg: HKVConfig,
+    keys: U64,
+    init_values: jax.Array,
+    custom_scores: Optional[U64] = None,
+) -> FindOrInsertResult:
+    """Inserter. Lookup; insert `init_values` for missing keys (cold-start).
+
+    Hits keep their stored value (scores touched per policy); misses insert
+    subject to admission control.  Returned rows: stored value for every key
+    now present; the caller's init row for keys whose admission was rejected
+    (an *ephemeral* value — the paper returns the same from its workspace).
+    """
+    pre = find_mod.locate(state, cfg, keys)
+    res = merge_mod.upsert(
+        state,
+        cfg,
+        keys,
+        _pad_aux(init_values, state),
+        custom_scores=custom_scores,
+        write_hit_values=False,
+    )
+    post = find_mod.locate(res.state, cfg, keys)
+    vals = find_mod.gather_values(res.state, post, cfg.dim, cfg.value_tier)
+    vals = jnp.where(post.found[:, None], vals, init_values[:, : cfg.dim])
+    return FindOrInsertResult(state=res.state, values=vals, found=pre.found, status=res.status)
+
+
+def accum_or_assign(
+    state: HKVState,
+    cfg: HKVConfig,
+    keys: U64,
+    values: jax.Array,
+    custom_scores: Optional[U64] = None,
+) -> UpsertResult:
+    """Inserter. Paper API: ACCUMULATE into existing entries (+=), ASSIGN new
+    ones — the one-shot gradient-accumulation upsert.
+
+    Batch semantics: duplicates of a key within the batch are pre-summed,
+    then a single += applies on hit (or the sum is inserted on miss,
+    admission-controlled)."""
+    n = keys.hi.shape[0]
+    keys_s, idx_s, gid, _c, _l, rep = merge_mod._dedupe_sort(keys)
+    v = _pad_aux(values, state)
+    v_sum = jax.ops.segment_sum(v[idx_s], gid, num_segments=n)[gid]
+    uk = u64.select(rep, keys_s, u64.empty_sentinel((n,)))
+    # phase 1: += on existing keys (updater-style, but score-touching)
+    state2 = assign_add(state, cfg, uk, v_sum)
+    # phase 2: structural insert of the remaining misses with the summed value
+    cs = None
+    if custom_scores is not None:
+        cs = U64(custom_scores.hi[idx_s], custom_scores.lo[idx_s])
+    res = merge_mod.upsert(
+        state2, cfg, uk, v_sum, custom_scores=cs, write_hit_values=False
+    )
+    status = jnp.zeros((n,), jnp.int8).at[idx_s].set(res.status[jnp.arange(n)])
+    return UpsertResult(state=res.state, status=res.status)
+
+
+def erase(state: HKVState, cfg: HKVConfig, keys: U64) -> HKVState:
+    """Inserter (structural). Remove keys; freed slots return to the pool."""
+    loc = find_mod.locate(state, cfg, keys)
+    b, s = cfg.num_buckets, cfg.slots_per_bucket
+    hb = jnp.where(loc.found, loc.bucket, b)
+    row = jnp.where(loc.found, loc.row, b * s)
+    n = keys.hi.shape[0]
+    return state._replace(
+        key_hi=state.key_hi.at[hb, loc.slot].set(jnp.full((n,), u64.EMPTY_HI), mode="drop"),
+        key_lo=state.key_lo.at[hb, loc.slot].set(jnp.full((n,), u64.EMPTY_LO), mode="drop"),
+        digests=state.digests.at[hb, loc.slot].set(
+            jnp.full((n,), u64.EMPTY_DIGEST), mode="drop"
+        ),
+        score_hi=state.score_hi.at[hb, loc.slot].set(jnp.zeros((n,), jnp.uint32), mode="drop"),
+        score_lo=state.score_lo.at[hb, loc.slot].set(jnp.zeros((n,), jnp.uint32), mode="drop"),
+        values=table_mod.tier_scatter(
+            cfg.value_tier, state.values, row,
+            jnp.zeros((n, state.values.shape[1]), state.values.dtype),
+        ),
+    )
+
+
+def clear(state: HKVState, cfg: HKVConfig) -> HKVState:
+    """Inserter (structural). Drop every entry."""
+    return table_mod.create(cfg)._replace(
+        clock_hi=state.clock_hi, clock_lo=state.clock_lo, epoch=state.epoch
+    )
+
+
+# =============================================================================
+# helpers
+# =============================================================================
+
+
+def _pad_aux(values: jax.Array, state: HKVState) -> jax.Array:
+    """Zero-pad caller rows up to the table's value width (aux optimizer cols)."""
+    vdim = state.values.shape[1]
+    if values.shape[1] == vdim:
+        return values.astype(state.values.dtype)
+    pad = jnp.zeros((values.shape[0], vdim - values.shape[1]), state.values.dtype)
+    return jnp.concatenate([values.astype(state.values.dtype), pad], axis=1)

@@ -1,0 +1,129 @@
+"""ScoreFunctor policies (paper §3.3, Table 8).
+
+The paper ships five scoring policies through a single in-line upsert
+mechanism: kLru, kLfu, kEpochLru, kEpochLfu, kCustomized.  The score array
+*is* the eviction metadata — there is no second data structure — so a policy
+is nothing more than a rule for (a) the score given to a newly admitted key
+and (b) the score transition applied when an existing key is touched.
+
+Scores are uint64 (here: U64 = (hi, lo) uint32 pairs, identical total
+order).  Eviction always removes the bucket-minimum score; admission rejects
+incoming scores below the bucket minimum (Alg. 2 line 12).
+
+Batch semantics note (TPU adaptation): a batched op may contain the same key
+k times.  LFU-family policies count all k occurrences (score += k); LRU-family
+policies collapse them to a single touch at the batch clock, exactly what k
+sequential upserts at the same clock tick would produce.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import u64
+from repro.core.u64 import U64
+
+POLICIES = ("lru", "lfu", "epoch_lru", "epoch_lfu", "custom")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScorePolicy:
+    """Pure-functional score transition rules for one policy."""
+
+    name: str
+
+    def __post_init__(self):
+        if self.name not in POLICIES:
+            raise ValueError(f"unknown score policy {self.name!r}; one of {POLICIES}")
+
+    # -- helpers ------------------------------------------------------------
+
+    @property
+    def is_custom(self) -> bool:
+        return self.name == "custom"
+
+    @property
+    def counts_frequency(self) -> bool:
+        return self.name in ("lfu", "epoch_lfu")
+
+    # -- transitions ---------------------------------------------------------
+
+    def init_score(
+        self,
+        clock: U64,
+        epoch: jax.Array,
+        count: jax.Array,
+        custom: Optional[U64],
+        shape,
+    ) -> U64:
+        """Score assigned to a newly admitted key.
+
+        clock:  global monotonic batch clock (U64 scalar)
+        epoch:  uint32 application epoch (scalar)
+        count:  uint32 [N] — occurrences of the key inside this batch
+        custom: U64 [N] caller scores (policy 'custom' only)
+        """
+        if self.name == "lru":
+            return U64(
+                jnp.broadcast_to(clock.hi, shape),
+                jnp.broadcast_to(clock.lo, shape),
+            )
+        if self.name == "lfu":
+            # frequency counter starts at the number of batch occurrences
+            return U64(jnp.zeros(shape, jnp.uint32), count.astype(jnp.uint32))
+        if self.name == "epoch_lru":
+            # hi = epoch, lo = clock low bits (recency within epoch)
+            return U64(
+                jnp.broadcast_to(epoch.astype(jnp.uint32), shape),
+                jnp.broadcast_to(clock.lo, shape),
+            )
+        if self.name == "epoch_lfu":
+            return U64(
+                jnp.broadcast_to(epoch.astype(jnp.uint32), shape),
+                count.astype(jnp.uint32),
+            )
+        assert self.name == "custom"
+        if custom is None:
+            raise ValueError("policy 'custom' requires caller-supplied scores")
+        return custom
+
+    def update_score(
+        self,
+        old: U64,
+        clock: U64,
+        epoch: jax.Array,
+        count: jax.Array,
+        custom: Optional[U64],
+    ) -> U64:
+        """Score transition when an existing key is touched (update/upsert)."""
+        shape = old.hi.shape
+        if self.name == "lru":
+            return U64(
+                jnp.broadcast_to(clock.hi, shape),
+                jnp.broadcast_to(clock.lo, shape),
+            )
+        if self.name == "lfu":
+            return u64.add_u32(old, count)
+        if self.name == "epoch_lru":
+            ep = jnp.broadcast_to(epoch.astype(jnp.uint32), shape)
+            return U64(ep, jnp.broadcast_to(clock.lo, shape))
+        if self.name == "epoch_lfu":
+            ep = jnp.broadcast_to(epoch.astype(jnp.uint32), shape)
+            # entering a new epoch resets the frequency counter
+            fresh = ep != old.hi
+            new_lo = jnp.where(fresh, count, old.lo + count)
+            return U64(ep, new_lo.astype(jnp.uint32))
+        assert self.name == "custom"
+        if custom is None:
+            raise ValueError("policy 'custom' requires caller-supplied scores")
+        # caller-supplied scores overwrite (HKV's caller-managed contract)
+        return custom
+
+
+def get_policy(name: str) -> ScorePolicy:
+    return ScorePolicy(name)

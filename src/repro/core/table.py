@@ -1,0 +1,213 @@
+"""HKV table configuration + state (paper §3.1–§3.2, Fig. 4).
+
+Memory layout mirrors the paper's bucket design, expressed as structure-of-
+arrays (the natural XLA/TPU layout):
+
+  digests : uint8  [B, S]   one contiguous 128-byte row per bucket — the
+                            TPU analogue of the GPU L1 cache-line-aligned
+                            digest array (one VPU lane row covers the whole
+                            candidate set; see DESIGN.md §2)
+  key_hi  : uint32 [B, S]   64-bit keys as two planes
+  key_lo  : uint32 [B, S]
+  score_hi: uint32 [B, S]   64-bit scores as two planes
+  score_lo: uint32 [B, S]
+  values  : vdtype [B*S, D] position-based addressing: the value of slot
+                            (b, s) lives at row b*S + s — no per-entry
+                            pointer anywhere (paper §3.6)
+
+`values` may live on a different memory tier than the key-side arrays
+(tiered key-value separation, §3.6): `value_tier='hmem'` requests host
+memory placement (`memory_kind='pinned_host'` on TPU); key-side processing
+stays in HBM either way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import u64
+from repro.core.scores import ScorePolicy, get_policy
+from repro.core.u64 import U64
+
+SLOTS_PER_BUCKET = 128  # the paper's (and the TPU lane width's) natural choice
+
+
+@dataclasses.dataclass(frozen=True)
+class HKVConfig:
+    """Static configuration of an HKV table."""
+
+    capacity: int                      # total slots (B * S)
+    dim: int                           # value vector length
+    slots_per_bucket: int = SLOTS_PER_BUCKET
+    buckets_per_key: int = 1           # 1 = single-bucket, 2 = dual-bucket (§3.4)
+    score_policy: str = "lru"
+    value_dtype: jnp.dtype = jnp.float32
+    value_tier: str = "hbm"            # 'hbm' | 'hmem' (tiered KV separation §3.6)
+    # Optional per-slot optimizer-state columns appended to each value row
+    # (momentum etc. colocated with the embedding row, HugeCTR-style).
+    aux_value_dim: int = 0
+    # Ablation switch (Exp#3a): disable the 8-bit digest pre-filter so every
+    # lookup compares all 128 full keys (paper Table 7's "No digest" column).
+    use_digest: bool = True
+
+    def __post_init__(self):
+        if self.capacity % self.slots_per_bucket != 0:
+            raise ValueError(
+                f"capacity {self.capacity} must be a multiple of "
+                f"slots_per_bucket {self.slots_per_bucket}"
+            )
+        if self.buckets_per_key not in (1, 2):
+            raise ValueError("buckets_per_key must be 1 or 2")
+        if self.value_tier not in ("hbm", "hmem"):
+            raise ValueError("value_tier must be 'hbm' or 'hmem'")
+        if self.num_buckets < 1:
+            raise ValueError("capacity must hold at least one bucket")
+
+    @property
+    def num_buckets(self) -> int:
+        return self.capacity // self.slots_per_bucket
+
+    @property
+    def total_value_dim(self) -> int:
+        return self.dim + self.aux_value_dim
+
+    @property
+    def policy(self) -> ScorePolicy:
+        return get_policy(self.score_policy)
+
+    def bytes_per_entry(self) -> int:
+        # key 8 B + digest 1 B + score 8 B (paper §5.1: 17 B metadata) + value
+        return 17 + self.total_value_dim * jnp.dtype(self.value_dtype).itemsize
+
+
+class HKVState(NamedTuple):
+    """The table as a pytree of arrays (pure-functional state)."""
+
+    key_hi: jax.Array    # uint32 [B, S]
+    key_lo: jax.Array    # uint32 [B, S]
+    digests: jax.Array   # uint8  [B, S]
+    score_hi: jax.Array  # uint32 [B, S]
+    score_lo: jax.Array  # uint32 [B, S]
+    values: jax.Array    # vdtype [B*S, D(+aux)]
+    clock_hi: jax.Array  # uint32 [] — global monotonic batch clock (LRU)
+    clock_lo: jax.Array  # uint32 []
+    epoch: jax.Array     # uint32 [] — application epoch (epoch_* policies)
+
+    # -- typed views ---------------------------------------------------------
+
+    @property
+    def keys(self) -> U64:
+        return U64(self.key_hi, self.key_lo)
+
+    @property
+    def scores(self) -> U64:
+        return U64(self.score_hi, self.score_lo)
+
+    @property
+    def clock(self) -> U64:
+        return U64(self.clock_hi, self.clock_lo)
+
+    @property
+    def num_buckets(self) -> int:
+        return self.key_hi.shape[0]
+
+    @property
+    def slots_per_bucket(self) -> int:
+        return self.key_hi.shape[1]
+
+    def occupied_mask(self) -> jax.Array:
+        return ~u64.is_empty(self.keys)
+
+    def load_factor(self) -> jax.Array:
+        occ = jnp.sum(self.occupied_mask().astype(jnp.int32))
+        return occ.astype(jnp.float32) / float(self.key_hi.size)
+
+    def bucket_occupancy(self) -> jax.Array:
+        """int32 [B] — number of live entries per bucket."""
+        return jnp.sum(self.occupied_mask().astype(jnp.int32), axis=1)
+
+
+def create(config: HKVConfig) -> HKVState:
+    """Allocate an empty table."""
+    b, s = config.num_buckets, config.slots_per_bucket
+    state = HKVState(
+        key_hi=jnp.full((b, s), u64.EMPTY_HI, jnp.uint32),
+        key_lo=jnp.full((b, s), u64.EMPTY_LO, jnp.uint32),
+        digests=jnp.full((b, s), u64.EMPTY_DIGEST, jnp.uint8),
+        score_hi=jnp.zeros((b, s), jnp.uint32),
+        score_lo=jnp.zeros((b, s), jnp.uint32),
+        values=jnp.zeros((b * s, config.total_value_dim), config.value_dtype),
+        clock_hi=jnp.zeros((), jnp.uint32),
+        clock_lo=jnp.zeros((), jnp.uint32),
+        epoch=jnp.zeros((), jnp.uint32),
+    )
+    if config.value_tier == "hmem":
+        state = place_value_tier(state)
+    return state
+
+
+def place_value_tier(state: HKVState) -> HKVState:
+    """Place the value plane on host memory where the backend supports it.
+
+    On TPU this issues a device_put with memory_kind='pinned_host' (zero-copy
+    mapped into the device address space — the paper's HMEM tier). Backends
+    without host memory kinds (the CPU dev container) keep the array where it
+    is; the tier then remains a structural split that the dry-run compiles.
+    """
+    try:
+        values = jax.device_put(state.values, jax.memory.Space.Host)
+        return state._replace(values=values)
+    except (ValueError, RuntimeError, KeyError):
+        return state
+
+
+# ---------------------------------------------------------------------------
+# Tiered key-value separation (§3.6): explicit value-plane tier crossings.
+#
+# In 'hmem' mode the value plane lives in host memory; key-side processing
+# never leaves HBM.  Position-based addressing means only the TOUCHED ROWS
+# ever cross the tier: a gather routes its indices to host, gathers there,
+# and transfers just the result rows back (the paper's zero-copy mapped-
+# pointer contract expressed in the XLA memories API); scatters go the
+# other way.  'hbm' mode: passthrough.
+# ---------------------------------------------------------------------------
+
+
+def tier_gather(tier: str, values: jax.Array, rows: jax.Array) -> jax.Array:
+    if tier != "hmem":
+        return values[rows]
+    rows_h = jax.device_put(rows, jax.memory.Space.Host)
+    out_h = values[rows_h]
+    return jax.device_put(out_h, jax.memory.Space.Device)
+
+
+def tier_scatter(tier: str, values: jax.Array, rows: jax.Array,
+                 updates: jax.Array, *, add: bool = False,
+                 mode: str = "drop") -> jax.Array:
+    if tier != "hmem":
+        op = values.at[rows]
+        return op.add(updates, mode=mode) if add else op.set(updates, mode=mode)
+    rows_h = jax.device_put(rows, jax.memory.Space.Host)
+    upd_h = jax.device_put(updates, jax.memory.Space.Host)
+    op = values.at[rows_h]
+    return op.add(upd_h, mode=mode) if add else op.set(upd_h, mode=mode)
+
+
+def advance_clock(state: HKVState) -> HKVState:
+    """Tick the global LRU clock (one tick per batched op, paper's device clock)."""
+    c = u64.add_u32(state.clock, jnp.uint32(1))
+    return state._replace(clock_hi=c.hi, clock_lo=c.lo)
+
+
+def set_epoch(state: HKVState, epoch) -> HKVState:
+    return state._replace(epoch=jnp.asarray(epoch, jnp.uint32))
+
+
+def value_row_index(bucket: jax.Array, slot: jax.Array, slots_per_bucket: int) -> jax.Array:
+    """Position-based addressing (§3.6): value row = bucket * S + slot."""
+    return bucket * slots_per_bucket + slot

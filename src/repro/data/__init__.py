@@ -1,0 +1,2 @@
+from repro.data.synthetic import zipf_ranks, zipf_keys, TokenStream  # noqa: F401
+from repro.data.pipeline import HostPrefetcher, DataCursor  # noqa: F401

@@ -1,0 +1,78 @@
+"""Seeded synthetic data: Zipfian key streams + LM token batches.
+
+The paper's workload (§2.1) is a power-law uint64 feature-ID stream under
+continuous ingestion.  `zipf_ranks` draws ranks from a truncated Zipf(α)
+via analytic inverse-CDF of the harmonic approximation (exact enough for
+the α ∈ [0.5, 1.25] sweep of Table 8 and O(1) memory at any key-space
+size); `zipf_keys` maps ranks through fmix64 so that hot keys are scattered
+uniformly over the uint64 space (no accidental bucket locality).
+
+Everything is seed-deterministic and rank-shardable: worker r of w draws
+the same global stream and keeps its slice, so restarts resume exactly
+(see data.pipeline.DataCursor).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def zipf_ranks(rng: np.random.Generator, n: int, alpha: float, k: int) -> np.ndarray:
+    """Ranks in [0, k) with P(r) ∝ (r+1)^-alpha, via inverse harmonic CDF."""
+    u = rng.random(n)
+    if abs(alpha - 1.0) < 1e-9:
+        h = np.log(k + 1.0)
+        ranks = np.expm1(u * h)
+    else:
+        h = ((k + 1.0) ** (1.0 - alpha) - 1.0) / (1.0 - alpha)
+        ranks = (u * h * (1.0 - alpha) + 1.0) ** (1.0 / (1.0 - alpha)) - 1.0
+    return np.clip(ranks.astype(np.int64), 0, k - 1)
+
+
+def _fmix64(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint64).copy()
+    with np.errstate(over="ignore"):
+        x ^= x >> np.uint64(33)
+        x *= np.uint64(0xFF51AFD7ED558CCD)
+        x ^= x >> np.uint64(33)
+        x *= np.uint64(0xC4CEB9FE1A85EC53)
+        x ^= x >> np.uint64(33)
+    return x
+
+
+def zipf_keys(rng: np.random.Generator, n: int, alpha: float, key_space: int) -> np.ndarray:
+    """Power-law uint64 feature IDs: rank -> fmix64(rank) (hot set scattered)."""
+    return _fmix64(zipf_ranks(rng, n, alpha, key_space))
+
+
+@dataclasses.dataclass
+class TokenStream:
+    """Deterministic LM token batches with Zipfian unigram statistics.
+
+    Yields (tokens, labels) int32 [batch, seq]: labels are tokens shifted
+    by one (next-token LM).  `rank`/`world` slice the global batch for DP.
+    """
+
+    seed: int
+    batch: int           # per-host batch after DP slicing
+    seq: int
+    vocab: int
+    alpha: float = 1.0
+    rank: int = 0
+    world: int = 1
+
+    def batch_at(self, step: int) -> tuple[np.ndarray, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.rank, self.world])
+        )
+        toks = zipf_ranks(rng, self.batch * (self.seq + 1), self.alpha, self.vocab)
+        toks = toks.reshape(self.batch, self.seq + 1).astype(np.int32)
+        return toks[:, :-1], toks[:, 1:]
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

@@ -1,0 +1,75 @@
+"""Gradient compression for the DP all-reduce, with error feedback.
+
+int8 block-quantized gradient exchange: each shard quantizes its local
+gradient against a pmax-shared block scale, the wire carries int8 payloads
+(4x fewer bytes than f32 ring all-reduce when exchanged via all_gather at
+small DP degree, or int8 reduce-scatter chunks at large degree), and the
+quantization residual is fed back into the next step's gradient (error
+feedback keeps SGD convergence — Karimireddy et al.-style).
+
+The compile-visible artifact (dry-run §Roofline) is the collective byte
+count: compressed_psum's all_gather moves N x world x 1 B vs psum's ring
+2 x N x 4 B — the crossover and the DCN-bound pod axis are analyzed in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_BLOCK = 256
+
+
+def _block_view(x: jax.Array):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    return jnp.pad(flat, (0, pad)).reshape(-1, _BLOCK), flat.shape[0]
+
+
+def compressed_psum(x: jax.Array, axis_name) -> jax.Array:
+    """int8 error-free-scale psum substitute (call inside shard_map).
+
+    Scales are agreed via pmax so every shard quantizes against the same
+    grid; payload crosses the wire as int8; the sum happens post-gather in
+    int32 (exact given world size < 2^24 blocks)."""
+    blocks, n = _block_view(x)
+    scale = jax.lax.pmax(jnp.max(jnp.abs(blocks), axis=1), axis_name) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    gathered = jax.lax.all_gather(q, axis_name)           # [world, B, 256] int8 wire
+    s = jnp.sum(gathered.astype(jnp.int32), axis=0)
+    out = (s.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n]
+    return out.reshape(x.shape)
+
+
+def ef_compress_grads(grads, errors, axis_name):
+    """Error-feedback wrapper: (grads + carried error) -> compressed psum,
+    new error = local residual. Returns (synced_grads, new_errors)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        blocks, n = _block_view(g32)
+        scale = jax.lax.pmax(jnp.max(jnp.abs(blocks), axis=1), axis_name) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+        deq = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n].reshape(g.shape)
+        new_e = g32 - deq
+        gathered = jax.lax.all_gather(q, axis_name)
+        s = jnp.sum(gathered.astype(jnp.int32), axis=0)
+        world = gathered.shape[0]
+        synced = (s.astype(jnp.float32) * scale[:, None]).reshape(-1)[:n].reshape(
+            g.shape
+        ) / world
+        return synced.astype(g.dtype), new_e
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(errors)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    synced = jax.tree.unflatten(tree, [o[0] for o in out])
+    new_err = jax.tree.unflatten(tree, [o[1] for o in out])
+    return synced, new_err
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,249 @@
+"""Distributed HKV table: all-to-all key routing over the device mesh.
+
+The paper delegates multi-GPU sharding to application code (§7); this
+module IS that application layer, built the way HugeCTR shards
+model-parallel embeddings — and it is the piece that makes the multi-pod
+dry-run meaningful for the technique:
+
+  * Every shard owns an independent local HKV table of capacity/n_shards
+    (its own buckets, digests, scores, values — all core invariants hold
+    locally, including cache semantics at local λ=1.0).
+  * A key's OWNER shard is a hash of the key (fmix of h2), so hot Zipfian
+    keys scatter uniformly across shards.
+  * Lookup/ingest: local dedupe -> capacity-bounded all_to_all of keys to
+    owners -> owner-side find_or_insert -> all_to_all of value rows back.
+    Wire cost per unique token: 8 B of key out, dim x 4 B of row back —
+    strictly less than a vocab-parallel all-reduce at model-axis >= 2.
+  * Gradients: the same routing in reverse (updater role).  Each unique
+    key's grad is summed locally, routed to its single owner, then
+    owner-side deduped across sources and applied ONCE via the sparse
+    optimizer — no replica divergence, because no replicas exist.
+  * Admission/eviction happen owner-side with unchanged semantics.
+
+Skew handling: per-destination capacity = factor x fair share.  Uniques
+beyond capacity fall back to deterministic init rows and are counted in
+the returned `overflow` metric (they retry next step; a recurring hot key
+is admitted on its next occurrence).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import merge as merge_mod
+from repro.core import ops as hkv_ops
+from repro.core import u64
+from repro.core.u64 import U64
+from repro.embedding.dynamic import HKVEmbedding
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedHKVEmbedding:
+    """HKVEmbedding sharded over mesh axes (default: every mesh axis)."""
+
+    emb: HKVEmbedding              # GLOBAL capacity; local = capacity / n_shards
+    axis_names: tuple              # mesh axes the table shards over
+    capacity_factor: float = 2.0
+
+    def local_embedding(self, n_shards: int) -> HKVEmbedding:
+        local_cap = self.emb.capacity // n_shards
+        local_cap = max(128, (local_cap // 128) * 128)
+        return dataclasses.replace(self.emb, capacity=local_cap)
+
+    # -- routing helpers (shard-local code, used under shard_map) -----------
+
+    def _owner(self, keys: U64, n_shards: int) -> jax.Array:
+        _, h2 = u64.hash_pair(keys)
+        own = (u64.fmix32(h2 ^ jnp.uint32(0x2545F491)) % jnp.uint32(n_shards)).astype(
+            jnp.int32
+        )
+        return jnp.where(u64.is_empty(keys), n_shards, own)
+
+    def _route(self, keys: U64, n_shards: int, cap: int):
+        """Sort unique keys by owner; build [n_shards, cap] send buffers.
+
+        Returns (send_hi, send_lo, slot_of_key [N] (-1 = overflow), order info)
+        """
+        n = keys.hi.shape[0]
+        owner = self._owner(keys, n_shards)
+        order = jnp.argsort(owner)
+        o_s = owner[order]
+        iota = jnp.arange(n, dtype=jnp.int32)
+        is_new = jnp.concatenate([jnp.ones((1,), bool), o_s[1:] != o_s[:-1]])
+        rank = iota - jax.lax.cummax(jnp.where(is_new, iota, -1))
+        ok = (o_s < n_shards) & (rank < cap)
+        slot = jnp.where(ok, o_s * cap + rank, n_shards * cap)
+        send_hi = jnp.full((n_shards * cap,), u64.EMPTY_HI, jnp.uint32).at[slot].set(
+            keys.hi[order], mode="drop"
+        )
+        send_lo = jnp.full((n_shards * cap,), u64.EMPTY_LO, jnp.uint32).at[slot].set(
+            keys.lo[order], mode="drop"
+        )
+        # slot of each original key (for the return trip)
+        key_slot = jnp.full((n,), -1, jnp.int32).at[order].set(
+            jnp.where(ok, slot, -1)
+        )
+        return send_hi.reshape(n_shards, cap), send_lo.reshape(n_shards, cap), key_slot
+
+    # -- shard-local bodies ---------------------------------------------------
+
+    def _lookup_body(self, n_shards, cap, train, state, khi, klo):
+        """Executes per shard under shard_map: khi/klo are the LOCAL tokens'
+        unique keys (padded with EMPTY)."""
+        axis = self.axis_names
+        local = self.local_embedding(n_shards)
+        keys = U64(khi, klo)
+        send_hi, send_lo, key_slot = self._route(keys, n_shards, cap)
+        # dispatch keys to owners
+        recv_hi = jax.lax.all_to_all(send_hi, axis, 0, 0, tiled=True)
+        recv_lo = jax.lax.all_to_all(send_lo, axis, 0, 0, tiled=True)
+        rk = U64(recv_hi.reshape(-1), recv_lo.reshape(-1))
+        cfg = local.config()
+        init = local.default_rows(rk)
+        if train:
+            res = hkv_ops.find_or_insert(state, cfg, rk, init)
+            state, rows = res.state, res.values
+        else:
+            fr = hkv_ops.find(state, cfg, rk)
+            rows = jnp.where(fr.found[:, None], fr.values, init[:, : local.dim])
+        # return rows to requesters
+        rows = rows.reshape(n_shards, cap, local.dim)
+        back = jax.lax.all_to_all(rows, axis, 0, 0, tiled=True)
+        back = back.reshape(n_shards * cap, local.dim)
+        ovf = jnp.sum((key_slot < 0) & ~u64.is_empty(keys))
+        # overflowed / padded keys fall back to deterministic init rows
+        fallback = local.default_rows(keys)
+        out = jnp.where(
+            (key_slot >= 0)[:, None],
+            back[jnp.clip(key_slot, 0)],
+            fallback,
+        )
+        return state, out, ovf
+
+    def _grad_body(self, n_shards, cap, state, khi, klo, grads):
+        axis = self.axis_names
+        local = self.local_embedding(n_shards)
+        keys = U64(khi, klo)
+        send_hi, send_lo, key_slot = self._route(keys, n_shards, cap)
+        gbuf = jnp.zeros((n_shards * cap, local.dim), grads.dtype).at[
+            jnp.where(key_slot >= 0, key_slot, n_shards * cap)
+        ].add(grads, mode="drop")
+        recv_hi = jax.lax.all_to_all(send_hi, axis, 0, 0, tiled=True)
+        recv_lo = jax.lax.all_to_all(send_lo, axis, 0, 0, tiled=True)
+        recv_g = jax.lax.all_to_all(gbuf.reshape(n_shards, cap, -1), axis, 0, 0,
+                                    tiled=True).reshape(n_shards * cap, -1)
+        rk = U64(recv_hi.reshape(-1), recv_lo.reshape(-1))
+        # owner-side dedupe across sources: same key from several data shards
+        n = rk.hi.shape[0]
+        keys_s, idx_s, gid, _c, _l, rep = merge_mod._dedupe_sort(rk)
+        g_sum = jax.ops.segment_sum(recv_g[idx_s], gid, num_segments=n)[gid]
+        uk = u64.select(rep, keys_s, u64.empty_sentinel((n,)))
+        cfg = local.config()
+        from repro.core import find as find_mod
+
+        loc = find_mod.locate(state, cfg, uk)
+        rows = state.values[jnp.clip(loc.row, 0, state.values.shape[0] - 1)]
+        new_rows = local.optimizer.apply(rows, g_sum, local.dim)
+        return hkv_ops.assign(state, cfg, uk, new_rows)
+
+    # -- public API (call under `with mesh:` inside jit) ---------------------
+
+    def create_sharded(self, mesh):
+        n_shards = int(np.prod([mesh.shape[a] for a in self.axis_names]))
+        local = self.local_embedding(n_shards)
+
+        def body():
+            return local.create()
+
+        specs = self.state_specs()
+        return jax.jit(
+            jax.shard_map(body, mesh=mesh, in_specs=(), out_specs=specs,
+                          check_vma=False)
+        )()
+
+    def state_specs(self):
+        from repro.core.table import HKVState
+
+        ax = self.axis_names
+        # clocks/epoch are scalars advanced in LOCKSTEP (every shard executes
+        # the same op sequence) — replicated under shard_map, not sharded
+        return HKVState(
+            key_hi=P(ax, None), key_lo=P(ax, None), digests=P(ax, None),
+            score_hi=P(ax, None), score_lo=P(ax, None), values=P(ax, None),
+            clock_hi=P(), clock_lo=P(), epoch=P(),
+        )
+
+    def _uniq(self, tokens):
+        """Local dedupe: unique keys (EMPTY-padded) + inverse map."""
+        keys = self.emb.keys_of(tokens)
+        n = keys.hi.shape[0]
+        keys_s, idx_s, gid, _c, _l, rep = merge_mod._dedupe_sort(keys)
+        uk = u64.select(rep, keys_s, u64.empty_sentinel((n,)))
+        # token i -> position of its group representative in sorted space
+        rep_pos = jax.ops.segment_min(
+            jnp.arange(n, dtype=jnp.int32), gid, num_segments=n
+        )
+        inv = jnp.zeros((n,), jnp.int32).at[idx_s].set(rep_pos[gid])
+        return uk, inv
+
+    def lookup(self, mesh, state, tokens, *, train: bool):
+        """tokens: [B, S] (data-sharded). Returns (state, rows, overflow)."""
+        n_shards = int(np.prod([mesh.shape[a] for a in self.axis_names]))
+        dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        flat = tokens.reshape(-1)
+        per_shard = max(flat.shape[0] // max(np.prod([mesh.shape[a] for a in dp]), 1), 1)
+        cap = self._cap(per_shard, n_shards)
+
+        def body(state, toks):
+            uk, inv = self._uniq(toks.reshape(-1))
+            state, rows, ovf = self._lookup_body(
+                n_shards, cap, train, state, uk.hi, uk.lo
+            )
+            return state, rows[inv], ovf.reshape(1)  # rank-1 for out_specs
+
+        specs = self.state_specs()
+        out = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(specs, P(dp, None)),
+            out_specs=(specs, P(dp, None), P(dp)),
+            check_vma=False,
+        )(state, tokens.reshape(tokens.shape[0], -1))
+        state, rows, ovf = out
+        return state, rows.reshape(tokens.shape + (self.emb.dim,)), jnp.sum(ovf)
+
+    def apply_grads(self, mesh, state, tokens, grads):
+        n_shards = int(np.prod([mesh.shape[a] for a in self.axis_names]))
+        dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        per_shard = max(
+            tokens.size // max(np.prod([mesh.shape[a] for a in dp]), 1), 1
+        )
+        cap = self._cap(per_shard, n_shards)
+
+        def body(state, toks, g):
+            flat = toks.reshape(-1)
+            g = g.reshape(-1, self.emb.dim)
+            uk, inv = self._uniq(flat)
+            n = flat.shape[0]
+            # sum grads per unique (scatter to representative positions)
+            g_uniq = jnp.zeros((n, self.emb.dim), g.dtype).at[inv].add(g)
+            return self._grad_body(n_shards, cap, state, uk.hi, uk.lo, g_uniq)
+
+        specs = self.state_specs()
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(specs, P(dp, None), P(dp, None, None)),
+            out_specs=specs,
+            check_vma=False,
+        )(state, tokens.reshape(tokens.shape[0], -1),
+          grads.reshape(tokens.shape[0], -1, self.emb.dim))
+
+    def _cap(self, per_shard_tokens: int, n_shards: int) -> int:
+        c = int(per_shard_tokens * self.capacity_factor / n_shards)
+        return max(8, -(-c // 8) * 8)

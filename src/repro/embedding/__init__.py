@@ -1,0 +1,16 @@
+"""Embedding backends: the paper's workload layer (Fig. 1).
+
+Every architecture's token/feature embedding can run on either backend:
+
+  dense  — an ordinary learnable [vocab, dim] matrix, vocab-sharded over
+           the model axis (the dictionary-semantic world; also the roofline
+           baseline).
+  hkv    — the paper's cache-semantic table as a first-class dynamic
+           embedding: find_or_insert on the token batch (inserter role,
+           admission-controlled), gradient application through the updater
+           role, capacity decoupled from key-space size.
+"""
+
+from repro.embedding.dense import DenseEmbedding  # noqa: F401
+from repro.embedding.dynamic import HKVEmbedding  # noqa: F401
+from repro.embedding import sparse_opt  # noqa: F401

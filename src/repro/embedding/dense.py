@@ -1,0 +1,31 @@
+"""Dense (static-vocabulary) embedding backend — the dictionary-semantic
+baseline and the default backbone input layer for the assigned archs."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseEmbedding:
+    vocab: int
+    dim: int
+    dtype: jnp.dtype = jnp.float32
+
+    def init(self, key: jax.Array) -> dict:
+        scale = 1.0 / jnp.sqrt(self.dim)
+        return {
+            "table": (jax.random.normal(key, (self.vocab, self.dim)) * scale).astype(
+                self.dtype
+            )
+        }
+
+    def lookup(self, params: dict, tokens: jax.Array) -> jax.Array:
+        return params["table"][tokens]
+
+    def attend(self, params: dict, x: jax.Array) -> jax.Array:
+        """Tied-softmax logits: x @ table.T (used when lm_head is tied)."""
+        return x @ params["table"].T.astype(x.dtype)

@@ -1,0 +1,138 @@
+"""HKV-backed dynamic embedding — the paper's cache-semantic table wired
+into a model input layer (the HugeCTR/TFRA integration pattern, §1/§6).
+
+Training path (one step):
+  1. find_or_insert on the (flattened) token batch — INSERTER role, the
+     step's single structural op.  New tokens are admitted subject to
+     score-based admission control; at λ=1.0 the table stays full and
+     low-value embeddings are evicted in place (continuous online
+     ingestion, paper Fig. 2).
+  2. The model consumes the gathered rows; jax.grad gives d(loss)/d(rows).
+  3. apply_grads — UPDATER role: per-unique-token gradient sums feed a
+     sparse optimizer whose slot state lives in aux value columns, and the
+     refreshed rows are written back with `assign` (non-structural, so XLA
+     may overlap it with the next microbatch's compute; §3.5 adaptation).
+
+Serving path: `find` only — READER role; unseen tokens fall back to the
+same deterministic hash-derived init the training path would insert, so
+train/serve disagree only by the not-yet-applied gradients.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import merge as merge_mod
+from repro.core import find as find_mod
+from repro.core import ops as hkv_ops
+from repro.core import table as table_mod
+from repro.core import u64
+from repro.core.table import HKVConfig, HKVState
+from repro.core.u64 import U64
+from repro.embedding.sparse_opt import SparseOptimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class HKVEmbedding:
+    capacity: int                      # table slots (decoupled from key-space size!)
+    dim: int
+    optimizer: SparseOptimizer = SparseOptimizer("rowwise_adagrad")
+    buckets_per_key: int = 2           # dual-bucket: §3.4 retention + utilization
+    score_policy: str = "lru"
+    value_dtype: jnp.dtype = jnp.float32
+    value_tier: str = "hbm"
+
+    def config(self) -> HKVConfig:
+        return HKVConfig(
+            capacity=self.capacity,
+            dim=self.dim,
+            buckets_per_key=self.buckets_per_key,
+            score_policy=self.score_policy,
+            value_dtype=self.value_dtype,
+            value_tier=self.value_tier,
+            aux_value_dim=self.optimizer.aux_dim(self.dim),
+        )
+
+    def create(self) -> HKVState:
+        return table_mod.create(self.config())
+
+    # -- key & init derivation -------------------------------------------------
+
+    def keys_of(self, tokens: jax.Array) -> U64:
+        """Token ids -> u64 keys. Negative ids (padding) become the EMPTY
+        sentinel and are ignored by every table op."""
+        t = tokens.reshape(-1)
+        neg = t < 0
+        return U64(
+            jnp.where(neg, jnp.uint32(u64.EMPTY_HI), jnp.uint32(0)),
+            jnp.where(neg, jnp.uint32(u64.EMPTY_LO), t.astype(jnp.uint32)),
+        )
+
+    def default_rows(self, keys: U64) -> jax.Array:
+        """Deterministic per-key init: counter-mode fmix32 bits -> uniform
+        rows in ±1/sqrt(dim).  Restart-stable and identical on every shard."""
+        h1, _ = u64.hash_pair(keys)
+        col_salt = (
+            jnp.arange(self.dim, dtype=jnp.uint32) * jnp.uint32(0x9E3779B9)
+        ) ^ jnp.uint32(0x85EBCA6B)
+        bits = u64.fmix32(h1[:, None] ^ col_salt[None, :])
+        uni = bits.astype(jnp.float32) * (1.0 / 4294967296.0)
+        return ((uni - 0.5) * (2.0 / np.sqrt(self.dim))).astype(self.value_dtype)
+
+    # -- roles -------------------------------------------------------------
+
+    def lookup_train(self, state: HKVState, tokens: jax.Array):
+        """INSERTER: find_or_insert the token batch. Returns (state, rows)."""
+        cfg = self.config()
+        keys = self.keys_of(tokens)
+        init = self.default_rows(keys)
+        res = hkv_ops.find_or_insert(state, cfg, keys, init)
+        emb = res.values.reshape(tokens.shape + (self.dim,))
+        return res.state, emb
+
+    def lookup_serve(self, state: HKVState, tokens: jax.Array) -> jax.Array:
+        """READER: find; misses fall back to the deterministic init row."""
+        cfg = self.config()
+        keys = self.keys_of(tokens)
+        res = hkv_ops.find(state, cfg, keys)
+        vals = jnp.where(res.found[:, None], res.values, self.default_rows(keys))
+        return vals.reshape(tokens.shape + (self.dim,))
+
+    def apply_grads(
+        self, state: HKVState, tokens: jax.Array, grads: jax.Array
+    ) -> HKVState:
+        """UPDATER: sum grads per unique token, run the sparse optimizer on
+        the gathered rows, write back with `assign` (non-structural)."""
+        cfg = self.config()
+        keys = self.keys_of(tokens)
+        g = grads.reshape(-1, self.dim)
+        n = g.shape[0]
+        keys_s, idx_s, gid, _count, _last, rep = merge_mod._dedupe_sort(keys)
+        g_sum = jax.ops.segment_sum(g[idx_s], gid, num_segments=n)
+        g_rep = g_sum[gid]  # at each group's first slot: the group total
+        uk = u64.select(rep, keys_s, u64.empty_sentinel((n,)))
+        loc = find_mod.locate(state, cfg, uk)
+        rows = table_mod.tier_gather(
+            cfg.value_tier, state.values,
+            jnp.clip(loc.row, 0, state.values.shape[0] - 1),
+        )
+        new_rows = self.optimizer.apply(rows, g_rep, self.dim)
+        # rejected-admission tokens simply have no row to update (cache
+        # semantics: un-admitted embeddings do not train)
+        return hkv_ops.assign(state, cfg, uk, new_rows)
+
+    def ingest(self, state: HKVState, tokens: jax.Array) -> HKVState:
+        """Deferred-structural variant: admit this batch's new tokens without
+        reading values (used by the overlapped-ingest schedule, §3.5/Exp#3e)."""
+        cfg = self.config()
+        keys = self.keys_of(tokens)
+        init = self.default_rows(keys)
+        return merge_mod.upsert(
+            state, cfg, keys,
+            hkv_ops._pad_aux(init, state),
+            write_hit_values=False,
+        ).state

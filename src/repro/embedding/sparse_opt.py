@@ -1,0 +1,54 @@
+"""Sparse optimizers for HKV-backed embeddings (updater-role gradient path).
+
+Optimizer slot state is colocated with each embedding row as aux value
+columns (HugeCTR-style): a table row is [embedding dim | aux columns], so
+an eviction carries the optimizer state away with the row and an admission
+starts fresh — no separate slot-state table to keep consistent.
+
+  rowwise_adagrad — 1 aux column: the row-wise accumulated squared-grad
+                    mean (the DLRM production standard).
+  adagrad         — `dim` aux columns: per-coordinate accumulator.
+  sgd / sgdm      — 0 / `dim` aux columns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseOptimizer:
+    name: str = "rowwise_adagrad"
+    lr: float = 0.01
+    eps: float = 1e-10
+    momentum: float = 0.9
+
+    def aux_dim(self, dim: int) -> int:
+        return {"sgd": 0, "sgdm": dim, "rowwise_adagrad": 1, "adagrad": dim}[self.name]
+
+    def apply(self, rows: jax.Array, grads: jax.Array, dim: int) -> jax.Array:
+        """rows: [N, dim + aux] gathered table rows; grads: [N, dim].
+
+        Returns updated rows (embedding + refreshed aux columns) — written
+        back through the updater role (`assign`), never structurally.
+        """
+        emb, aux = rows[:, :dim], rows[:, dim:]
+        g = grads.astype(emb.dtype)
+        if self.name == "sgd":
+            return emb - self.lr * g
+        if self.name == "sgdm":
+            m = self.momentum * aux + g
+            return jnp.concatenate([emb - self.lr * m, m], axis=1)
+        if self.name == "rowwise_adagrad":
+            acc = aux[:, 0] + jnp.mean(g * g, axis=1)
+            step = self.lr / (jnp.sqrt(acc) + self.eps)
+            return jnp.concatenate([emb - step[:, None] * g, acc[:, None]], axis=1)
+        if self.name == "adagrad":
+            acc = aux + g * g
+            return jnp.concatenate(
+                [emb - self.lr * g / (jnp.sqrt(acc) + self.eps), acc], axis=1
+            )
+        raise ValueError(self.name)

@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: position-addressed value gather (paper §3.6, §4.3 TLPv2).
+
+After the digest scan resolves (bucket, slot) -> row = bucket*S + slot, the
+value copy is a pure bandwidth problem.  The paper's TLPv2 regroups threads
+into cooperative value-copy gangs with double-buffered shared memory; the
+TPU analogue is a scalar-prefetch-indexed row pipeline: the row index stream
+is prefetched into SMEM, each grid step's BlockSpec selects values[row] as
+its input block, and the Pallas pipeline emitter overlaps row r+1's
+HBM->VMEM DMA with row r's writeback — the same two-deep overlap, driven by
+the hardware DMA engine.
+
+Rows with mask==0 (misses) produce zero rows, matching `find`'s contract.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(rows_ref, mask_ref, val_ref, out_ref):
+    i = pl.program_id(0)
+    live = mask_ref[i] != 0
+    out_ref[0, :] = jnp.where(live, val_ref[0, :], jnp.zeros_like(val_ref[0, :]))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows(values, rows, mask, *, interpret: bool = True):
+    """out[i] = mask[i] ? values[rows[i]] : 0   (rows pre-clipped in wrapper)."""
+    n = rows.shape[0]
+    d = values.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),        # mask
+            pl.BlockSpec((1, d), lambda i, r: (r[i], 0)),             # values row
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, r: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), values.dtype),
+        interpret=interpret,
+        name="hkv_gather_rows",
+    )(rows, mask, values)

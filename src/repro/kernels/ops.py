@@ -1,0 +1,153 @@
+"""Jit'd wrappers over the Pallas kernels (+ dispatch and padding logic).
+
+`interpret` defaults to True off-TPU: the kernel bodies execute in Python
+on CPU (the validation mode this container supports) and compile to Mosaic
+on real TPUs.  The wrappers are drop-in equivalents of the pure-jnp paths
+in `repro.core` and are cross-checked against them in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import find as find_mod
+from repro.core import u64
+from repro.core.table import HKVConfig, HKVState
+from repro.core.u64 import U64
+from repro.kernels import digest_scan as _ds
+from repro.kernels import gather as _ga
+from repro.kernels import ref as _ref
+from repro.kernels import scatter as _sc
+from repro.kernels import score_scan as _ss
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, n: int, fill=0):
+    if x.shape[0] == n:
+        return x
+    pad = jnp.full((n - x.shape[0],) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([x, pad], axis=0)
+
+
+def locate_kernel(
+    state: HKVState,
+    cfg: HKVConfig,
+    keys: U64,
+    *,
+    variant: str = "pipeline",
+    interpret: bool | None = None,
+) -> find_mod.Locate:
+    """Kernel-backed drop-in for core.find.locate (single & dual bucket)."""
+    if interpret is None:
+        interpret = default_interpret()
+    n = keys.hi.shape[0]
+    probe = find_mod.probe_keys(cfg, keys)
+    qd = probe.digest.astype(jnp.uint32)
+
+    if variant == "pipeline":
+        q_tile = min(128, n) if n % 128 else 128
+        npad = -(-n // q_tile) * q_tile
+        scan = functools.partial(
+            _ds.digest_scan_pipeline, q_tile=q_tile, interpret=interpret
+        )
+    elif variant == "tlp":
+        npad = n
+        scan = functools.partial(_ds.digest_scan_tlp, interpret=interpret)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+
+    def run(bucket):
+        slot, found = scan(
+            state.digests,
+            state.key_hi,
+            state.key_lo,
+            _pad_to(bucket, npad),
+            _pad_to(qd, npad),
+            _pad_to(keys.hi, npad, u64.EMPTY_HI),
+            _pad_to(keys.lo, npad, u64.EMPTY_LO),
+        )
+        return slot[:n], found[:n].astype(bool)
+
+    slot1, hit1 = run(probe.bucket1)
+    if cfg.buckets_per_key == 2:
+        slot2, hit2 = run(probe.bucket2)
+        found = (hit1 | hit2) & probe.valid
+        bucket = jnp.where(hit1, probe.bucket1, jnp.where(hit2, probe.bucket2, probe.bucket1))
+        slot = jnp.where(hit1, slot1, jnp.where(hit2, slot2, 0))
+    else:
+        found = hit1 & probe.valid
+        bucket, slot = probe.bucket1, jnp.where(hit1, slot1, 0)
+    s = cfg.slots_per_bucket
+    return find_mod.Locate(found=found, bucket=bucket, slot=slot, row=bucket * s + slot)
+
+
+def find_kernel(
+    state: HKVState,
+    cfg: HKVConfig,
+    keys: U64,
+    *,
+    variant: str = "pipeline",
+    interpret: bool | None = None,
+):
+    """Kernel-backed `find`: digest scan + position-addressed value gather."""
+    if interpret is None:
+        interpret = default_interpret()
+    loc = locate_kernel(state, cfg, keys, variant=variant, interpret=interpret)
+    rows = jnp.clip(loc.row, 0, state.values.shape[0] - 1)
+    vals = _ga.gather_rows(
+        state.values, rows, loc.found.astype(jnp.int32), interpret=interpret
+    )
+    return vals[:, : cfg.dim], loc.found
+
+
+def assign_kernel(
+    state: HKVState,
+    cfg: HKVConfig,
+    keys: U64,
+    values: jax.Array,
+    *,
+    add: bool = False,
+    interpret: bool | None = None,
+) -> HKVState:
+    """Kernel-backed updater (assign / assign_add).
+
+    PRECONDITION: keys unique within the batch (callers dedupe; duplicate
+    handling is the merge path's job).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    loc = locate_kernel(state, cfg, keys, interpret=interpret)
+    vdim = state.values.shape[1]
+    if values.shape[1] < vdim:
+        values = jnp.concatenate(
+            [values, jnp.zeros((values.shape[0], vdim - values.shape[1]), values.dtype)],
+            axis=1,
+        )
+    rows = jnp.clip(loc.row, 0, state.values.shape[0] - 1)
+    new_values = _sc.scatter_rows(
+        state.values, rows, values, loc.found.astype(jnp.int32), add=add,
+        interpret=interpret,
+    )
+    return state._replace(values=new_values)
+
+
+def bucket_stats_kernel(state: HKVState, *, interpret: bool | None = None):
+    """(occ, min_hi, min_lo, argmin) per bucket via the tiled scan kernel."""
+    if interpret is None:
+        interpret = default_interpret()
+    b = state.key_hi.shape[0]
+    tile = 8 if b % 8 == 0 else 1
+    return _ss.bucket_stats(
+        state.key_hi, state.key_lo, state.score_hi, state.score_lo,
+        bucket_tile=tile, interpret=interpret,
+    )
+
+
+# Re-exported oracles for tests/benches
+ref = _ref

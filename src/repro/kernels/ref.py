@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose/equal).
+These are also the implementations XLA runs where a kernel is not
+profitable (tiny batches) — the wrapper in ops.py dispatches.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def digest_scan_ref(
+    tdigests: jax.Array,   # uint8  [B, S] table digest rows
+    tkey_hi: jax.Array,    # uint32 [B, S]
+    tkey_lo: jax.Array,    # uint32 [B, S]
+    buckets: jax.Array,    # int32  [N] bucket per query
+    qdigest: jax.Array,    # uint32 [N] query digest (widened for SMEM)
+    qkey_hi: jax.Array,    # uint32 [N]
+    qkey_lo: jax.Array,    # uint32 [N]
+) -> tuple[jax.Array, jax.Array]:
+    """(slot int32 [N], found int32 [N]) — Algorithm 1 over one bucket row.
+
+    Digest pre-filter then full key compare; the first matching slot wins
+    (at most one can match by the table's key-uniqueness invariant).
+    """
+    drow = tdigests[buckets].astype(jnp.uint32)
+    m = (drow == qdigest[:, None]) & (tkey_hi[buckets] == qkey_hi[:, None]) & (
+        tkey_lo[buckets] == qkey_lo[:, None]
+    )
+    found = jnp.any(m, axis=1).astype(jnp.int32)
+    slot = jnp.argmax(m, axis=1).astype(jnp.int32)
+    return slot, found
+
+
+def gather_rows_ref(
+    values: jax.Array,  # [R, D]
+    rows: jax.Array,    # int32 [N]
+    mask: jax.Array,    # int32/bool [N] — rows with mask==0 return zeros
+) -> jax.Array:
+    """Position-addressed value gather (§3.6): out[i] = values[rows[i]]."""
+    out = values[jnp.clip(rows, 0, values.shape[0] - 1)]
+    return jnp.where(mask.astype(bool)[:, None], out, jnp.zeros_like(out))
+
+
+def scatter_rows_ref(
+    values: jax.Array,  # [R, D]
+    rows: jax.Array,    # int32 [N] — must be unique where mask set
+    updates: jax.Array,  # [N, D]
+    mask: jax.Array,    # [N]
+    add: bool,
+) -> jax.Array:
+    """Updater-role write-back: values[rows[i]] (+)= updates[i] where mask."""
+    r = jnp.where(mask.astype(bool), rows, values.shape[0])  # OOB -> dropped
+    if add:
+        return values.at[r].add(updates.astype(values.dtype), mode="drop")
+    return values.at[r].set(updates.astype(values.dtype), mode="drop")
+
+
+def bucket_stats_ref(
+    tkey_hi: jax.Array,   # uint32 [B, S]
+    tkey_lo: jax.Array,   # uint32 [B, S]
+    score_hi: jax.Array,  # uint32 [B, S]
+    score_lo: jax.Array,  # uint32 [B, S]
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Per-bucket (occupancy, min-score hi, min-score lo, argmin slot).
+
+    Empty slots (all-ones key sentinel) are excluded from the min; a fully
+    empty bucket reports the all-ones max score and argmin slot 0.
+    """
+    occ_mask = ~((tkey_hi == jnp.uint32(0xFFFFFFFF)) & (tkey_lo == jnp.uint32(0xFFFFFFFF)))
+    occ = jnp.sum(occ_mask.astype(jnp.int32), axis=1)
+    ones = jnp.uint32(0xFFFFFFFF)
+    shi = jnp.where(occ_mask, score_hi, ones)
+    slo = jnp.where(occ_mask, score_lo, ones)
+    min_hi = jnp.min(shi, axis=1)
+    lo_cand = jnp.where(shi == min_hi[:, None], slo, ones)
+    min_lo = jnp.min(lo_cand, axis=1)
+    is_min = (shi == min_hi[:, None]) & (slo == min_lo[:, None])
+    argmin = jnp.argmax(is_min, axis=1).astype(jnp.int32)
+    return occ, min_hi, min_lo, argmin

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: updater-role value write-back (paper §3.5 updater path).
+
+assign / assign_add are the *non-structural* write role: they touch value
+rows in place, never bucket structure.  On TPU this is a row-indexed
+read-modify-write pipeline over the value plane, with the row stream
+scalar-prefetched and the target row aliased input->output so only touched
+rows move through VMEM.
+
+PRECONDITION (enforced by callers, asserted in tests): the masked row ids
+are unique within a batch.  The merge/assign paths dedupe before calling —
+the same invariant the paper's updater kernels get from their
+one-warp-per-key assignment.  Masked-out lanes rewrite the row unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scatter_kernel(add, rows_ref, mask_ref, upd_ref, val_ref, out_ref):
+    i = pl.program_id(0)
+    live = mask_ref[i] != 0
+    old = val_ref[0, :]
+    upd = upd_ref[0, :].astype(old.dtype)
+    new = old + upd if add else upd
+    out_ref[0, :] = jnp.where(live, new, old)
+
+
+@functools.partial(jax.jit, static_argnames=("add", "interpret"))
+def scatter_rows(values, rows, updates, mask, *, add: bool,
+                 interpret: bool = True):
+    """values[rows[i]] = (values[rows[i]] +)? updates[i]  where mask[i]."""
+    n = rows.shape[0]
+    d = values.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),   # mask
+            pl.BlockSpec((1, d), lambda i, r: (i, 0)),           # update row
+            pl.BlockSpec((1, d), lambda i, r: (r[i], 0)),        # value row (aliased)
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, r: (r[i], 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_scatter_kernel, add),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(values.shape, values.dtype),
+        input_output_aliases={3: 0},  # values plane updated in place
+        interpret=interpret,
+        name="hkv_scatter_rows",
+    )(rows, mask, updates, values)

@@ -1,0 +1,396 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract the roofline terms from the compiled artifact.
+
+The two lines above run before ANY other import — jax locks the device
+count at first init, and the dry-run (and only the dry-run) needs 512
+placeholder host devices to build the (2, 16, 16) multi-pod mesh.
+
+Per cell this script:
+  1. builds the full-size model and ShapeDtypeStruct inputs (no allocation),
+  2. jits the real step (train_step with optimizer / prefill / decode) with
+     NamedShardings from distributed.sharding,
+  3. .lower().compile() — success proves the sharding config is coherent
+     (no sharding mismatch, no unsupported collective),
+  4. records compiled.memory_analysis() (fits-per-device evidence),
+     compiled.cost_analysis() (FLOPs / bytes for §Roofline), and the
+     collective inventory parsed from compiled.as_text() (op kind, result
+     bytes, group size) for the collective roofline term.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh multi --out runs/dryrun
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --backend hkv
+"""
+
+import argparse
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_arch
+from repro.distributed import sharding as shard_rules
+from repro.distributed.table_sharding import ShardedHKVEmbedding
+from repro.embedding.dynamic import HKVEmbedding
+from repro.embedding.sparse_opt import SparseOptimizer
+from repro.launch.mesh import make_production_mesh
+from repro.optim import adafactor, adamw
+from repro.train.step import StepBuilder
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def parse_collectives(hlo_text: str):
+    """[(kind, result_bytes, group_size)] from the partitioned HLO."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        _, dt, dims, kind = m.groups()
+        if "-done" in line.split("=")[0]:
+            continue
+        size = _DTYPE_BYTES.get(dt, 4)
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        g = _GROUPS_RE.search(line)
+        if g:
+            group_size = int(g.group(2))
+        else:
+            gb = _GROUPS_BRACE_RE.search(line)
+            group_size = len(gb.group(1).split(",")) if gb else 1
+        out.append({"kind": kind, "result_bytes": size, "group_size": group_size})
+    return out
+
+
+def collective_wire_bytes(colls) -> float:
+    """Per-device bytes on the wire, ring-algorithm accounting:
+    all-reduce: 2 x N x (g-1)/g; all-gather (N = result): N x (g-1)/g;
+    reduce-scatter (N = input ~ result x g): N x (g-1)/g; all-to-all:
+    N x (g-1)/g; collective-permute: N."""
+    total = 0.0
+    for c in colls:
+        n, g = c["result_bytes"], max(c["group_size"], 1)
+        if g == 1:
+            continue
+        f = (g - 1) / g
+        if c["kind"] == "all-reduce":
+            total += 2 * n * f
+        elif c["kind"] == "collective-permute":
+            total += n
+        else:
+            total += n * f
+    return total
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_specs(arch, shape, mesh, d_model):
+    """ShapeDtypeStructs + NamedShardings for one training/prefill batch."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    b, s = shape.global_batch, shape.seq
+    bspec = P(dp, None) if b % dp_size == 0 else P(None, None)
+    batch = {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+    }
+    specs = {
+        "tokens": NamedSharding(mesh, bspec),
+        "labels": NamedSharding(mesh, bspec),
+    }
+    if arch.lm.frontend == "vision":
+        sv = arch.vision_tokens
+        batch["frontend_embeds"] = _sds((b, sv, d_model), jnp.bfloat16)
+        specs["frontend_embeds"] = NamedSharding(
+            mesh, P(bspec[0], None, None)
+        )
+        batch["mrope_positions"] = _sds((3, b, s), jnp.int32)
+        specs["mrope_positions"] = NamedSharding(mesh, P(None, bspec[0], None))
+    return batch, specs
+
+
+def _opt_for(arch_name: str):
+    # llama4's 395 B params need factored moments to fit HBM (see DESIGN.md)
+    if arch_name.startswith("llama4"):
+        return adafactor(), "adafactor"
+    return adamw(), "adamw"
+
+
+def _opt_specs(opt_name, opt_state_shape, pspecs, mesh):
+    if opt_name == "adamw":
+        specs = {
+            "mu": pspecs, "nu": pspecs,
+            "count": P(),
+        }
+    else:  # adafactor: factored moments are small; replicate
+        specs = jax.tree.map(lambda _: P(), opt_state_shape)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_and_compile(arch_name: str, shape_name: str, mesh_kind: str,
+                      backend: str = "dense", scan_train: bool = False):
+    arch = get_arch(arch_name)
+    shape = arch.shape(shape_name)
+    if shape.skip:
+        return {"arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
+                "backend": backend, "skipped": shape.skip}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    model = arch.model()
+    if scan_train:
+        # fast mode for the multi-pod coherence pass: scan-over-layers for
+        # EVERY cell kind compiles ~5-10x faster and exercises the identical
+        # sharding decisions; FLOP/memory fidelity lives in the single-pod
+        # (unrolled) artifacts that feed §Roofline.
+        import dataclasses as _dc
+
+        from repro.models.lm import CompositeLM as _CLM
+
+        model = _CLM(_dc.replace(arch.lm, scan_layers=True))
+    elif shape.kind == "train" and arch.family == "moe":
+        # MoE train graphs are compile-time-bound when unrolled on this
+        # 1-core dev container; scan-over-layers keeps the dry-run cheap.
+        # Caveat recorded in EXPERIMENTS.md §Dry-run: scanned-loop cells
+        # under-report FLOPs (XLA counts loop bodies once) and over-report
+        # temp memory (scan-linearization stacks flash residuals); the
+        # roofline uses analytic FLOPs for these cells.
+        import dataclasses as _dc
+
+        from repro.models.lm import CompositeLM as _CLM
+
+        model = _CLM(_dc.replace(arch.lm, scan_layers=True))
+    t0 = time.time()
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = shard_rules.param_specs(params_shape)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+    record = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
+        "backend": backend, "kind": shape.kind,
+        "devices": int(np.prod(list(mesh.shape.values()))),
+        "params": arch.param_count(),
+    }
+
+    with mesh:
+        if shape.kind == "train":
+            opt, opt_name = _opt_for(arch_name)
+            opt_shape = jax.eval_shape(opt.init, params_shape)
+            osh = _opt_specs(opt_name, opt_shape, pspecs, mesh)
+            batch, bsh = _batch_specs(arch, shape, mesh, arch.lm.d_model)
+            if backend == "hkv":
+                emb = ShardedHKVEmbedding(
+                    emb=HKVEmbedding(
+                        capacity=_hkv_capacity(arch.lm.vocab),
+                        dim=arch.lm.d_model,
+                        optimizer=SparseOptimizer("rowwise_adagrad"),
+                    ),
+                    axis_names=tuple(mesh.axis_names),
+                )
+                import dataclasses as _dc
+
+                hkv_model = type(model)(_dc.replace(
+                    arch.lm, embedding_backend="hkv", tied_head=False))
+                hkv_params_shape = jax.eval_shape(
+                    hkv_model.init, jax.random.PRNGKey(0))
+                pspecs = shard_rules.param_specs(hkv_params_shape)
+                psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+                opt_shape = jax.eval_shape(opt.init, hkv_params_shape)
+                osh = _opt_specs(opt_name, opt_shape, pspecs, mesh)
+                builder = StepBuilder(hkv_model, opt, sharded_emb=emb, mesh=mesh)
+                n_shards = record["devices"]
+                local = emb.local_embedding(n_shards)
+                local_shape = jax.eval_shape(local.create)
+                # GLOBAL table ShapeDtypeStructs: local bucket/value planes
+                # concatenate over the n_shards table shards; clocks replicate
+                table_shape = jax.tree.map(
+                    lambda a: jax.ShapeDtypeStruct(
+                        (a.shape[0] * n_shards,) + a.shape[1:], a.dtype
+                    ) if a.ndim >= 1 else a,
+                    local_shape,
+                )
+                tsh = jax.tree.map(
+                    lambda s: NamedSharding(mesh, s), emb.state_specs())
+                fn = jax.jit(
+                    builder.train_step_hkv,
+                    in_shardings=(psh, osh, tsh, bsh),
+                    donate_argnums=(0, 1, 2),
+                )
+                lowered = fn.lower(hkv_params_shape, opt_shape, table_shape, batch)
+            else:
+                builder = StepBuilder(model, opt)
+                fn = jax.jit(
+                    builder.train_step,
+                    in_shardings=(psh, osh, bsh),
+                    donate_argnums=(0, 1),
+                )
+                lowered = fn.lower(params_shape, opt_shape, batch)
+
+        elif shape.kind == "prefill":
+            batch, bsh = _batch_specs(arch, shape, mesh, arch.lm.d_model)
+            extra_keys = [k for k in batch if k not in ("tokens", "labels")]
+
+            def prefill_fn(params, tokens, *extras):
+                kw = dict(zip(extra_keys, extras))
+                return model.prefill(params, tokens, max_len=shape.seq, **kw)
+
+            fn = jax.jit(
+                prefill_fn,
+                in_shardings=(psh, bsh["tokens"], *[bsh[k] for k in extra_keys]),
+            )
+            lowered = fn.lower(
+                params_shape, batch["tokens"], *[batch[k] for k in extra_keys]
+            )
+
+        else:  # decode
+            b = shape.global_batch
+            dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+            dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+            state_shape = jax.eval_shape(
+                lambda: model.init_decode_state(batch=b, max_len=shape.seq)
+            )
+            kv_div = all(
+                seg.block.kind != "attn" or seg.block.kv_heads % mesh.shape["model"] == 0
+                for seg in (tuple(arch.lm.prelude) + tuple(arch.lm.segments))
+            )
+            sspecs = shard_rules.decode_state_specs(mesh, state_shape, kv_div)
+            if b % dp_size != 0:  # long_500k batch=1: replicate batch dim
+                sspecs = jax.tree.map(
+                    lambda s: P(*(None if a == "data" else a for a in s)), sspecs,
+                    is_leaf=lambda x: isinstance(x, P),
+                )
+            ssh = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
+                               is_leaf=lambda x: isinstance(x, P))
+            tok_spec = NamedSharding(mesh, P(dp) if b % dp_size == 0 else P(None))
+            toks = _sds((b,), jnp.int32)
+
+            fn = jax.jit(
+                model.decode_step,
+                in_shardings=(psh, tok_spec, ssh),
+                donate_argnums=(2,),
+            )
+            lowered = fn.lower(params_shape, toks, state_shape)
+
+        compiled = lowered.compile()
+
+    record["compile_s"] = round(time.time() - t0, 1)
+    ma = compiled.memory_analysis()
+    record["memory"] = {
+        "argument_bytes_per_device": int(ma.argument_size_in_bytes),
+        "output_bytes_per_device": int(ma.output_size_in_bytes),
+        "temp_bytes_per_device": int(ma.temp_size_in_bytes),
+        "alias_bytes_per_device": int(ma.alias_size_in_bytes),
+        "peak_estimate_per_device": int(
+            ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+        ),
+    }
+    ca = compiled.cost_analysis() or {}
+    record["cost"] = {
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_accessed_per_device": float(ca.get("bytes accessed", 0.0)),
+    }
+    colls = parse_collectives(compiled.as_text())
+    agg = {}
+    for c in colls:
+        k = c["kind"]
+        agg.setdefault(k, {"count": 0, "result_bytes": 0})
+        agg[k]["count"] += 1
+        agg[k]["result_bytes"] += c["result_bytes"]
+    record["collectives"] = agg
+    record["collective_wire_bytes_per_device"] = collective_wire_bytes(colls)
+    return record
+
+
+def _hkv_capacity(vocab: int) -> int:
+    cap = max(1, (2 * vocab) // 128) * 128  # 2x vocab working-set headroom
+    return cap
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--backend", choices=("dense", "hkv"), default="dense")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="resume a partial grid: skip cells with artifacts")
+    ap.add_argument("--scan-train", action="store_true",
+                    help="scan-over-layers for train cells (fast sharding-"
+                         "coherence pass; see build_and_compile)")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for name in ARCH_NAMES:
+            arch = get_arch(name)
+            for sh in arch.shapes:
+                cells.append((name, sh.name))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape))
+
+    os.makedirs(os.path.join(args.out, args.mesh), exist_ok=True)
+    for arch_name, shape_name in cells:
+        tag = f"{arch_name}__{shape_name}__{args.backend}"
+        path = os.path.join(args.out, args.mesh, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            with open(path) as f:
+                prev = json.load(f)
+            if "error" not in prev:
+                print(f"=== {tag} on {args.mesh} === (cached)", flush=True)
+                continue
+        print(f"=== {tag} on {args.mesh} ===", flush=True)
+        try:
+            rec = build_and_compile(arch_name, shape_name, args.mesh,
+                                    args.backend, scan_train=args.scan_train)
+        except Exception as e:  # noqa: BLE001 — recorded, not fatal for --all
+            rec = {"arch": arch_name, "shape": shape_name, "mesh": args.mesh,
+                   "backend": args.backend, "error": f"{type(e).__name__}: {e}"}
+            print(f"    FAILED: {rec['error']}", flush=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        if "error" not in rec and "skipped" not in rec:
+            print(
+                f"    ok compile={rec['compile_s']}s "
+                f"flops/dev={rec['cost']['flops_per_device']:.3e} "
+                f"peak_mem/dev={rec['memory']['peak_estimate_per_device']/2**30:.2f}GiB "
+                f"coll_wire/dev={rec['collective_wire_bytes_per_device']/2**20:.1f}MiB",
+                flush=True,
+            )
+        elif "skipped" in rec:
+            print(f"    SKIP: {rec['skipped']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.lm import CompositeLM, LMConfig, StackSegment  # noqa: F401
+from repro.models.blocks import BlockCfg  # noqa: F401

@@ -1,0 +1,444 @@
+"""Block zoo: attention (GQA/MQA/SWA/M-RoPE, dense-FFN or MoE), Mamba2 (SSD),
+mLSTM and sLSTM — each with a full-sequence training path and a single-token
+decode path over an explicit state (KV cache or recurrent state).
+
+Every block is a pure (cfg, params, x, ...) -> x function; parameters are
+plain dicts so layer stacks can be vmapped/scanned and sharded with
+tree-structured PartitionSpecs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm
+from repro.models.common import (
+    activation,
+    apply_mrope,
+    apply_rope,
+    blocked_causal_attention,
+    decode_attention,
+    dense_init,
+    init_rms,
+    rms_norm,
+)
+from repro.models.moe import MoECfg, moe_apply, moe_init
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCfg:
+    kind: str                       # attn | mamba2 | mlstm | slstm
+    d_model: int
+    # -- attn --
+    heads: int = 0
+    kv_heads: int = 0
+    head_dim: int = 0               # 0 -> d_model // heads
+    qkv_bias: bool = False
+    window: Optional[int] = None    # SWA band
+    rope: str = "rope"              # rope | mrope | none
+    rope_theta: float = 10000.0
+    d_ff: int = 0
+    act: str = "silu"
+    gated: bool = True
+    moe: Optional[MoECfg] = None
+    # -- ssm family --
+    d_state: int = 64               # N
+    ssm_heads: int = 8              # H
+    expand: int = 2                 # d_inner = expand * d_model
+    conv_width: int = 4
+    qkv_block: int = 4              # mLSTM block-diagonal q/k/v blocksize
+    # --
+    norm_eps: float = 1e-6
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.heads, 1))
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def ssm_headdim(self) -> int:
+        return self.d_inner // self.ssm_heads
+
+
+class PosCtx(NamedTuple):
+    """Positional context threaded through attention blocks."""
+
+    positions: jax.Array            # [B, S] (train/prefill) or [B, 1] (decode)
+    mrope_positions: Optional[jax.Array] = None  # [3, B, S]
+    step: Optional[jax.Array] = None             # decode: current length
+
+
+# =============================================================================
+# Attention block (+ dense or MoE FFN)
+# =============================================================================
+
+
+def _attn_init(cfg: BlockCfg, key) -> dict:
+    ks = jax.random.split(key, 8)
+    hd, hq, hkv = cfg.hd, cfg.heads, cfg.kv_heads
+    p = {
+        "ln1": init_rms(cfg.d_model),
+        "wq": dense_init(ks[0], cfg.d_model, hq * hd),
+        "wk": dense_init(ks[1], cfg.d_model, hkv * hd),
+        "wv": dense_init(ks[2], cfg.d_model, hkv * hd),
+        "wo": dense_init(ks[3], hq * hd, cfg.d_model, scale=1.0 / math.sqrt(hq * hd)),
+        "ln2": init_rms(cfg.d_model),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * hd,), jnp.float32)
+    if cfg.moe is not None:
+        p["moe"] = moe_init(cfg.moe, ks[4])
+    else:
+        p["ffn_wi"] = dense_init(ks[5], cfg.d_model, cfg.d_ff * (2 if cfg.gated else 1))
+        p["ffn_wo"] = dense_init(ks[6], cfg.d_ff, cfg.d_model)
+    return p
+
+
+def _qkv(cfg: BlockCfg, p: dict, x: jax.Array, pos: PosCtx):
+    b, s, _ = x.shape
+    hd, hq, hkv = cfg.hd, cfg.heads, cfg.kv_heads
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = h @ p["wq"].astype(h.dtype)
+    k = h @ p["wk"].astype(h.dtype)
+    v = h @ p["wv"].astype(h.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(h.dtype)
+        k = k + p["bk"].astype(h.dtype)
+        v = v + p["bv"].astype(h.dtype)
+    q = q.reshape(b, s, hq, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if cfg.rope == "rope":
+        q = apply_rope(q, pos.positions, cfg.rope_theta)
+        k = apply_rope(k, pos.positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        sec = _mrope_sections(hd)
+        q = apply_mrope(q, pos.mrope_positions, cfg.rope_theta, sec)
+        k = apply_mrope(k, pos.mrope_positions, cfg.rope_theta, sec)
+    return q, k, v
+
+
+def _mrope_sections(hd: int):
+    """(t, h, w) frequency split covering head_dim/2 (Qwen2-VL uses 16/24/24
+    at hd=128; scale proportionally elsewhere)."""
+    half = hd // 2
+    t = half // 4
+    hw = (half - t) // 2
+    return (t, hw, half - t - hw)
+
+
+def _ffn(cfg: BlockCfg, p: dict, x: jax.Array):
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        b, s, d = h.shape
+        y, aux = moe_apply(cfg.moe, p["moe"], h.reshape(b * s, d))
+        return y.reshape(b, s, d), aux
+    act = activation(cfg.act)
+    u = h @ p["ffn_wi"].astype(h.dtype)
+    if cfg.gated:
+        ug, uu = jnp.split(u, 2, axis=-1)
+        u = act(ug) * uu
+    else:
+        u = act(u)
+    return u @ p["ffn_wo"].astype(h.dtype), {}
+
+
+def _attn_train(cfg: BlockCfg, p: dict, x: jax.Array, pos: PosCtx):
+    q, k, v = _qkv(cfg, p, x, pos)
+    o = blocked_causal_attention(q, k, v, window=cfg.window)
+    b, s, _, _ = o.shape
+    x = x + (o.reshape(b, s, -1) @ p["wo"].astype(x.dtype))
+    f, aux = _ffn(cfg, p, x)
+    return x + f, aux
+
+
+def _attn_state_init(cfg: BlockCfg, batch: int, max_len: int, dtype) -> dict:
+    cache_len = min(max_len, cfg.window) if cfg.window else max_len
+    shape = (batch, cache_len, cfg.kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _attn_decode(cfg: BlockCfg, p: dict, x: jax.Array, state: dict, pos: PosCtx):
+    """x: [B, 1, d]; SWA caches are ring buffers of length `window`."""
+    q, k, v = _qkv(cfg, p, x, pos)
+    cache_len = state["k"].shape[1]
+    step = pos.step
+    widx = jax.lax.rem(step, cache_len) if cfg.window else step
+    kc = jax.lax.dynamic_update_slice(state["k"], k.astype(state["k"].dtype), (0, widx, 0, 0))
+    vc = jax.lax.dynamic_update_slice(state["v"], v.astype(state["v"].dtype), (0, widx, 0, 0))
+    cur = jnp.minimum(step + 1, cache_len)
+    o = decode_attention(q, kc, vc, cur)
+    b = x.shape[0]
+    x = x + (o.reshape(b, 1, -1) @ p["wo"].astype(x.dtype))
+    f, _ = _ffn(cfg, p, x)
+    return x + f, {"k": kc, "v": vc}
+
+
+# =============================================================================
+# Mamba2 block (SSD via chunked GLA)
+# =============================================================================
+
+
+def _mamba2_init(cfg: BlockCfg, key) -> dict:
+    ks = jax.random.split(key, 4)
+    din, n, h = cfg.d_inner, cfg.d_state, cfg.ssm_heads
+    proj_out = 2 * din + 2 * n + h  # z, x, B, C, dt
+    return {
+        "ln": init_rms(cfg.d_model),
+        "in_proj": dense_init(ks[0], cfg.d_model, proj_out),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, din)) * 0.1).astype(jnp.float32),
+        "conv_b": jnp.zeros((din,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),       # a = -exp(A_log) in [-1, -e^x)
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),
+        "out_norm": init_rms(din),
+        "out_proj": dense_init(ks[2], din, cfg.d_model),
+    }
+
+
+def _mamba2_split(cfg: BlockCfg, p: dict, x: jax.Array):
+    din, n, h = cfg.d_inner, cfg.d_state, cfg.ssm_heads
+    u = rms_norm(x, p["ln"], cfg.norm_eps) @ p["in_proj"].astype(x.dtype)
+    z, xs, Bm, Cm, dt = jnp.split(u, [din, 2 * din, 2 * din + n, 2 * din + 2 * n], axis=-1)
+    return z, xs, Bm, Cm, dt
+
+
+def _mamba2_gla_inputs(cfg: BlockCfg, p: dict, xs, Bm, Cm, dt):
+    b, s, _ = xs.shape
+    h, pd, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.d_state
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # [B,S,H]
+    log_a = -jnp.exp(p["A_log"]) * dt                                # [B,S,H] <= 0
+    xh = xs.reshape(b, s, h, pd)
+    v = xh * dt[..., None].astype(xh.dtype)                          # dt-scaled input
+    k = jnp.broadcast_to(Bm[:, :, None, :], (b, s, h, n))
+    q = jnp.broadcast_to(Cm[:, :, None, :], (b, s, h, n))
+    return q, k, v, log_a, xh
+
+
+def _mamba2_out(cfg: BlockCfg, p: dict, x, y, xh, z):
+    b, s = x.shape[0], x.shape[1]
+    y = y + xh * p["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(b, s, cfg.d_inner) * jax.nn.silu(z)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    return x + y @ p["out_proj"].astype(x.dtype)
+
+
+def _causal_conv(xs: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over [B, S, C] with taps [W, C]."""
+    wlen = w.shape[0]
+    pad = jnp.pad(xs, ((0, 0), (wlen - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xs.shape[1], :] * w[i][None, None, :].astype(xs.dtype)
+        for i in range(wlen)
+    )
+    return jax.nn.silu(out + b.astype(xs.dtype))
+
+
+def _mamba2_train(cfg: BlockCfg, p: dict, x: jax.Array, pos: PosCtx):
+    z, xs, Bm, Cm, dt = _mamba2_split(cfg, p, x)
+    xs = _causal_conv(xs, p["conv_w"], p["conv_b"])
+    q, k, v, log_a, xh = _mamba2_gla_inputs(cfg, p, xs, Bm, Cm, dt)
+    y, _ = ssm.chunked_gla(q, k, v, log_a)
+    return _mamba2_out(cfg, p, x, y, xh, z), {}
+
+
+def _mamba2_state_init(cfg: BlockCfg, batch: int, max_len: int, dtype) -> dict:
+    return {
+        "gla": jnp.zeros((batch, cfg.ssm_heads, cfg.d_state, cfg.ssm_headdim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner), dtype),
+    }
+
+
+def _mamba2_decode(cfg: BlockCfg, p: dict, x: jax.Array, state: dict, pos: PosCtx):
+    z, xs, Bm, Cm, dt = _mamba2_split(cfg, p, x)          # all [B, 1, *]
+    hist = jnp.concatenate([state["conv"].astype(xs.dtype), xs], axis=1)
+    xs_c = _causal_conv(hist, p["conv_w"], p["conv_b"])[:, -1:, :]
+    new_conv = hist[:, 1:, :].astype(state["conv"].dtype)
+    q, k, v, log_a, xh = _mamba2_gla_inputs(cfg, p, xs_c, Bm, Cm, dt)
+    y, gla = ssm.gla_step(state["gla"], q[:, 0], k[:, 0], v[:, 0], log_a[:, 0])
+    out = _mamba2_out(cfg, p, x, y[:, None], xh, z)
+    return out, {"gla": gla, "conv": new_conv}
+
+
+# =============================================================================
+# mLSTM block (xLSTM matrix memory via chunked GLA with a normalizer column)
+# =============================================================================
+
+
+def _mlstm_init(cfg: BlockCfg, key) -> dict:
+    ks = jax.random.split(key, 6)
+    din = cfg.d_inner
+    qb = cfg.qkv_block
+    # q/k/v are BLOCK-DIAGONAL projections (xLSTM's qkv_proj_blocksize):
+    # [din/qb, qb, qb] — the parameter diet that puts xlstm-1.3b at 1.3 B.
+    def bd(key):
+        return (jax.random.normal(key, (din // qb, qb, qb)) / math.sqrt(qb)).astype(
+            jnp.float32
+        )
+
+    return {
+        "ln": init_rms(cfg.d_model),
+        "up": dense_init(ks[0], cfg.d_model, 2 * din),   # u (mixer) + z (gate)
+        "wq": bd(ks[1]),
+        "wk": bd(ks[2]),
+        "wv": bd(ks[3]),
+        "wgate": dense_init(ks[4], din, 2 * cfg.ssm_heads),  # i, f pre-activations
+        "down": dense_init(ks[5], din, cfg.d_model),
+    }
+
+
+def _block_diag_proj(x: jax.Array, w: jax.Array) -> jax.Array:
+    """[..., din] @ block-diag([G, qb, qb]) -> [..., din]."""
+    g, qb, _ = w.shape
+    xb = x.reshape(x.shape[:-1] + (g, qb))
+    out = jnp.einsum("...gb,gbc->...gc", xb, w.astype(x.dtype))
+    return out.reshape(x.shape)
+
+
+def _mlstm_qkv(cfg: BlockCfg, p: dict, x: jax.Array):
+    b, s, _ = x.shape
+    din, h = cfg.d_inner, cfg.ssm_heads
+    pd = din // h
+    u, z = jnp.split(rms_norm(x, p["ln"], cfg.norm_eps) @ p["up"].astype(x.dtype), 2, -1)
+    q = _block_diag_proj(u, p["wq"]).reshape(b, s, h, pd) / math.sqrt(pd)
+    k = _block_diag_proj(u, p["wk"]).reshape(b, s, h, pd) / math.sqrt(pd)
+    v = _block_diag_proj(u, p["wv"]).reshape(b, s, h, pd)
+    gates = u @ p["wgate"].astype(u.dtype)
+    i_pre, f_pre = jnp.split(gates.astype(jnp.float32), 2, -1)  # [B,S,H]
+    log_f = -jax.nn.softplus(-f_pre)                             # log sigmoid(f)
+    ig = jax.nn.sigmoid(i_pre)  # sigmoid input gate (stabilized adaptation)
+    # normalizer column: v_aug = i * [v, 1]
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    v_aug = jnp.concatenate([v, ones], axis=-1) * ig[..., None].astype(v.dtype)
+    return q, k, v_aug, log_f, z
+
+
+def _mlstm_out(cfg: BlockCfg, p: dict, x, y_aug, z):
+    y, norm = y_aug[..., :-1], y_aug[..., -1:]
+    y = y / jnp.maximum(jnp.abs(norm), 1.0)
+    b, s = x.shape[0], x.shape[1]
+    h = y.reshape(b, s, cfg.d_inner) * jax.nn.silu(z)
+    return x + h @ p["down"].astype(x.dtype)
+
+
+def _mlstm_train(cfg: BlockCfg, p: dict, x: jax.Array, pos: PosCtx):
+    q, k, v_aug, log_f, z = _mlstm_qkv(cfg, p, x)
+    y_aug, _ = ssm.chunked_gla(q, k, v_aug, log_f)
+    return _mlstm_out(cfg, p, x, y_aug, z), {}
+
+
+def _mlstm_state_init(cfg: BlockCfg, batch: int, max_len: int, dtype) -> dict:
+    pd = cfg.d_inner // cfg.ssm_heads
+    return {"gla": jnp.zeros((batch, cfg.ssm_heads, pd, pd + 1), jnp.float32)}
+
+
+def _mlstm_decode(cfg: BlockCfg, p: dict, x: jax.Array, state: dict, pos: PosCtx):
+    q, k, v_aug, log_f, z = _mlstm_qkv(cfg, p, x)
+    y_aug, gla = ssm.gla_step(state["gla"], q[:, 0], k[:, 0], v_aug[:, 0], log_f[:, 0])
+    return _mlstm_out(cfg, p, x, y_aug[:, None], z), {"gla": gla}
+
+
+# =============================================================================
+# sLSTM block (scalar memory, exponential gating with stabilizer; sequential)
+# =============================================================================
+
+
+def _slstm_init(cfg: BlockCfg, key) -> dict:
+    ks = jax.random.split(key, 3)
+    d, h = cfg.d_model, cfg.ssm_heads
+    pd = d // h
+    return {
+        "ln": init_rms(d),
+        "wx": dense_init(ks[0], d, 4 * d),                  # z, i, f, o from input
+        "r": (jax.random.normal(ks[1], (h, pd, 4 * pd)) / math.sqrt(pd)).astype(jnp.float32),
+        "out": dense_init(ks[2], d, d),
+    }
+
+
+def _slstm_cell(cfg: BlockCfg, p: dict, xg, carry):
+    """One step. xg: [B, 4d] input gate pre-activations; carry: (c,n,h,m)."""
+    b = xg.shape[0]
+    d, hh = cfg.d_model, cfg.ssm_heads
+    pd = d // hh
+    c, n, hprev, m = carry
+    rec = jnp.einsum("bhp,hpq->bhq", hprev, p["r"].astype(hprev.dtype))  # [B,H,4pd]
+    g = xg.reshape(b, hh, 4 * pd) + rec
+    zg, ig, fg, og = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+    log_f = -jax.nn.softplus(-fg)
+    m_new = jnp.maximum(log_f + m, ig)                     # stabilizer
+    i_s = jnp.exp(ig - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c = f_s * c + i_s * jnp.tanh(zg)
+    n = f_s * n + i_s
+    h = jax.nn.sigmoid(og) * c / jnp.maximum(n, 1.0)
+    return (c, n, h.astype(hprev.dtype), m_new), h
+
+
+def _slstm_state_init(cfg: BlockCfg, batch: int, max_len: int, dtype):
+    hh, pd = cfg.ssm_heads, cfg.d_model // cfg.ssm_heads
+    z32 = jnp.zeros((batch, hh, pd), jnp.float32)
+    return {"c": z32, "n": z32, "h": jnp.zeros((batch, hh, pd), dtype),
+            "m": jnp.full((batch, hh, pd), -1e30, jnp.float32)}
+
+
+def _slstm_train(cfg: BlockCfg, p: dict, x: jax.Array, pos: PosCtx):
+    b, s, d = x.shape
+    xg = rms_norm(x, p["ln"], cfg.norm_eps) @ p["wx"].astype(x.dtype)  # [B,S,4d]
+    st = _slstm_state_init(cfg, b, s, x.dtype)
+    carry = (st["c"], st["n"], st["h"], st["m"])
+
+    def step(carry, xg_t):
+        return _slstm_cell(cfg, p, xg_t, carry)
+
+    _, hs = jax.lax.scan(step, carry, xg.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    return x + h @ p["out"].astype(x.dtype), {}
+
+
+def _slstm_decode(cfg: BlockCfg, p: dict, x: jax.Array, state: dict, pos: PosCtx):
+    xg = rms_norm(x, p["ln"], cfg.norm_eps) @ p["wx"].astype(x.dtype)
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    carry, h = _slstm_cell(cfg, p, xg[:, 0], carry)
+    b = x.shape[0]
+    out = x + h.reshape(b, 1, -1).astype(x.dtype) @ p["out"].astype(x.dtype)
+    return out, {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+
+
+# =============================================================================
+# dispatch tables
+# =============================================================================
+
+_INIT = {"attn": _attn_init, "mamba2": _mamba2_init, "mlstm": _mlstm_init,
+         "slstm": _slstm_init}
+_TRAIN = {"attn": _attn_train, "mamba2": _mamba2_train, "mlstm": _mlstm_train,
+          "slstm": _slstm_train}
+_STATE = {"attn": _attn_state_init, "mamba2": _mamba2_state_init,
+          "mlstm": _mlstm_state_init, "slstm": _slstm_state_init}
+_DECODE = {"attn": _attn_decode, "mamba2": _mamba2_decode,
+           "mlstm": _mlstm_decode, "slstm": _slstm_decode}
+
+
+def block_init(cfg: BlockCfg, key) -> dict:
+    return _INIT[cfg.kind](cfg, key)
+
+
+def block_train(cfg: BlockCfg, params: dict, x: jax.Array, pos: PosCtx):
+    return _TRAIN[cfg.kind](cfg, params, x, pos)
+
+
+def block_state_init(cfg: BlockCfg, batch: int, max_len: int, dtype) -> dict:
+    return _STATE[cfg.kind](cfg, batch, max_len, dtype)
+
+
+def block_decode(cfg: BlockCfg, params: dict, x: jax.Array, state: dict, pos: PosCtx):
+    return _DECODE[cfg.kind](cfg, params, x, state, pos)

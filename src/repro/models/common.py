@@ -1,0 +1,356 @@
+"""Shared model machinery: norms, position encodings, attention primitives.
+
+Attention is memory-bounded by construction: the full-sequence path is a
+flash-style two-level blocked computation (lax.scan over KV chunks with an
+online-softmax carry), so a 32 k-token prefill never materializes an
+S x S score matrix — the working set is q_block x kv_chunk.  Sliding-window
+(SWA) archs restrict the same machinery with a band mask.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def init_rms(d: int) -> jax.Array:
+    return jnp.zeros((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Position encodings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [B, S, H, Dh], positions: [B, S] int32."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, Dh/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions3: jax.Array, theta: float = 10000.0,
+    sections=(16, 24, 24),
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: positions3 [3, B, S] = (t, h, w) ids; the
+    head_dim/2 frequency slots are split into (t, h, w) sections."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # [Dh/2]
+    sec = np.cumsum((0,) + tuple(sections))
+    assert sec[-1] == dh // 2, "mrope sections must cover head_dim/2"
+    parts = []
+    for i in range(3):
+        ang_i = positions3[i][..., None].astype(jnp.float32) * freqs[sec[i] : sec[i + 1]]
+        parts.append(ang_i)
+    ang = jnp.concatenate(parts, axis=-1)  # [B, S, Dh/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions: jax.Array, d_model: int) -> jax.Array:
+    """MusicGen-style sinusoidal position embedding. positions: [B, S]."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# Blocked causal attention (flash-style, pure JAX)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _band_mask(q_pos, kv_pos, window, s_valid):
+    mask = q_pos[:, None] >= kv_pos[None, :]
+    if window is not None:
+        mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+    mask &= (kv_pos < s_valid)[None, :]
+    return mask
+
+
+def _chunk_live(qi, kj, q_chunk, kv_chunk, window):
+    """Is any (q, kv) pair of this chunk pair inside the causal band?"""
+    last_q = qi * q_chunk + q_chunk - 1
+    first_q = qi * q_chunk
+    first_kv = kj * kv_chunk
+    last_kv = kj * kv_chunk + kv_chunk - 1
+    live = last_q >= first_kv
+    if window is not None:
+        live &= (first_q - last_kv) < window
+    return live
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, window, q_chunk, kv_chunk, s_valid):
+    out, _ = _flash_fwd_impl(q, k, v, window, q_chunk, kv_chunk, s_valid)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, window, q_chunk, kv_chunk, s_valid):
+    """Grouped-GQA flash forward: q [B,S,Hq,Dh], k/v [B,S,Hkv,Dh].
+
+    KV heads are NEVER repeated to Hq — the einsums carry a (group, rep)
+    structure — so residuals (and dk/dv accumulators in the backward) stay
+    at Hkv width: an Hq/Hkv (up to 8x) memory saving for GQA/MQA archs.
+    Returns (out [B,S,Hq,Dh], lse [nq,B,G,R,qc]) — O(S*Dh) residuals.
+    """
+    b, s, hq, dh = q.shape
+    g = k.shape[2]
+    r = hq // g
+    nq, nkv = s // q_chunk, s // kv_chunk
+    scale = 1.0 / math.sqrt(dh)
+    qb = q.reshape(b, nq, q_chunk, g, r, dh).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(b, nkv, kv_chunk, g, dh).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nkv, kv_chunk, g, dh).transpose(1, 0, 3, 2, 4)
+    q_pos_base = jnp.arange(q_chunk)
+    kv_pos_base = jnp.arange(kv_chunk)
+
+    def per_qchunk(args):
+        qi, qc = args
+        q_pos = qi * q_chunk + q_pos_base
+
+        def per_kvchunk(carry, inp):
+            m, l, acc = carry
+            kj, kc, vc = inp
+
+            def attend(args):
+                m, l, acc = args
+                sc = jnp.einsum("bgrqd,bgkd->bgrqk", qc, kc,
+                                preferred_element_type=jnp.float32) * scale
+                mask = _band_mask(q_pos, kj * kv_chunk + kv_pos_base, window, s_valid)
+                sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+                m_new = jnp.maximum(m, sc.max(axis=-1))
+                p = jnp.exp(sc - m_new[..., None])
+                alpha = jnp.exp(m - m_new)
+                l_new = l * alpha + p.sum(axis=-1)
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bgrqk,bgkd->bgrqd", p.astype(vc.dtype), vc,
+                    preferred_element_type=jnp.float32)
+                return m_new, l_new, acc_new
+
+            live = _chunk_live(qi, kj, q_chunk, kv_chunk, window)
+            m, l, acc = jax.lax.cond(live, attend, lambda a: a, (m, l, acc))
+            return (m, l, acc), None
+
+        m0 = jnp.full((b, g, r, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, g, r, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, g, r, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(per_kvchunk, (m0, l0, a0),
+                                      (jnp.arange(nkv), kb, vb))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, lse
+
+    outs, lses = jax.lax.map(per_qchunk, (jnp.arange(nq), qb))
+    # outs: [nq, B, G, R, qc, dh] -> [B, S, Hq, dh]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, hq, dh)
+    return out, lses  # lses: [nq, B, G, R, qc]
+
+
+def _flash_fwd(q, k, v, window, q_chunk, kv_chunk, s_valid):
+    out, lse = _flash_fwd_impl(q, k, v, window, q_chunk, kv_chunk, s_valid)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(window, q_chunk, kv_chunk, s_valid, res, dout):
+    """Flash backward: recompute p per chunk pair; O(S*Dh) live memory.
+
+    The `tether` term (== 0.0, but data-dependent on the cotangent) is
+    load-bearing: under lax.scan differentiation, partial evaluation hoists
+    any cotangent-independent computation of this function into the FORWARD
+    sweep and stacks it per layer x per chunk pair — resurrecting the
+    O(S^2) residuals flash attention exists to avoid.  Tying the score
+    recomputation to dout forces the whole backward to run in the backward
+    sweep, where its chunk buffers are transient."""
+    q, k, v, out, lse = res
+    tether = (jnp.sum(dout[0, 0, 0, 0].astype(jnp.float32)) * 0.0).astype(q.dtype)
+    q = q + tether
+    b, s, hq, dh = q.shape
+    g = k.shape[2]
+    r = hq // g
+    nq, nkv = s // q_chunk, s // kv_chunk
+    scale = 1.0 / math.sqrt(dh)
+    qb = q.reshape(b, nq, q_chunk, g, r, dh).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(b, nkv, kv_chunk, g, dh).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nkv, kv_chunk, g, dh).transpose(1, 0, 3, 2, 4)
+    dob = dout.reshape(b, nq, q_chunk, g, r, dh).transpose(1, 0, 3, 4, 2, 5)
+    outb = out.reshape(b, nq, q_chunk, g, r, dh).transpose(1, 0, 3, 4, 2, 5)
+    # delta = rowsum(dout * out): [nq, B, G, R, qc]
+    delta = jnp.sum(dob.astype(jnp.float32) * outb.astype(jnp.float32), axis=-1)
+    q_pos_base = jnp.arange(q_chunk)
+    kv_pos_base = jnp.arange(kv_chunk)
+
+    def per_qchunk(carry, inp):
+        dk_acc, dv_acc = carry
+        qi, qc, doc, lsec, delc = inp
+
+        def per_kvchunk(dq, inp2):
+            kj, kc, vc, dkj, dvj = inp2
+
+            def attend(args):
+                dq, dkj, dvj = args
+                sc = jnp.einsum("bgrqd,bgkd->bgrqk", qc, kc,
+                                preferred_element_type=jnp.float32) * scale
+                mask = _band_mask(qi * q_chunk + q_pos_base,
+                                  kj * kv_chunk + kv_pos_base, window, s_valid)
+                p = jnp.where(mask[None, None, None],
+                              jnp.exp(sc - lsec[..., None]), 0.0)
+                # dk/dv sum over the rep dim — the GQA reduction happens
+                # HERE, at Hkv width, instead of a post-hoc segment-sum
+                dv_c = jnp.einsum("bgrqk,bgrqd->bgkd", p.astype(doc.dtype), doc,
+                                  preferred_element_type=jnp.float32)
+                dp = jnp.einsum("bgrqd,bgkd->bgrqk", doc, vc,
+                                preferred_element_type=jnp.float32)
+                ds = p * (dp - delc[..., None]) * scale
+                dq_c = jnp.einsum("bgrqk,bgkd->bgrqd", ds.astype(kc.dtype), kc,
+                                  preferred_element_type=jnp.float32)
+                dk_c = jnp.einsum("bgrqk,bgrqd->bgkd", ds.astype(qc.dtype), qc,
+                                  preferred_element_type=jnp.float32)
+                return dq + dq_c, dkj + dk_c, dvj + dv_c
+
+            live = _chunk_live(qi, kj, q_chunk, kv_chunk, window)
+            dq, dkj, dvj = jax.lax.cond(live, attend, lambda a: a, (dq, dkj, dvj))
+            return dq, (dkj, dvj)
+
+        dq0 = jnp.zeros((b, g, r, q_chunk, dh), jnp.float32)
+        dq, (dk_new, dv_new) = jax.lax.scan(
+            per_kvchunk, dq0, (jnp.arange(nkv), kb, vb, dk_acc, dv_acc)
+        )
+        return (dk_new, dv_new), dq
+
+    dk0 = jnp.zeros((nkv, b, g, kv_chunk, dh), jnp.float32)
+    dv0 = jnp.zeros_like(dk0)
+    (dk, dv), dqs = jax.lax.scan(
+        per_qchunk, (dk0, dv0),
+        (jnp.arange(nq), qb, dob, lse, delta),
+    )
+    dq = dqs.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, hq, dh).astype(q.dtype)
+    dk = dk.transpose(1, 0, 3, 2, 4).reshape(b, s, g, dh).astype(k.dtype)
+    dv = dv.transpose(1, 0, 3, 2, 4).reshape(b, s, g, dh).astype(v.dtype)
+    return dq, dk, dv
+
+
+# optimize_remat: without it, lax.scan's partial-eval hoists the backward's
+# primal-only work (the recomputed p matrices — O(S^2)!) into the forward
+# sweep and stacks it per chunk pair, defeating the whole flash structure.
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def blocked_causal_attention(
+    q: jax.Array,        # [B, S, Hq, Dh]
+    k: jax.Array,        # [B, S, Hkv, Dh]
+    v: jax.Array,        # [B, S, Hkv, Dh]
+    *,
+    window: Optional[int] = None,   # SWA band (None = full causal)
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style causal (optionally banded) attention, pure JAX.
+
+    Forward: two-level blocking with an online-softmax carry — never
+    materializes S x S.  Backward: custom_vjp that RECOMPUTES p per chunk
+    pair (the flash recurrence), so residuals are O(S x Dh) instead of the
+    O(S^2) a scan-of-scans autodiff would store.  SWA skips chunk pairs
+    entirely outside the band (compute and bandwidth): O(S x window) work.
+    GQA is computed GROUPED — KV heads are never expanded to Hq, so the
+    k/v residuals and dk/dv accumulators stay at Hkv width (§Perf iter. 3).
+    """
+    b, s, hq, dh = q.shape
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, s)
+    nq = -(-s // q_chunk)
+    nkv = -(-s // kv_chunk)
+    pad_q = nq * q_chunk - s
+    pad_kv = nkv * kv_chunk - s
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    out = _flash(q, k, v, window, q_chunk, kv_chunk, s)
+    return out[:, :s]
+
+
+def decode_attention(
+    q: jax.Array,        # [B, 1, Hq, Dh] — one new token
+    k_cache: jax.Array,  # [B, S_cache, Hkv, Dh]
+    v_cache: jax.Array,
+    cur_len: jax.Array,  # [] int32 — number of valid cache positions
+) -> jax.Array:
+    """Single-step attention against a KV cache (masked beyond cur_len).
+
+    GQA is computed *grouped* (q reshaped to [.., Hkv, rep, ..]) so the KV
+    cache is never replicated to Hq — with 32 k caches that replication
+    would dominate device memory."""
+    b, sc, hkv, dh = k_cache.shape
+    hq = q.shape[2]
+    rep = hq // hkv
+    qg = q.reshape(b, 1, hkv, rep, dh)
+    scale = 1.0 / math.sqrt(dh)
+    sc_ = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k_cache,
+                     preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(sc) < cur_len
+    sc_ = jnp.where(mask[None, None, None, None, :], sc_, NEG_INF)
+    p = jax.nn.softmax(sc_, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", p, v_cache)
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense layers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(jnp.float32)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token CE; labels < 0 are masked out."""
+    mask = labels >= 0
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(
+        logits.astype(jnp.float32), jnp.clip(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = (lse - ll) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

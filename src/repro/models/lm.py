@@ -1,0 +1,501 @@
+"""CompositeLM: every assigned architecture as a segment/repeat block stack.
+
+A model is `prelude + repeats x segments`, where each StackSegment is
+`count` identical blocks (scanned) of one BlockCfg.  This one structure
+covers the whole zoo:
+
+  homogeneous decoders      1 segment, count = L, repeats = 1
+  interleaved dense/MoE     segments [(attn+dense, 1), (attn+moe, 1)], x L/2
+  xLSTM 7:1                 segments [(mLSTM, 7), (sLSTM, 1)], x L/8
+  Zamba2 shared-attention   prelude (mamba2, 2) + [(mamba2, 6), (attn, 1,
+                            shared=True)] x 6 — the attention block's params
+                            are stored ONCE and reused every repeat (its KV
+                            cache is still per-invocation)
+
+Layer scans keep the HLO size O(#segment kinds), not O(#layers) — a 48-layer
+model lowers the same number of ops as a 1-layer model per segment, which is
+what makes 80 dry-run compiles tractable and keeps live HLO small on device.
+
+The embedding is backend-switchable (dense | hkv).  With the HKV backend the
+token rows arrive as an explicit `embeds` input (the structural
+find_or_insert happens OUTSIDE the differentiated function — inserter role),
+and the LM head is untied.  Loss is computed in sequence chunks so the
+[B, S, vocab] logits tensor never materializes (vocab 256 k x 4 k seq would
+otherwise dominate memory).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.embedding.dense import DenseEmbedding
+from repro.models.blocks import (
+    BlockCfg,
+    PosCtx,
+    block_decode,
+    block_init,
+    block_state_init,
+    block_train,
+)
+from repro.models import blocks as blocks_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (
+    blocked_causal_attention,
+    cross_entropy_loss,
+    dense_init,
+    init_rms,
+    rms_norm,
+    sinusoidal_embedding,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class StackSegment:
+    block: BlockCfg
+    count: int
+    shared: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    d_model: int
+    vocab: int
+    segments: tuple
+    repeats: int = 1
+    prelude: tuple = ()
+    tied_head: bool = True
+    pos_embedding: str = "none"          # none | sinusoidal
+    embed_scale: bool = False            # gemma: x *= sqrt(d)
+    embedding_backend: str = "dense"     # dense | hkv
+    frontend: Optional[str] = None       # None | vision
+    dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-6
+    loss_chunk: int = 512
+    aux_weights: tuple = (("load_balance", 0.01), ("router_z", 0.001))
+    remat: bool = True                   # activation-checkpoint each block
+    # scan_layers=False unrolls layer loops in the TRAIN path (python loop).
+    # Scan-over-layers + flash attention's custom_vjp currently interact
+    # badly under lax.scan linearization: the backward's recomputed p
+    # matrices are hoisted into the forward sweep and stacked per chunk
+    # pair, resurrecting an O(S^2) (and poorly shardable) buffer.  Unrolling
+    # restores plain reverse-mode AD, where the custom bwd runs opaquely.
+    # Costs: HLO size O(layers) in the train graph (compile time), while
+    # prefill/decode keep scanning (their memory is fine).
+    scan_layers: bool = False
+
+    @property
+    def num_layers(self) -> int:
+        pre = sum(s.count for s in self.prelude)
+        rep = sum(s.count for s in self.segments) * self.repeats
+        return pre + rep
+
+
+def _aux_zero(seg: StackSegment) -> dict:
+    if seg.block.moe is not None:
+        return {"load_balance": jnp.float32(0), "router_z": jnp.float32(0),
+                "dropped_frac": jnp.float32(0)}
+    return {}
+
+
+def _aux_add(a: dict, b: dict) -> dict:
+    return {k: a[k] + b[k] for k in a} if a else {}
+
+
+class CompositeLM:
+    def __init__(self, cfg: LMConfig):
+        self.cfg = cfg
+        if cfg.embedding_backend == "dense":
+            self.embedding = DenseEmbedding(cfg.vocab, cfg.d_model)
+        else:
+            self.embedding = None  # rows provided externally (HKV path)
+
+    # ------------------------------------------------------------------ init
+
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, 4 + len(cfg.prelude) + len(cfg.segments))
+        params: dict = {"final_norm": init_rms(cfg.d_model)}
+        ki = iter(range(len(keys)))
+        if self.embedding is not None:
+            params["embed"] = self.embedding.init(keys[next(ki)])
+        if not cfg.tied_head or self.embedding is None:
+            params["head"] = dense_init(keys[next(ki)], cfg.d_model, cfg.vocab)
+
+        def stacked_init(block, key, *lead):
+            n = 1
+            for d in lead:
+                n *= d
+            ks = jax.random.split(key, n).reshape(lead + (2,))
+            f = lambda k: block_init(block, k)
+            for _ in lead:
+                f = jax.vmap(f)
+            return f(ks)
+
+        params["prelude"] = [
+            stacked_init(s.block, keys[next(ki)], s.count) for s in cfg.prelude
+        ]
+        params["repeat"] = []
+        params["shared"] = []
+        for s in cfg.segments:
+            k = keys[next(ki)]
+            if s.shared:
+                params["shared"].append(block_init(s.block, k))
+                params["repeat"].append(None)
+            else:
+                params["repeat"].append(stacked_init(s.block, k, cfg.repeats, s.count))
+                params["shared"].append(None)
+        return params
+
+    # --------------------------------------------------------------- forward
+
+    def _embed_tokens(self, params, tokens):
+        cfg = self.cfg
+        x = self.embedding.lookup(params["embed"], tokens).astype(cfg.dtype)
+        if cfg.embed_scale:
+            x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(cfg.dtype)
+        return x
+
+    def _inputs(self, params, tokens, embeds, frontend_embeds, mrope_positions):
+        cfg = self.cfg
+        if embeds is not None:
+            x = embeds.astype(cfg.dtype)
+            if cfg.embed_scale:
+                x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(cfg.dtype)
+        else:
+            x = self._embed_tokens(params, tokens)
+        if frontend_embeds is not None:  # stub modality frontend (vision)
+            sv = frontend_embeds.shape[1]
+            x = jnp.concatenate([frontend_embeds.astype(cfg.dtype), x[:, sv:]], axis=1)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        if cfg.pos_embedding == "sinusoidal":
+            x = x + sinusoidal_embedding(positions, cfg.d_model).astype(cfg.dtype)
+        pos = PosCtx(positions=positions, mrope_positions=mrope_positions)
+        return x, pos
+
+    def _apply_stack(self, params, x, pos):
+        cfg = self.cfg
+        aux_total = {"load_balance": jnp.float32(0), "router_z": jnp.float32(0)}
+
+        def scan_layers(seg, seg_params, x):
+            a0 = _aux_zero(seg)
+            import functools
+
+            bt = functools.partial(block_train, seg.block)
+            if cfg.remat:
+                # per-block activation checkpointing: backward recomputes the
+                # block from its input; only layer boundaries are saved
+                bt = jax.checkpoint(bt)
+
+            def body(carry, lp):
+                x, aux = carry
+                x2, a = bt(lp, x, pos)
+                return (x2, _aux_add(aux, a)), None
+
+            if cfg.scan_layers:
+                (x, aux), _ = jax.lax.scan(body, (x, a0), seg_params)
+            else:
+                n = jax.tree.leaves(seg_params)[0].shape[0]
+                aux = a0
+                for i in range(n):
+                    (x, aux), _ = body(
+                        (x, aux), jax.tree.map(lambda a: a[i], seg_params)
+                    )
+            return x, aux
+
+        def fold_aux(aux_total, aux):
+            for k in ("load_balance", "router_z"):
+                if k in aux:
+                    aux_total[k] = aux_total[k] + aux[k]
+            return aux_total
+
+        for seg, sp in zip(cfg.prelude, params["prelude"]):
+            x, aux = scan_layers(seg, sp, x)
+            aux_total = fold_aux(aux_total, aux)
+
+        if cfg.segments:
+            rep_xs = [p for p in params["repeat"] if p is not None]
+
+            def rep_body(carry, slices):
+                x, aux_total = carry
+                it = iter(slices)
+                for si, seg in enumerate(cfg.segments):
+                    sp = (
+                        jax.tree.map(lambda a: a[None], params["shared"][si])
+                        if seg.shared
+                        else next(it)
+                    )
+                    x, aux = scan_layers(seg, sp, x)
+                    aux_total = fold_aux(aux_total, aux)
+                return (x, aux_total), None
+
+            if cfg.scan_layers:
+                (x, aux_total), _ = jax.lax.scan(
+                    rep_body, (x, aux_total), tuple(rep_xs)
+                )
+            else:
+                for r in range(cfg.repeats):
+                    (x, aux_total), _ = rep_body(
+                        (x, aux_total),
+                        tuple(jax.tree.map(lambda a: a[r], p) for p in rep_xs),
+                    )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, aux_total
+
+    def hidden(self, params, tokens=None, *, embeds=None, frontend_embeds=None,
+               mrope_positions=None):
+        x, pos = self._inputs(params, tokens, embeds, frontend_embeds, mrope_positions)
+        return self._apply_stack(params, x, pos)
+
+    # ------------------------------------------------------------------ loss
+
+    def logits(self, params, hidden_chunk):
+        cfg = self.cfg
+        if cfg.tied_head and self.embedding is not None and "head" not in params:
+            return self.embedding.attend(params["embed"], hidden_chunk)
+        return hidden_chunk @ params["head"].astype(hidden_chunk.dtype)
+
+    def loss(self, params, tokens=None, labels=None, *, embeds=None,
+             frontend_embeds=None, mrope_positions=None):
+        cfg = self.cfg
+        h, aux = self.hidden(
+            params, tokens, embeds=embeds, frontend_embeds=frontend_embeds,
+            mrope_positions=mrope_positions,
+        )
+        b, s, d = h.shape
+        ck = min(cfg.loss_chunk, s)
+        assert s % ck == 0
+        hc = h.reshape(b, s // ck, ck, d).transpose(1, 0, 2, 3)
+        lc = labels.reshape(b, s // ck, ck).transpose(1, 0, 2)
+
+        def per_chunk(args):
+            hx, lx = args
+            return cross_entropy_loss(self.logits(params, hx), lx)
+
+        ce = jnp.mean(jax.lax.map(per_chunk, (hc, lc)))
+        total = ce
+        for k, w in cfg.aux_weights:
+            total = total + w * aux.get(k, 0.0)
+        return total, {"ce": ce, **aux}
+
+    # ----------------------------------------------------------------- serve
+
+    def _all_segments(self):
+        """Yields ('prelude'|'repeat', idx, segment)."""
+        for i, s in enumerate(self.cfg.prelude):
+            yield "prelude", i, s
+        for i, s in enumerate(self.cfg.segments):
+            yield "repeat", i, s
+
+    def init_decode_state(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        st = {"prelude": [], "repeat": [], "pos": jnp.zeros((), jnp.int32)}
+        for s in cfg.prelude:
+            one = block_state_init(s.block, batch, max_len, cfg.dtype)
+            st["prelude"].append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (s.count,) + a.shape), one))
+        for s in cfg.segments:
+            one = block_state_init(s.block, batch, max_len, cfg.dtype)
+            st["repeat"].append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.repeats, s.count) + a.shape), one))
+        return st
+
+    def decode_step(self, params, tokens, state, *, embeds=None):
+        """One new token per sequence. tokens: [B] int32 (or embeds [B,1,d])."""
+        cfg = self.cfg
+        step = state["pos"]
+        if embeds is None:
+            x = self._embed_tokens(params, tokens[:, None])
+        else:
+            x = embeds.astype(cfg.dtype)
+            if cfg.embed_scale:
+                x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(cfg.dtype)
+        b = x.shape[0]
+        positions = jnp.full((b, 1), step, jnp.int32)
+        if cfg.pos_embedding == "sinusoidal":
+            x = x + sinusoidal_embedding(positions, cfg.d_model).astype(cfg.dtype)
+        mrope = jnp.broadcast_to(positions[None], (3, b, 1))
+        pos = PosCtx(positions=positions, mrope_positions=mrope, step=step)
+
+        new_state = {"prelude": [], "repeat": [], "pos": step + 1}
+
+        def scan_layers(seg, seg_params, seg_state, x):
+            def body(x, inp):
+                lp, ls = inp
+                x2, ls2 = block_decode(seg.block, lp, x, ls, pos)
+                return x2, ls2
+
+            if cfg.scan_layers:
+                x, new_ls = jax.lax.scan(body, x, (seg_params, seg_state))
+            else:
+                n = jax.tree.leaves(seg_params)[0].shape[0]
+                outs = []
+                for i in range(n):
+                    x, ls2 = body(x, (jax.tree.map(lambda a: a[i], seg_params),
+                                      jax.tree.map(lambda a: a[i], seg_state)))
+                    outs.append(ls2)
+                new_ls = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+            return x, new_ls
+
+        for i, s in enumerate(cfg.prelude):
+            x, ns = scan_layers(s, params["prelude"][i], state["prelude"][i], x)
+            new_state["prelude"].append(ns)
+
+        if cfg.segments:
+            rep_params = [p for p in params["repeat"] if p is not None]
+
+            def rep_body(x, slices):
+                pslices, sslices = slices
+                it = iter(pslices)
+                new_sts = []
+                for si, seg in enumerate(cfg.segments):
+                    sp = (
+                        jax.tree.map(lambda a: a[None], params["shared"][si])
+                        if seg.shared
+                        else next(it)
+                    )
+                    x, ns = scan_layers(seg, sp, sslices[si], x)
+                    new_sts.append(ns)
+                return x, tuple(new_sts)
+
+            if cfg.scan_layers:
+                x, new_rep = jax.lax.scan(
+                    rep_body, x, (tuple(rep_params), tuple(state["repeat"]))
+                )
+                new_state["repeat"] = list(new_rep)
+            else:
+                reps = []
+                for r in range(cfg.repeats):
+                    x, ns = rep_body(
+                        x,
+                        (tuple(jax.tree.map(lambda a: a[r], p) for p in rep_params),
+                         tuple(jax.tree.map(lambda a: a[r], s) for s in state["repeat"])),
+                    )
+                    reps.append(ns)
+                new_state["repeat"] = list(
+                    jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+                )
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self.logits(params, x)[:, 0]
+        return logits, new_state
+
+    def prefill(self, params, tokens, max_len: int, *, embeds=None,
+                frontend_embeds=None, mrope_positions=None):
+        """Process a prompt, build decode state, return last-position logits.
+
+        Implemented as hidden() for the logits plus a state-building pass:
+        attention blocks re-derive K/V (cheap relative to attention itself),
+        SSM blocks get their final recurrent state from the chunked scan.
+        """
+        cfg = self.cfg
+        x, pos = self._inputs(params, tokens, embeds, frontend_embeds, mrope_positions)
+        s = x.shape[1]
+        state = {"prelude": [], "repeat": [], "pos": jnp.zeros((), jnp.int32) + s}
+
+        def scan_layers(seg, seg_params, x):
+            def body(x, lp):
+                x2, st = _block_prefill(seg.block, lp, x, pos, max_len, cfg.dtype)
+                return x2, st
+
+            if cfg.scan_layers:
+                return jax.lax.scan(body, x, seg_params)
+            n = jax.tree.leaves(seg_params)[0].shape[0]
+            sts = []
+            for i in range(n):
+                x, st = body(x, jax.tree.map(lambda a: a[i], seg_params))
+                sts.append(st)
+            return x, jax.tree.map(lambda *xs: jnp.stack(xs), *sts)
+
+        for i, seg in enumerate(cfg.prelude):
+            x, st = scan_layers(seg, params["prelude"][i], x)
+            state["prelude"].append(st)
+
+        if cfg.segments:
+            rep_params = [p for p in params["repeat"] if p is not None]
+
+            def rep_body(x, pslices):
+                it = iter(pslices)
+                sts = []
+                for si, seg in enumerate(cfg.segments):
+                    sp = (
+                        jax.tree.map(lambda a: a[None], params["shared"][si])
+                        if seg.shared
+                        else next(it)
+                    )
+                    x, st = scan_layers(seg, sp, x)
+                    sts.append(st)
+                return x, tuple(sts)
+
+            if cfg.scan_layers:
+                x, rep_states = jax.lax.scan(rep_body, x, tuple(rep_params))
+                state["repeat"] = list(rep_states)
+            else:
+                reps = []
+                for r in range(cfg.repeats):
+                    x, sts = rep_body(
+                        x, tuple(jax.tree.map(lambda a: a[r], p) for p in rep_params)
+                    )
+                    reps.append(sts)
+                state["repeat"] = list(jax.tree.map(lambda *xs: jnp.stack(xs), *reps))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self.logits(params, x[:, -1:])[:, 0]
+        return logits, state
+
+
+# ---------------------------------------------------------------------------
+# per-block prefill (full-seq forward that also emits the decode state)
+# ---------------------------------------------------------------------------
+
+
+def _block_prefill(bcfg: BlockCfg, p: dict, x, pos: PosCtx, max_len: int, dtype):
+    b, s, _ = x.shape
+    if bcfg.kind == "attn":
+        q, k, v = blocks_mod._qkv(bcfg, p, x, pos)
+        o = blocked_causal_attention(q, k, v, window=bcfg.window)
+        x = x + (o.reshape(b, s, -1) @ p["wo"].astype(x.dtype))
+        f, _ = blocks_mod._ffn(bcfg, p, x)
+        x = x + f
+        clen = min(max_len, bcfg.window) if bcfg.window else max_len
+        kc = jnp.zeros((b, clen, bcfg.kv_heads, bcfg.hd), dtype)
+        vc = jnp.zeros_like(kc)
+        if bcfg.window and s >= clen:
+            # ring layout: absolute position t lives in slot t % window
+            tail_k, tail_v = k[:, -clen:], v[:, -clen:]
+            shift = (s - clen) % clen
+            kc = jnp.roll(tail_k.astype(dtype), shift, axis=1)
+            vc = jnp.roll(tail_v.astype(dtype), shift, axis=1)
+        else:
+            kc = jax.lax.dynamic_update_slice(kc, k.astype(dtype), (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v.astype(dtype), (0, 0, 0, 0))
+        return x, {"k": kc, "v": vc}
+    if bcfg.kind == "mamba2":
+        z, xs, Bm, Cm, dt = blocks_mod._mamba2_split(bcfg, p, x)
+        xs_c = blocks_mod._causal_conv(xs, p["conv_w"], p["conv_b"])
+        q, k, v, log_a, xh = blocks_mod._mamba2_gla_inputs(bcfg, p, xs_c, Bm, Cm, dt)
+        y, gla = ssm_mod.chunked_gla(q, k, v, log_a)
+        out = blocks_mod._mamba2_out(bcfg, p, x, y, xh, z)
+        w = bcfg.conv_width - 1
+        conv_hist = xs[:, -w:] if s >= w else jnp.pad(xs, ((0, 0), (w - s, 0), (0, 0)))
+        return out, {"gla": gla, "conv": conv_hist.astype(dtype)}
+    if bcfg.kind == "mlstm":
+        q, k, v_aug, log_f, zg = blocks_mod._mlstm_qkv(bcfg, p, x)
+        y_aug, gla = ssm_mod.chunked_gla(q, k, v_aug, log_f)
+        return blocks_mod._mlstm_out(bcfg, p, x, y_aug, zg), {"gla": gla}
+    if bcfg.kind == "slstm":
+        xg = rms_norm(x, p["ln"], bcfg.norm_eps) @ p["wx"].astype(x.dtype)
+        st = blocks_mod._slstm_state_init(bcfg, b, s, x.dtype)
+        carry = (st["c"], st["n"], st["h"], st["m"])
+
+        def step(carry, xg_t):
+            return blocks_mod._slstm_cell(bcfg, p, xg_t, carry)
+
+        carry, hs = jax.lax.scan(step, carry, xg.transpose(1, 0, 2))
+        h = hs.transpose(1, 0, 2, 3).reshape(b, s, -1).astype(x.dtype)
+        out = x + h @ p["out"].astype(x.dtype)
+        return out, {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    raise ValueError(bcfg.kind)

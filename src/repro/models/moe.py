@@ -1,0 +1,115 @@
+"""Mixture-of-Experts FFN with capacity-bounded sort dispatch (EP-ready).
+
+Static-shape dispatch: top-k assignments are sorted by expert, ranked
+within expert (the same cummax trick the HKV merge uses), and scattered
+into an [E, C, d] buffer — tokens past an expert's capacity C are dropped
+(standard capacity-factor semantics, deterministic).  Expert FFNs run as a
+single batched einsum over the expert dimension, which is the dimension EP
+shards (buffer sharded [model, -, -]); under pjit the scatter/gather
+becomes the dispatch/combine all-to-all on the model axis.
+
+Aux outputs: load-balance loss (Switch-style) + router z-loss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    num_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int                    # per-expert hidden
+    act: str = "silu"
+    gated: bool = True
+    capacity_factor: float = 1.25
+
+
+def moe_init(cfg: MoECfg, key) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    wi_out = cfg.d_ff * (2 if cfg.gated else 1)
+    return {
+        "router": dense_init(k1, cfg.d_model, cfg.num_experts),
+        "wi": (
+            jax.random.normal(k2, (cfg.num_experts, cfg.d_model, wi_out))
+            * (1.0 / jnp.sqrt(cfg.d_model))
+        ).astype(jnp.float32),
+        "wo": (
+            jax.random.normal(k3, (cfg.num_experts, cfg.d_ff, cfg.d_model))
+            * (1.0 / jnp.sqrt(cfg.d_ff))
+        ).astype(jnp.float32),
+    }
+
+
+def capacity(cfg: MoECfg, tokens: int) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)  # multiple of 8 for TPU sublane alignment
+
+
+def moe_apply(cfg: MoECfg, params: dict, x: jax.Array) -> tuple[jax.Array, dict]:
+    """x: [T, d] flattened tokens -> (y [T, d], aux losses)."""
+    t, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    c = capacity(cfg, t)
+    act = activation(cfg.act)
+
+    logits = (x @ params["router"].astype(x.dtype)).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, k)                   # [T, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)  # renormalize top-k
+
+    # aux losses
+    me = probs.mean(axis=0)                                  # mean prob per expert
+    ce = jnp.zeros((e,)).at[expert.reshape(-1)].add(1.0) / (t * k)
+    aux = {
+        "load_balance": e * jnp.sum(me * ce),
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    }
+
+    # dispatch: sort (T*k) assignments by expert, rank within expert
+    flat_e = expert.reshape(-1).astype(jnp.int32)            # [T*k]
+    flat_g = gate.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, sg, stok = flat_e[order], flat_g[order], flat_t[order]
+    iota = jnp.arange(t * k, dtype=jnp.int32)
+    is_new = jnp.concatenate([jnp.ones((1,), bool), se[1:] != se[:-1]])
+    rank = iota - jax.lax.cummax(jnp.where(is_new, iota, -1))
+    keep = rank < c
+    slot = jnp.where(keep, se * c + rank, e * c)             # OOB -> dropped
+
+    buf = jnp.zeros((e * c, d), x.dtype).at[slot].set(x[stok], mode="drop")
+    buf = buf.reshape(e, c, d)
+    # EP: pin the dispatch buffer to the expert axis so the expert einsums
+    # run sharded (dispatch becomes the all-to-all) instead of GSPMD
+    # all-gathering the expert weights
+    from repro.distributed.sharding import maybe_constrain
+
+    buf = maybe_constrain(buf, "model", None, None)
+
+    # expert FFN (batched over the expert dim — the EP-sharded einsum)
+    wi = params["wi"].astype(x.dtype)
+    wo = params["wo"].astype(x.dtype)
+    h = jnp.einsum("ecd,edf->ecf", buf, wi)
+    h = maybe_constrain(h, "model", None, None)
+    if cfg.gated:
+        hg, hu = jnp.split(h, 2, axis=-1)
+        h = act(hg) * hu
+    else:
+        h = act(h)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wo)
+    out_buf = maybe_constrain(out_buf, "model", None, None).reshape(e * c, d)
+
+    # combine: weighted un-dispatch
+    gathered = out_buf[jnp.clip(slot, 0, e * c - 1)]
+    contrib = jnp.where(keep[:, None], gathered * sg[:, None].astype(x.dtype), 0)
+    y = jnp.zeros((t, d), x.dtype).at[stok].add(contrib)
+    aux["dropped_frac"] = 1.0 - keep.mean()
+    return y, aux

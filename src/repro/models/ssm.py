@@ -1,0 +1,109 @@
+"""Chunked gated-linear-attention (GLA) primitive + recurrent step.
+
+Mamba2's SSD and xLSTM's mLSTM are both instances of the same recurrence
+
+    S_t = a_t * S_{t-1} + k_t ⊗ v_t          (state: [N, P] per head)
+    y_t = q_t · S_t
+
+with per-(head, step) scalar decay a_t ∈ (0, 1].  `chunked_gla` evaluates it
+in O(S·N·P + S·L) time with the standard chunked formulation (intra-chunk
+quadratic term + inter-chunk state scan), which is also the TPU-friendly
+form: every term is a matmul over chunk-sized tiles, and sequence length
+enters only through the (parallelizable) chunk scan.
+
+All decay arithmetic happens in log space with log a ≤ 0, so every
+exponential in the algorithm is ≤ 1 — unconditionally stable in bf16.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_gla(
+    q: jax.Array,       # [B, S, H, N]
+    k: jax.Array,       # [B, S, H, N]
+    v: jax.Array,       # [B, S, H, P]
+    log_a: jax.Array,   # [B, S, H]  (log decay, <= 0)
+    chunk: int = 128,
+    initial_state: jax.Array | None = None,  # [B, H, N, P]
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y [B, S, H, P], final_state [B, H, N, P])."""
+    b, s, h, n = q.shape
+    p = v.shape[-1]
+    chunk = min(chunk, s)
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded steps must not decay the carried state: log a = 0
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+
+    # [nc, B, L, H, ...]
+    qc = q.reshape(b, nc, chunk, h, n).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(b, nc, chunk, h, n).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    lac = log_a.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def per_chunk(state, inp):
+        qq, kk, vv, la = inp                      # [B, L, H, *]
+        A = jnp.cumsum(la, axis=1)                # inclusive cum-log-decay [B, L, H]
+        # intra-chunk: score_ij = (q_i . k_j) * exp(A_i - A_j), j <= i
+        sc = jnp.einsum("bihn,bjhn->bhij", qq, kk, preferred_element_type=jnp.float32)
+        decay = A.transpose(0, 2, 1)[:, :, :, None] - A.transpose(0, 2, 1)[:, :, None, :]
+        sc = sc * jnp.exp(jnp.where(causal[None, None], decay, -jnp.inf))
+        y_intra = jnp.einsum("bhij,bjhp->bihp", sc.astype(vv.dtype), vv,
+                             preferred_element_type=jnp.float32)
+        # inter-chunk: y_i += exp(A_i) * q_i . S_prev
+        qdec = qq * jnp.exp(A)[..., None].astype(qq.dtype)
+        y_inter = jnp.einsum("bihn,bhnp->bihp", qdec, state.astype(qq.dtype),
+                             preferred_element_type=jnp.float32)
+        # state update: S' = exp(A_L) S + sum_j exp(A_L - A_j) k_j (x) v_j
+        a_last = A[:, -1, :]                      # [B, H]
+        kdec = kk * jnp.exp(a_last[:, None, :] - A)[..., None].astype(kk.dtype)
+        outer = jnp.einsum("bjhn,bjhp->bhnp", kdec, vv,
+                           preferred_element_type=jnp.float32)
+        state = state * jnp.exp(a_last)[..., None, None] + outer
+        return state, (y_intra + y_inter).astype(v.dtype)
+
+    state0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((b, h, n, p), jnp.float32)
+    )
+    final_state, ys = jax.lax.scan(per_chunk, state0, (qc, kc, vc, lac))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * chunk, h, p)
+    return y[:, :s], final_state
+
+
+def gla_step(
+    state: jax.Array,   # [B, H, N, P]
+    q: jax.Array,       # [B, H, N]
+    k: jax.Array,       # [B, H, N]
+    v: jax.Array,       # [B, H, P]
+    log_a: jax.Array,   # [B, H]
+) -> tuple[jax.Array, jax.Array]:
+    """Single decode step of the same recurrence. Returns (y [B,H,P], state)."""
+    state = state * jnp.exp(log_a)[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", k, v, preferred_element_type=jnp.float32
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", q, state.astype(q.dtype),
+                   preferred_element_type=jnp.float32)
+    return y.astype(v.dtype), state
+
+
+def gla_reference(q, k, v, log_a):
+    """O(S^2)-free sequential oracle for tests: step-by-step recurrence."""
+    b, s, h, n = q.shape
+    p = v.shape[-1]
+    state = jnp.zeros((b, h, n, p), jnp.float32)
+    ys = []
+    for t in range(s):
+        y, state = gla_step(state, q[:, t], k[:, t], v[:, t], log_a[:, t])
+        ys.append(y)
+    return jnp.stack(ys, axis=1), state

@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adamw,
+    adamw8bit,
+    adafactor,
+    sgdm,
+)

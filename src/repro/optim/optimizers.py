@@ -1,0 +1,204 @@
+"""Dense-parameter optimizers (backbone weights).
+
+Minimal optax-style (init, update) pairs over pytrees, built here so the
+framework has no external deps:
+
+  adamw      — AdamW with bias correction and decoupled weight decay.
+  adamw8bit  — AdamW with block-wise int8-quantized moments (the memory-
+               side distributed-training trick: 4x moment memory saving;
+               quantization error is re-absorbed each step because the
+               quantizer is applied to the *updated* moment).
+  adafactor  — factored second moment (row/col) for giant matrices.
+  sgdm       — momentum SGD.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params) -> (updates, state)
+
+
+def _tree_zeros_like(params, dtype=None):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    def init(params):
+        return {
+            "mu": _tree_zeros_like(params, jnp.float32),
+            "nu": _tree_zeros_like(params, jnp.float32),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1**c
+        bc2 = 1.0 - b2**c
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            step = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype), mu, nu
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        updates = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# AdamW with int8 block-quantized moments
+# ---------------------------------------------------------------------------
+
+_QBLOCK = 256
+
+
+def _quantize_i8(x: jax.Array):
+    """Block-wise absmax int8 quantization over the flattened tensor."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _QBLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize_i8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def adamw8bit(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    def init(params):
+        def qz(p):
+            q, s = _quantize_i8(jnp.zeros_like(p, jnp.float32))
+            return {"q": q, "s": s}
+
+        return {
+            "mu": jax.tree.map(qz, params),
+            "nu": jax.tree.map(qz, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1**c
+        bc2 = 1.0 - b2**c
+
+        def upd(g, mu_q, nu_q, p):
+            g = g.astype(jnp.float32)
+            mu = b1 * _dequantize_i8(mu_q["q"], mu_q["s"], p.shape) + (1 - b1) * g
+            nu = b2 * _dequantize_i8(nu_q["q"], nu_q["s"], p.shape) + (1 - b2) * g * g
+            step = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            mq, ms = _quantize_i8(mu)
+            nq, ns = _quantize_i8(nu)
+            return (-lr * step).astype(p.dtype), {"q": mq, "s": ms}, {"q": nq, "s": ns}
+
+        isl = lambda x: isinstance(x, tuple)
+        out = jax.tree.map(
+            upd, grads, state["mu"], state["nu"], params,
+            is_leaf=lambda x: isinstance(x, dict) and "q" in x,
+        )
+        updates = jax.tree.map(lambda t: t[0], out, is_leaf=isl)
+        mu = jax.tree.map(lambda t: t[1], out, is_leaf=isl)
+        nu = jax.tree.map(lambda t: t[2], out, is_leaf=isl)
+        return updates, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; no momentum)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr=1e-3, decay=0.8, eps=1e-30) -> Optimizer:
+    def init(params):
+        def fz(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        return {"v": jax.tree.map(fz, params), "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        beta = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = (
+                    vr[..., :, None]
+                    * vc[..., None, :]
+                    / (jnp.mean(vr, axis=-1, keepdims=True)[..., None] + eps)
+                )
+                step = g / (jnp.sqrt(denom) + eps)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": beta * v["v"] + (1 - beta) * g2}
+                step = g / (jnp.sqrt(nv["v"]) + eps)
+            return (-lr * step).astype(p.dtype), nv
+
+        isl = lambda x: isinstance(x, tuple)
+        out = jax.tree.map(
+            upd, grads, state["v"], params,
+            is_leaf=lambda x: isinstance(x, dict) and ("vr" in x or "v" in x),
+        )
+        updates = jax.tree.map(lambda t: t[0], out, is_leaf=isl)
+        v = jax.tree.map(lambda t: t[1], out, is_leaf=isl)
+        return updates, {"v": v, "count": count}
+
+    return Optimizer(init, update)
+
+
+def sgdm(lr=1e-2, momentum=0.9) -> Optimizer:
+    def init(params):
+        return {"m": _tree_zeros_like(params, jnp.float32)}
+
+    def update(grads, state, params):
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (-lr * m).astype(p.dtype), m
+
+        isl = lambda x: isinstance(x, tuple)
+        out = jax.tree.map(upd, grads, state["m"], params)
+        updates = jax.tree.map(lambda t: t[0], out, is_leaf=isl)
+        m = jax.tree.map(lambda t: t[1], out, is_leaf=isl)
+        return updates, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,124 @@
+"""Fault-tolerant training driver.
+
+The contract for thousands of nodes (DESIGN.md §5):
+
+  * checkpoint/restart — async atomic checkpoints every `checkpoint_every`
+    steps carry params, optimizer state, HKV table state AND the data
+    cursor; restart resumes the exact batch stream.
+  * node failure — any exception inside a step triggers restore-from-latest
+    and replay; `max_failures` bounds the retry budget.  (On a real
+    multi-host deployment the same path is driven by the coordinator's
+    heartbeat failure detector; here the failure signal is the exception.)
+  * elastic scaling — restore re-places every leaf under the CURRENT mesh's
+    shardings (see checkpoint.restore) and the data cursor re-shards the
+    stream to the new DP world size deterministically.
+  * straggler mitigation — synchronous steps bound stragglers by
+    construction once a step launches; between steps, `step_timeout`
+    converts a hung collective into a failure -> restore path instead of an
+    indefinite stall (the production analogue is the coordination-service
+    barrier timeout).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Optional
+
+from repro.data.pipeline import DataCursor
+from repro.train import checkpoint as ckpt
+
+
+class StepTimeout(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class TrainDriver:
+    step_fn: Callable               # (state_tuple, batch) -> (state_tuple, metrics)
+    batch_fn: Callable              # (step) -> batch
+    state: Any                      # (params, opt_state, [table_state])
+    ckpt_dir: str
+    cursor: DataCursor
+    checkpoint_every: int = 100
+    max_failures: int = 3
+    step_timeout: Optional[float] = None
+    shardings: Any = None
+    failure_injector: Optional[Callable] = None   # (step) -> None|raise, for tests
+    log: Callable = print
+
+    def _run_step(self, step: int):
+        batch = self.batch_fn(step)
+        if self.step_timeout is None:
+            if self.failure_injector is not None:
+                self.failure_injector(step)
+            self.state, metrics = self.step_fn(self.state, batch)
+            return metrics
+        result = {}
+        err = []
+
+        def target():
+            try:
+                # injector runs INSIDE the timed context (a simulated
+                # straggler must stall the step, not the watchdog)
+                if self.failure_injector is not None:
+                    self.failure_injector(step)
+                result["out"] = self.step_fn(self.state, batch)
+            except Exception as e:  # noqa: BLE001 — surfaced below
+                err.append(e)
+
+        t = threading.Thread(target=target, daemon=True)
+        t.start()
+        t.join(self.step_timeout)
+        if t.is_alive():
+            raise StepTimeout(f"step {step} exceeded {self.step_timeout}s (straggler)")
+        if err:
+            raise err[0]
+        self.state, metrics = result["out"]
+        return metrics
+
+    def _checkpoint(self, step: int):
+        ckpt.save_async(self.ckpt_dir, step, self.state, extra=self.cursor.to_dict())
+
+    def _restore_latest(self) -> int:
+        ckpt.wait_async()  # an in-flight async save must land before we look
+        last = ckpt.latest_step(self.ckpt_dir)
+        if last is None:
+            # no checkpoint yet: restart from the pristine initial state
+            self.state = self._initial_state
+            self.cursor = DataCursor(seed=self.cursor.seed, step=0)
+            self.log("[driver] no checkpoint found; restarting from step 0")
+            return 0
+        self.state, extra = ckpt.restore(self.ckpt_dir, last, self.state, self.shardings)
+        self.cursor = DataCursor.from_dict(extra)
+        self.log(f"[driver] restored step {last} (cursor {self.cursor})")
+        return last
+
+    def run(self, num_steps: int) -> dict:
+        import jax
+
+        # host-side snapshot of the initial state for restore-from-nothing
+        self._initial_state = jax.tree.map(lambda x: x, self.state)
+        failures = 0
+        step = self.cursor.step
+        history = {"loss": [], "restarts": 0}
+        while step < num_steps:
+            try:
+                metrics = self._run_step(step)
+                step += 1
+                self.cursor.step = step
+                if "loss" in metrics:
+                    history["loss"].append(float(metrics["loss"]))
+                if step % self.checkpoint_every == 0 or step == num_steps:
+                    self._checkpoint(step)
+            except Exception as e:  # noqa: BLE001 — recovery path
+                failures += 1
+                history["restarts"] += 1
+                self.log(f"[driver] step {step} failed ({type(e).__name__}: {e}); "
+                         f"recovery {failures}/{self.max_failures}")
+                if failures > self.max_failures:
+                    raise
+                step = self._restore_latest()
+        ckpt.wait_async()
+        return history

@@ -1,0 +1,121 @@
+"""Train-step builders: dense-embedding and HKV-embedding variants.
+
+The HKV step realizes the paper's triple-group schedule inside one step:
+
+  inserter  find_or_insert on the token batch (structural; the only
+            serialization point) — via the all-to-all sharded table;
+  readers   the forward pass consumes the gathered rows;
+  updater   embedding-row gradients apply through the sparse optimizer's
+            non-structural assign, which XLA is free to overlap with the
+            dense-parameter update (no data dependence between them).
+
+Gradients: global-norm clipped; DP sync is GSPMD-inserted (or int8
+error-feedback compressed over the pod axis when `compress_dp`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shard_rules
+from repro.distributed.table_sharding import ShardedHKVEmbedding
+from repro.models.lm import CompositeLM
+from repro.optim import Optimizer
+from repro.optim.optimizers import apply_updates
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBuilder:
+    model: CompositeLM
+    optimizer: Optimizer
+    grad_clip: float = 1.0
+    sharded_emb: Optional[ShardedHKVEmbedding] = None
+    mesh: Optional[object] = None
+
+    # ------------------------------------------------------------- dense path
+
+    def train_step(self, params, opt_state, batch):
+        """batch: tokens, labels (+ frontend_embeds, mrope_positions)."""
+        extras = {
+            k: batch[k]
+            for k in ("frontend_embeds", "mrope_positions")
+            if k in batch
+        }
+
+        def loss_fn(p):
+            loss, aux = self.model.loss(p, batch["tokens"], batch["labels"], **extras)
+            return loss, aux
+
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, self.grad_clip)
+        updates, opt_state = self.optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm, **aux}
+        return params, opt_state, metrics
+
+    # --------------------------------------------------------------- hkv path
+
+    def train_step_hkv(self, params, opt_state, table_state, batch):
+        assert self.sharded_emb is not None and self.mesh is not None
+        tokens = batch["tokens"]
+        extras = {
+            k: batch[k]
+            for k in ("frontend_embeds", "mrope_positions")
+            if k in batch
+        }
+        # INSERTER: one structural op per step (admission-controlled)
+        table_state, embeds, overflow = self.sharded_emb.lookup(
+            self.mesh, table_state, tokens, train=True
+        )
+
+        def loss_fn(p, e):
+            loss, aux = self.model.loss(p, None, batch["labels"], embeds=e, **extras)
+            return loss, aux
+
+        (loss, aux), (grads, egrads) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True
+        )(params, embeds)
+        grads, gnorm = clip_by_global_norm(grads, self.grad_clip)
+        updates, opt_state = self.optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        # UPDATER: non-structural sparse write-back, overlappable by XLA
+        table_state = self.sharded_emb.apply_grads(
+            self.mesh, table_state, tokens, egrads
+        )
+        metrics = {"loss": loss, "grad_norm": gnorm, "emb_overflow": overflow, **aux}
+        return params, opt_state, table_state, metrics
+
+    # ----------------------------------------------------------------- serve
+
+    def prefill_step(self, params, tokens, max_len: int, **extras):
+        return self.model.prefill(params, tokens, max_len, **extras)
+
+    def decode_step(self, params, tokens, state):
+        return self.model.decode_step(params, tokens, state)
+
+
+def make_sharded_train_step(builder: StepBuilder, mesh, params_shape, hkv: bool):
+    """jit the step with NamedSharding in/out constraints for `mesh`."""
+    from jax.sharding import NamedSharding
+
+    pspecs = shard_rules.param_specs(params_shape)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    bspec = NamedSharding(mesh, shard_rules.batch_spec(mesh))
+    if not hkv:
+        return jax.jit(
+            builder.train_step,
+            donate_argnums=(0, 1),
+        )
+    return jax.jit(builder.train_step_hkv, donate_argnums=(0, 1, 2))

@@ -1,0 +1,76 @@
+"""Baseline dictionary-semantic tables: correctness + the λ-pathology the
+paper builds its case on (probe growth, insert failure at capacity)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.baselines import BucketedP2CTable, OpenAddressingTable
+from repro.core import u64
+
+
+@pytest.mark.parametrize("cls", [OpenAddressingTable, BucketedP2CTable])
+def test_insert_then_find_roundtrip(cls):
+    rng = np.random.default_rng(0)
+    t = cls(capacity=1024, dim=4)
+    st = t.create()
+    keys_np = rng.permutation(100_000)[:512].astype(np.uint64)
+    vals = rng.normal(size=(512, 4)).astype(np.float32)
+    rep = t.insert(st, u64.from_uint64(keys_np), jnp.asarray(vals))
+    st = rep.state
+    assert bool(np.asarray(rep.ok).all())  # λ=0.5: everything fits
+    f = t.find(st, u64.from_uint64(keys_np))
+    assert bool(np.asarray(f.found).all())
+    np.testing.assert_allclose(np.asarray(f.values), vals, rtol=1e-6)
+    # misses are misses
+    miss = t.find(st, u64.from_uint64((keys_np + np.uint64(2**40))))
+    assert not bool(np.asarray(miss.found).any())
+
+
+@pytest.mark.parametrize("cls", [OpenAddressingTable, BucketedP2CTable])
+def test_dictionary_semantics_fail_at_capacity(cls):
+    """The capability gap (paper §5.2): dict-semantic tables cannot absorb
+    more keys than capacity — inserts FAIL rather than evict."""
+    rng = np.random.default_rng(1)
+    t = cls(capacity=512, dim=1)
+    st = t.create()
+    keys = rng.permutation(10_000_000)[: 2 * 512].astype(np.uint64)
+    rep = t.insert(st, u64.from_uint64(keys), jnp.zeros((1024, 1)))
+    ok = np.asarray(rep.ok)
+    assert ok.sum() < 1024  # some inserts MUST fail
+    assert ok.sum() <= 512
+
+
+def test_open_addressing_probe_growth():
+    """Fig. 2c: probe distance grows super-linearly with λ (vs HKV's 1)."""
+    rng = np.random.default_rng(2)
+    t = OpenAddressingTable(capacity=4096, dim=1)
+    st = t.create()
+    probes_at = {}
+    inserted = []
+    for lam in (0.25, 0.5, 0.85, 0.95):
+        target = int(lam * 4096)
+        while len(inserted) < target:
+            k = rng.permutation(10_000_000)[: target - len(inserted)].astype(np.uint64)
+            rep = t.insert(st, u64.from_uint64(k), jnp.zeros((len(k), 1)))
+            st = rep.state
+            inserted.extend(k[np.asarray(rep.ok)].tolist())
+        sample = np.array(inserted, np.uint64)[
+            rng.integers(0, len(inserted), size=256)
+        ]
+        f = t.find(st, u64.from_uint64(sample))
+        probes_at[lam] = float(np.asarray(f.probes).mean())
+    assert probes_at[0.95] > probes_at[0.5] > 0
+    assert probes_at[0.95] > 2.0  # long chains at high λ
+    assert probes_at[0.25] < 1.5
+
+
+def test_p2c_both_buckets_bounded_probes():
+    rng = np.random.default_rng(3)
+    t = BucketedP2CTable(capacity=1024, dim=2)
+    st = t.create()
+    keys = rng.permutation(10_000_000)[:900].astype(np.uint64)
+    rep = t.insert(st, u64.from_uint64(keys), jnp.zeros((900, 2)))
+    st = rep.state
+    f = t.find(st, u64.from_uint64(keys))
+    assert np.asarray(f.probes).max() <= 2  # bounded 2-bucket probe

@@ -1,0 +1,163 @@
+"""Property tests: the batch-synchronous merge equals the sequential oracle.
+
+This is the central correctness argument of the TPU adaptation (DESIGN.md
+§2): applying paper Algorithm 2/3 sequentially in canonical batch order must
+produce exactly the same table as `core.merge.upsert`'s vectorized top-S
+union closure — per-key status codes AND final table contents (keys, values,
+scores) — across policies, bucket modes, capacities, batch compositions,
+duplicate keys, and sentinel padding.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ops, table, u64
+from repro.core.oracle import OracleTable
+
+
+def _drain(state, cfg):
+    """(key -> (score, value)) dict of the live table contents."""
+    exp = ops.export_batch(state, cfg, 0, cfg.num_buckets)
+    mask = np.asarray(exp.mask)
+    keys = (np.asarray(exp.key_hi, np.uint64) << np.uint64(32)) | np.asarray(
+        exp.key_lo, np.uint64
+    )
+    scores = (np.asarray(exp.score_hi, np.uint64) << np.uint64(32)) | np.asarray(
+        exp.score_lo, np.uint64
+    )
+    vals = np.asarray(exp.values)
+    return {
+        int(k): (int(s), vals[i, : cfg.dim])
+        for i, (k, s, m) in enumerate(zip(keys, scores, mask))
+        if m
+    }
+
+
+def _run_pair(policy, dual, capacity, dim, batches, key_space, seed):
+    rng = np.random.default_rng(seed)
+    cfg = table.HKVConfig(
+        capacity=capacity, dim=dim, buckets_per_key=2 if dual else 1, score_policy=policy
+    )
+    state = table.create(cfg)
+    orc = OracleTable(
+        capacity, dim, buckets_per_key=2 if dual else 1, policy=policy
+    )
+    for bi, n in enumerate(batches):
+        keys_np = rng.integers(0, key_space, size=n).astype(np.uint64)
+        if n >= 4 and rng.random() < 0.5:  # inject sentinel padding entries
+            keys_np[rng.integers(0, n, size=2)] = np.uint64(0xFFFFFFFFFFFFFFFF)
+        vals_np = rng.normal(size=(n, dim)).astype(np.float32)
+        res = ops.insert_or_assign(state, cfg, u64.from_uint64(keys_np), jnp.asarray(vals_np))
+        state = res.state
+        want = np.asarray(orc.insert_or_assign(keys_np, vals_np), np.int8)
+        got = np.asarray(res.status)
+        assert np.array_equal(got, want), (
+            f"batch {bi}: status mismatch at {np.nonzero(got != want)[0][:8]}"
+        )
+    mine, theirs = _drain(state, cfg), {
+        k: (e.score, e.value) for k, e in orc.items()
+    }
+    assert mine.keys() == theirs.keys()
+    for k in mine:
+        assert mine[k][0] == theirs[k][0], f"score mismatch for key {k}"
+        np.testing.assert_allclose(mine[k][1], theirs[k][1], rtol=0, atol=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    policy=st.sampled_from(["lru", "lfu", "epoch_lru", "epoch_lfu"]),
+    dual=st.booleans(),
+    seed=st.integers(0, 2**31),
+    key_space=st.sampled_from([50, 300, 5000]),
+)
+def test_merge_matches_oracle(policy, dual, seed, key_space):
+    _run_pair(
+        policy=policy,
+        dual=dual,
+        capacity=2 * 128,
+        dim=2,
+        batches=[48] * 8,
+        key_space=key_space,
+        seed=seed,
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31), dual=st.booleans())
+def test_merge_matches_oracle_oversubscribed(seed, dual):
+    """Batches larger than the whole table — heavy rejection/eviction regime."""
+    _run_pair(
+        policy="lru",
+        dual=dual,
+        capacity=128,
+        dim=2,
+        batches=[200, 200, 200],
+        key_space=100_000,
+        seed=seed,
+    )
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_merge_matches_oracle_heavy_duplicates(seed):
+    """Tiny key space: most batch entries are duplicates (LFU counting path)."""
+    _run_pair(
+        policy="lfu",
+        dual=False,
+        capacity=128,
+        dim=2,
+        batches=[64] * 6,
+        key_space=12,
+        seed=seed,
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31), dual=st.booleans())
+def test_custom_scores_match_oracle(seed, dual):
+    rng = np.random.default_rng(seed)
+    cfg = table.HKVConfig(
+        capacity=128, dim=2, buckets_per_key=2 if dual else 1, score_policy="custom"
+    )
+    state = table.create(cfg)
+    orc = OracleTable(128, 2, buckets_per_key=2 if dual else 1, policy="custom")
+    for _ in range(5):
+        keys_np = rng.integers(0, 4000, size=64).astype(np.uint64)
+        vals_np = rng.normal(size=(64, 2)).astype(np.float32)
+        scores_np = rng.integers(0, 50, size=64).astype(np.uint64)  # tie-heavy
+        res = ops.insert_or_assign(
+            state,
+            cfg,
+            u64.from_uint64(keys_np),
+            jnp.asarray(vals_np),
+            custom_scores=u64.from_uint64(scores_np),
+        )
+        state = res.state
+        want = np.asarray(orc.insert_or_assign(keys_np, vals_np, scores_np), np.int8)
+        assert np.array_equal(np.asarray(res.status), want)
+    mine = _drain(state, cfg)
+    theirs = {k: (e.score, e.value) for k, e in orc.items()}
+    assert mine.keys() == theirs.keys()
+    for k in mine:
+        assert mine[k][0] == theirs[k][0]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31), dual=st.booleans())
+def test_find_or_insert_matches_oracle(seed, dual):
+    rng = np.random.default_rng(seed)
+    cfg = table.HKVConfig(
+        capacity=2 * 128, dim=2, buckets_per_key=2 if dual else 1, score_policy="lru"
+    )
+    state = table.create(cfg)
+    orc = OracleTable(2 * 128, 2, buckets_per_key=2 if dual else 1, policy="lru")
+    for _ in range(6):
+        keys_np = rng.integers(0, 700, size=48).astype(np.uint64)
+        inits = rng.normal(size=(48, 2)).astype(np.float32)
+        res = ops.find_or_insert(state, cfg, u64.from_uint64(keys_np), jnp.asarray(inits))
+        state = res.state
+        want_st, want_vals = orc.find_or_insert(keys_np, inits)
+        assert np.array_equal(np.asarray(res.status), np.asarray(want_st, np.int8))
+        np.testing.assert_allclose(np.asarray(res.values), want_vals, rtol=0, atol=0)

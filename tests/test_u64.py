@@ -1,0 +1,74 @@
+"""Unit + property tests for the (hi, lo) uint32-pair 64-bit representation."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import u64
+
+u64s = st.integers(min_value=0, max_value=2**64 - 1)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(u64s, min_size=1, max_size=32))
+def test_roundtrip(xs):
+    arr = np.array(xs, np.uint64)
+    assert np.array_equal(u64.to_uint64(u64.from_uint64(arr)), arr)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(u64s, min_size=2, max_size=16), st.lists(u64s, min_size=2, max_size=16))
+def test_ordering_matches_uint64(a, b):
+    n = min(len(a), len(b))
+    an, bn = np.array(a[:n], np.uint64), np.array(b[:n], np.uint64)
+    aj, bj = u64.from_uint64(an), u64.from_uint64(bn)
+    assert np.array_equal(np.asarray(u64.lt(aj, bj)), an < bn)
+    assert np.array_equal(np.asarray(u64.le(aj, bj)), an <= bn)
+    assert np.array_equal(np.asarray(u64.eq(aj, bj)), an == bn)
+    assert np.array_equal(u64.to_uint64(u64.minimum(aj, bj)), np.minimum(an, bn))
+    assert np.array_equal(u64.to_uint64(u64.maximum(aj, bj)), np.maximum(an, bn))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(u64s, min_size=1, max_size=16), st.integers(0, 2**32 - 1))
+def test_add_u32_carry(xs, inc):
+    arr = np.array(xs, np.uint64)
+    got = u64.to_uint64(u64.add_u32(u64.from_uint64(arr), jnp.uint32(inc)))
+    want = arr + np.uint64(inc)  # numpy wraps mod 2^64, as we must
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(u64s, min_size=1, max_size=64))
+def test_hash_pair_device_matches_host(xs):
+    arr = np.array(xs, np.uint64)
+    h1d, h2d = u64.hash_pair(u64.from_uint64(arr))
+    h1h, h2h = u64.hash_pair_np(arr)
+    assert np.array_equal(np.asarray(h1d), h1h)
+    assert np.array_equal(np.asarray(h2d), h2h)
+
+
+def test_hash_avalanche_and_decorrelation():
+    """Sequential keys must spread over buckets and digests uniformly-ish,
+    and h1/h2 must be decorrelated (dual-bucket correctness depends on it)."""
+    keys = np.arange(100_000, dtype=np.uint64)
+    h1, h2 = u64.hash_pair_np(keys)
+    for h in (h1, h2):
+        buckets = h % np.uint32(1024)
+        counts = np.bincount(buckets, minlength=1024)
+        # chi-square-ish sanity: max deviation < 5 sigma of poisson mean
+        mean = len(keys) / 1024
+        assert np.abs(counts - mean).max() < 5 * np.sqrt(mean) + 10
+    same_bucket = (h1 % np.uint32(256)) == (h2 % np.uint32(256))
+    assert same_bucket.mean() < 0.01  # ~1/256 expected
+    digests = (h1 >> np.uint32(24)) & np.uint32(0xFF)
+    dcounts = np.bincount(digests, minlength=256)
+    assert dcounts.min() > 0  # all digest values reachable
+
+
+def test_empty_sentinel_is_max():
+    s = u64.empty_sentinel((4,))
+    assert bool(np.all(np.asarray(u64.is_empty(s))))
+    other = u64.from_uint64(np.array([0, 1, 2**63, 2**64 - 2], np.uint64))
+    assert bool(np.all(np.asarray(u64.lt(other, s))))

@@ -6,6 +6,15 @@ Reproduced structure: find* (pointer-returning / key-side only) is
 dimension-INDEPENDENT; find (value copy) scales with dim; assign varies
 little with λ (non-structural); insert_or_assign pays a bounded eviction
 overhead at λ=1.0.
+
+The inserter ops run on a selectable backend (DESIGN.md §4):
+
+    PYTHONPATH=src python -m benchmarks.exp2_throughput --backend kernel
+
+'jnp' (default) times the pure-jnp batch closure; 'kernel' times the fused
+Pallas upsert path.  Off-TPU the kernels execute in interpret mode — the
+numbers then measure the Python interpreter, not the hardware, so kernel
+runs shrink the batch to stay tractable and are labelled accordingly.
 """
 
 from __future__ import annotations
@@ -23,6 +32,14 @@ BATCH = 4096
 CONFIGS = {"A": 8, "B": 32, "C": 64}
 
 
+def _insert_batch(backend: str) -> int:
+    """Interpret-mode kernels pay a per-grid-step Python cost off-TPU;
+    keep the measured batch small enough to finish in seconds."""
+    if backend == "kernel" and jax.default_backend() != "tpu":
+        return 512
+    return BATCH
+
+
 def _fill(cfg, rng, lam, ins):
     state = table.create(cfg)
     n = int(lam * cfg.capacity)
@@ -31,39 +48,44 @@ def _fill(cfg, rng, lam, ins):
     return state, keys
 
 
-def run(csv: Csv | None = None):
-    csv = csv or Csv("Exp#2 API throughput (configs A-C, Figs. 7/8)")
+def run(csv: Csv | None = None, backend: str = "jnp"):
+    tag = "" if backend == "jnp" else f" [inserters backend={backend}]"
+    csv = csv or Csv(f"Exp#2 API throughput (configs A-C, Figs. 7/8){tag}")
     rng = np.random.default_rng(1)
+    ibatch = _insert_batch(backend)
     for name, dim in CONFIGS.items():
         cfg = table.HKVConfig(capacity=CAPACITY, dim=dim)
         ins_shared = make_insert_jit(cfg)
         for lam in (0.5, 1.0):
             state, keys = _fill(cfg, rng, lam, ins_shared)
             hot = u64.from_uint64(rng.choice(keys, size=BATCH))
-            vals = jnp.asarray(rng.normal(size=(BATCH, dim)), jnp.float32)
+            hot_i = u64.from_uint64(rng.choice(keys, size=ibatch))
+            vals = jnp.asarray(rng.normal(size=(ibatch, dim)), jnp.float32)
 
             find_j = jax.jit(lambda s, h, l: ops.find(s, cfg, u64.U64(h, l)).values)
             findp_j = jax.jit(lambda s, h, l: find_mod.locate(s, cfg, u64.U64(h, l)).row)
             cont_j = jax.jit(lambda s, h, l: ops.contains(s, cfg, u64.U64(h, l)))
             ins_j = jax.jit(
-                lambda s, h, l, v: ops.insert_or_assign(s, cfg, u64.U64(h, l), v).state
+                lambda s, h, l, v: ops.insert_or_assign(
+                    s, cfg, u64.U64(h, l), v, backend=backend).state
             )
             ine_j = jax.jit(
-                lambda s, h, l, v: ops.insert_and_evict(s, cfg, u64.U64(h, l), v).state
+                lambda s, h, l, v: ops.insert_and_evict(
+                    s, cfg, u64.U64(h, l), v, backend=backend).state
             )
             asg_j = jax.jit(lambda s, h, l, v: ops.assign(s, cfg, u64.U64(h, l), v))
 
-            for api, fn, args in (
-                ("find", find_j, (state, hot.hi, hot.lo)),
-                ("find_ptr", findp_j, (state, hot.hi, hot.lo)),
-                ("contains", cont_j, (state, hot.hi, hot.lo)),
-                ("insert_or_assign", ins_j, (state, hot.hi, hot.lo, vals)),
-                ("insert_and_evict", ine_j, (state, hot.hi, hot.lo, vals)),
-                ("assign", asg_j, (state, hot.hi, hot.lo, vals)),
+            for api, fn, n, args in (
+                ("find", find_j, BATCH, (state, hot.hi, hot.lo)),
+                ("find_ptr", findp_j, BATCH, (state, hot.hi, hot.lo)),
+                ("contains", cont_j, BATCH, (state, hot.hi, hot.lo)),
+                ("insert_or_assign", ins_j, ibatch, (state, hot_i.hi, hot_i.lo, vals)),
+                ("insert_and_evict", ine_j, ibatch, (state, hot_i.hi, hot_i.lo, vals)),
+                ("assign", asg_j, ibatch, (state, hot_i.hi, hot_i.lo, vals)),
             ):
                 t = time_fn(fn, *args)
                 csv.row(f"{api}/cfg{name}(dim={dim})/lf={lam}", t,
-                        f"{kv_per_s(BATCH, t)/1e6:.2f}M-KV/s")
+                        f"{kv_per_s(n, t)/1e6:.2f}M-KV/s")
 
     # config D (paper Table 5): HBM keys + HMEM (host-tier) values. The
     # paper's claim: the pointer-returning find* is tier-INDEPENDENT (keys
@@ -88,4 +110,9 @@ def run(csv: Csv | None = None):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="jnp", choices=("auto", "jnp", "kernel"),
+                    help="inserter-op backend (kernel = fused Pallas upsert path)")
+    run(backend=ap.parse_args().backend)

@@ -10,6 +10,10 @@
   3e  triple-group concurrency adaptation (Exp#3e): reader+updater ops
       FUSED into one jitted program (the role split lets XLA overlap them)
       vs serialized separate dispatches.
+  3f  upsert backend (DESIGN.md §4): insert_or_assign throughput on the
+      pure-jnp batch closure vs the fused Pallas upsert path.  Off-TPU the
+      kernel executes in interpret mode, so 3f reports it as a correctness
+      checkpoint (statuses must agree), not a wall-clock comparison.
 """
 
 from __future__ import annotations
@@ -154,6 +158,25 @@ def run(csv: Csv | None = None):
     csv.row("3e/reader+updater/fused", tf, f"{kv_per_s(2*BATCH, tf)/1e6:.2f}M-op/s")
     csv.row("3e/reader+updater/serialized", ts,
             f"{kv_per_s(2*BATCH, ts)/1e6:.2f}M-op/s,fused_speedup={ts/tf:.2f}x")
+
+    # ---- 3f: upsert backend (jnp batch closure vs fused Pallas path) ----------
+    on_tpu = jax.default_backend() == "tpu"
+    n3f = 1024 if on_tpu else 256  # interpret mode: keep the grid small
+    cfg = table.HKVConfig(capacity=8 * 128, dim=16)
+    state = table.create(cfg)
+    keys3f = u64.from_uint64(rng.integers(0, 2**50, size=n3f).astype(np.uint64))
+    vals3f = jnp.asarray(rng.normal(size=(n3f, 16)), jnp.float32)
+    results = {}
+    for backend in ("jnp", "kernel"):
+        fn = jax.jit(lambda s, h, l, v, b=backend: ops.insert_or_assign(
+            s, cfg, u64.U64(h, l), v, backend=b).status)
+        t = time_fn(fn, state, keys3f.hi, keys3f.lo, vals3f, reps=3, warmup=1)
+        results[backend] = (t, np.asarray(fn(state, keys3f.hi, keys3f.lo, vals3f)))
+        mode = "xla" if (backend == "jnp" or on_tpu) else "interpret"
+        csv.row(f"3f/upsert_backend/{backend}", t,
+                f"{kv_per_s(n3f, t)/1e6:.2f}M-KV/s[{mode}]")
+    agree = np.array_equal(results["jnp"][1], results["kernel"][1])
+    csv.row("3f/upsert_backend/status_parity", None, f"bit_identical={agree}")
 
 
 if __name__ == "__main__":

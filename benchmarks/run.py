@@ -1,10 +1,12 @@
 """Benchmark entry point: one experiment per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run            # all experiments
-  PYTHONPATH=src python -m benchmarks.run exp1 exp4  # subset
+  PYTHONPATH=src python -m benchmarks.run                   # all experiments
+  PYTHONPATH=src python -m benchmarks.run exp1 exp4         # subset
+  PYTHONPATH=src python -m benchmarks.run exp2 --backend kernel
 
 Output: `name,us_per_call,derived` CSV blocks per experiment.  Roofline
-rows appear when dry-run artifacts exist under runs/dryrun/.
+rows appear when dry-run artifacts exist under runs/dryrun/.  --backend
+selects the inserter-op implementation for exp2 (DESIGN.md §4).
 """
 
 from __future__ import annotations
@@ -13,7 +15,23 @@ import sys
 
 
 def main() -> None:
-    sel = set(sys.argv[1:])
+    args = sys.argv[1:]
+    backend = "jnp"
+    if "--backend" in args:
+        i = args.index("--backend")
+        if i + 1 >= len(args) or args[i + 1] not in ("auto", "jnp", "kernel"):
+            sys.exit("error: --backend requires one of auto|jnp|kernel")
+        backend = args[i + 1]
+        del args[i : i + 2]
+    known = {"exp1", "exp2", "exp3", "exp4", "roofline"}
+    bad = [a for a in args if a not in known]
+    if bad:
+        sys.exit(f"error: unknown argument(s) {bad}; experiments: {sorted(known)}, "
+                 "options: --backend auto|jnp|kernel")
+    if backend != "jnp" and args and "exp2" not in args:
+        sys.exit("error: --backend only applies to exp2; add exp2 to the "
+                 "selection or drop the flag")
+    sel = set(args)
 
     def want(name):
         return not sel or name in sel
@@ -25,7 +43,7 @@ def main() -> None:
     if want("exp2"):
         from benchmarks import exp2_throughput
 
-        exp2_throughput.run()
+        exp2_throughput.run(backend=backend)
     if want("exp3"):
         from benchmarks import exp3_ablation
 

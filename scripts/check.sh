@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 verification (see ROADMAP.md): run the full test suite from a
+# fresh checkout, deterministically.
+#
+#   scripts/check.sh            # tier-1: pytest -x -q
+#   scripts/check.sh -q tests/  # any extra pytest args pass through
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [ "$#" -gt 0 ]; then
+    exec python -m pytest "$@"
+fi
+exec python -m pytest -x -q

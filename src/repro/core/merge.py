@@ -40,6 +40,12 @@ paper's Table 9 in both regimes.
 Everything is static-shape: a batch of N keys costs O(N log N) sort work
 plus O(N·S) gathered bucket rows — no data-dependent shapes, no host
 round-trips, jit/shard_map friendly.
+
+The heavy stages (locate, target selection, victim extraction, value
+gather/scatter) are pluggable via `UpsertStages` (DESIGN.md §4): the
+pure-jnp defaults below are the reference, `repro.kernels.ops` swaps in
+the fused Pallas kernels.  The orchestration — and therefore every
+ordering decision — is shared, so the backends are bit-identical.
 """
 
 from __future__ import annotations
@@ -62,6 +68,39 @@ STATUS_UPDATED = np.int8(1)   # key existed: value/score updated in place
 STATUS_INSERTED = np.int8(2)  # inserted into an empty slot
 STATUS_EVICTED = np.int8(3)   # inserted by evicting a minimum-score entry
 STATUS_REJECTED = np.int8(4)  # admission control refused the entry
+
+
+class UpsertStages(NamedTuple):
+    """Pluggable backends for the heavy stages of the batch closure.
+
+    `upsert` is one deterministic orchestration with five replaceable
+    stages.  The defaults (`jnp_stages`) are the pure-jnp reference; the
+    Pallas path (`repro.kernels.ops.upsert_kernel`) swaps in kernel-backed
+    implementations of the same contracts.  Because the orchestration —
+    dedupe, canonical sort, rank pairing, admission control, status
+    accounting — is shared, the two backends are bit-identical by
+    construction wherever the stage contracts are met (DESIGN.md §4).
+
+      locate(state, cfg, keys, probe) -> find_mod.Locate
+          digest pre-filter + full-key match of the deduped batch.
+      select_target(state, cfg, probe) -> int32 [N]
+          dual-bucket two-phase target selection (post-phase-1 state).
+      victim_at_rank(state, cfg, bkt_g, rank) ->
+          (slot int32[N], occupied bool[N], score U64[N], key U64[N])
+          the rank-th weakest entry of each row of `bkt_g` under the
+          total victim order (occupied asc, score asc, key asc, slot asc):
+          empties first (lowest slot first), then ascending score.
+      gather_values(cfg, values, rows, mask) -> [N, Dtot]
+          masked row gather (evicted-value hand-off); zeros where ~mask.
+      scatter_values(cfg, values, rows, updates, mask) -> new values
+          masked row scatter; masked rows must be unique within the batch.
+    """
+
+    locate: object
+    select_target: object
+    victim_at_rank: object
+    gather_values: object
+    scatter_values: object
 
 
 class MergeResult(NamedTuple):
@@ -139,6 +178,66 @@ def _select_target_bucket(
     return jnp.where(any_free, d1, d2)
 
 
+def _jnp_victim_at_rank(state: HKVState, cfg: HKVConfig, bkt_g: jax.Array,
+                        rank: jax.Array):
+    """Rank-th weakest entry per gathered bucket row, via a per-row sort.
+
+    Victim order is the 6-key lexicographic sort (occupied asc, score asc,
+    key asc, slot asc) — fully deterministic: empties claim ascending slot
+    order, occupied entries ascend by score then key (unique table-wide).
+    """
+    n = bkt_g.shape[0]
+    s = cfg.slots_per_bucket
+    row_occ = ~u64.is_empty(U64(state.key_hi[bkt_g], state.key_lo[bkt_g]))
+    slot_iota = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (n, s))
+    v_occ, v_shi, v_slo, v_khi, v_klo, v_slot = jax.lax.sort(
+        (
+            row_occ.astype(jnp.uint32),
+            state.score_hi[bkt_g],
+            state.score_lo[bkt_g],
+            state.key_hi[bkt_g],
+            state.key_lo[bkt_g],
+            slot_iota,
+        ),
+        dimension=1,
+        num_keys=6,
+        is_stable=False,
+    )
+    r_cl = jnp.clip(rank, 0, s - 1)[:, None]
+    take = lambda a: jnp.take_along_axis(a, r_cl, axis=1)[:, 0]
+    return (
+        take(v_slot),
+        take(v_occ).astype(bool),
+        U64(take(v_shi), take(v_slo)),
+        U64(take(v_khi), take(v_klo)),
+    )
+
+
+def _jnp_gather_values(cfg: HKVConfig, values: jax.Array, rows: jax.Array,
+                       mask: jax.Array) -> jax.Array:
+    out = table_mod.tier_gather(cfg.value_tier, values, jnp.where(mask, rows, 0))
+    return jnp.where(mask[:, None], out, jnp.zeros_like(out))
+
+
+def _jnp_scatter_values(cfg: HKVConfig, values: jax.Array, rows: jax.Array,
+                        updates: jax.Array, mask: jax.Array) -> jax.Array:
+    oob = values.shape[0]  # mode='drop' discards masked-out lanes
+    return table_mod.tier_scatter(
+        cfg.value_tier, values, jnp.where(mask, rows, oob), updates
+    )
+
+
+def jnp_stages() -> UpsertStages:
+    """The pure-jnp reference implementation of every upsert stage."""
+    return UpsertStages(
+        locate=lambda state, cfg, keys, probe: find_mod.locate(state, cfg, keys, probe),
+        select_target=_select_target_bucket,
+        victim_at_rank=_jnp_victim_at_rank,
+        gather_values=_jnp_gather_values,
+        scatter_values=_jnp_scatter_values,
+    )
+
+
 def upsert(
     state: HKVState,
     cfg: HKVConfig,
@@ -150,6 +249,7 @@ def upsert(
     update_hit_scores: bool = True,
     insert_values: Optional[jax.Array] = None,
     return_evicted: bool = False,
+    stages: Optional[UpsertStages] = None,
 ) -> MergeResult:
     """The batch closure of insert_or_assign / find_or_insert / insert_and_evict.
 
@@ -164,6 +264,8 @@ def upsert(
     policy = cfg.policy
     if insert_values is None:
         insert_values = values
+    if stages is None:
+        stages = jnp_stages()
 
     # One clock tick per batched op (the paper's per-launch device clock).
     state = table_mod.advance_clock(state)
@@ -180,7 +282,7 @@ def upsert(
 
     # ---- phase 1: hits (non-structural updater work) ------------------------
     probe_s = find_mod.probe_keys(cfg, keys_s)
-    loc = find_mod.locate(state, cfg, keys_s, probe_s)
+    loc = stages.locate(state, cfg, keys_s, probe_s)
     hit = loc.found & rep_mask
 
     old_sc = U64(state.score_hi[loc.bucket, loc.slot], state.score_lo[loc.bucket, loc.slot])
@@ -191,18 +293,17 @@ def upsert(
         score_lo=state.score_lo.at[hb, loc.slot].set(new_sc.lo, mode="drop"),
     )
     if write_hit_values:
-        hrow = jnp.where(hit, loc.row, b * s)
         state = state._replace(
-            values=table_mod.tier_scatter(
-                cfg.value_tier, state.values, hrow,
-                values[last_idx_s].astype(state.values.dtype),
+            values=stages.scatter_values(
+                cfg, state.values, loc.row,
+                values[last_idx_s].astype(state.values.dtype), hit,
             )
         )
     status_g = status_g.at[gid].max(jnp.where(hit, STATUS_UPDATED, STATUS_INVALID))
 
     # ---- phase 2: misses (structural inserter work) --------------------------
     miss = rep_mask & ~loc.found
-    target = _select_target_bucket(state, cfg, probe_s)
+    target = stages.select_target(state, cfg, probe_s)
     init_sc = policy.init_score(clock, epoch, count_s, custom_s, (n,))
 
     # bucket-sort the misses: (bucket, score desc, key asc) — canonical order
@@ -230,34 +331,12 @@ def upsert(
     run_start = jax.lax.cummax(jnp.where(is_newb, iota, -1))
     rank = iota - run_start  # within-bucket rank r (incoming, descending score)
 
-    # victim order per touched bucket row: empties first, then ascending score,
-    # score ties broken by ascending key (deterministic, oracle-matching)
+    # victim order per touched bucket row: empties first (ascending slot),
+    # then ascending score, ties broken by ascending key then slot — a total
+    # order, so victim choice is deterministic and backend-independent
     bkt_g = jnp.clip(bkt_m, 0, b - 1)
-    row_occ = ~u64.is_empty(U64(state.key_hi[bkt_g], state.key_lo[bkt_g]))
-    slot_iota = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (n, s))
-    v_occ, v_shi, v_slo, v_khi, v_klo, v_slot = jax.lax.sort(
-        (
-            row_occ.astype(jnp.uint32),
-            state.score_hi[bkt_g],
-            state.score_lo[bkt_g],
-            state.key_hi[bkt_g],
-            state.key_lo[bkt_g],
-            slot_iota,
-        ),
-        dimension=1,
-        num_keys=5,
-        is_stable=False,
-    )
-    r_cl = jnp.clip(rank, 0, s - 1)[:, None]
-    victim_slot = jnp.take_along_axis(v_slot, r_cl, axis=1)[:, 0]
-    victim_occ = jnp.take_along_axis(v_occ, r_cl, axis=1)[:, 0].astype(bool)
-    victim_sc = U64(
-        jnp.take_along_axis(v_shi, r_cl, axis=1)[:, 0],
-        jnp.take_along_axis(v_slo, r_cl, axis=1)[:, 0],
-    )
-    victim_key = U64(
-        jnp.take_along_axis(v_khi, r_cl, axis=1)[:, 0],
-        jnp.take_along_axis(v_klo, r_cl, axis=1)[:, 0],
+    victim_slot, victim_occ, victim_sc, victim_key = stages.victim_at_rank(
+        state, cfg, bkt_g, rank
     )
     inc_sc = U64(shi_m, slo_m)
     # admission control: strictly beat the paired victim (existing wins ties)
@@ -267,25 +346,21 @@ def upsert(
     # evicted outputs must be gathered before the overwrite
     victim_row = bkt_g * s + victim_slot
     if return_evicted:
-        ev_rows = table_mod.tier_gather(
-            cfg.value_tier, state.values, jnp.where(evicts, victim_row, 0)
-        )
-        ev_values = jnp.where(evicts[:, None], ev_rows, jnp.zeros_like(ev_rows))
+        ev_values = stages.gather_values(cfg, state.values, victim_row, evicts)
     else:
         ev_values = jnp.zeros((n, vdim), state.values.dtype)
 
     # structural scatter (conflict-free: distinct (bucket, victim_slot) pairs)
     tb = jnp.where(admitted, bkt_m, b)
-    trow = jnp.where(admitted, victim_row, b * s)
     state = state._replace(
         key_hi=state.key_hi.at[tb, victim_slot].set(khi_m, mode="drop"),
         key_lo=state.key_lo.at[tb, victim_slot].set(klo_m, mode="drop"),
         digests=state.digests.at[tb, victim_slot].set(dig_m, mode="drop"),
         score_hi=state.score_hi.at[tb, victim_slot].set(shi_m, mode="drop"),
         score_lo=state.score_lo.at[tb, victim_slot].set(slo_m, mode="drop"),
-        values=table_mod.tier_scatter(
-            cfg.value_tier, state.values, trow,
-            insert_values[vrow_m].astype(state.values.dtype),
+        values=stages.scatter_values(
+            cfg, state.values, victim_row,
+            insert_values[vrow_m].astype(state.values.dtype), admitted,
         ),
     )
     status_m = jnp.where(

@@ -17,6 +17,20 @@ structure* rather than a lock protocol (DESIGN.md §2):
 
 Every op is batch-synchronous, jittable, static-shape, and accepts the
 EMPTY sentinel (0xFFFF_FFFF_FFFF_FFFF) as a padding key that is ignored.
+
+Kernel backends (DESIGN.md §4): the hot ops exist in two implementations —
+the pure-jnp reference in this package and the Pallas kernel path in
+`repro.kernels`.  Readers find/find_ptr and updaters assign/assign_add have
+kernel twins in `repro.kernels.ops` (find_kernel/locate_kernel/
+assign_kernel); the INSERTERS insert_or_assign, insert_and_evict, and
+find_or_insert take a `backend='auto'|'jnp'|'kernel'` argument here and
+dispatch to the fused upsert_scan path (`repro.kernels.ops.upsert_kernel`),
+which shares this module's batch-closure orchestration and is bit-identical.
+'auto' resolves to 'kernel' on TPU and 'jnp' elsewhere (off-TPU the kernels
+run in interpret mode — correct but slow, so it is opt-in).  contains/size/
+export_batch*, assign_scores, erase, clear, and accum_or_assign remain
+jnp-only: they are trivial reductions or metadata-plane scatters with no
+kernel to win.
 """
 
 from __future__ import annotations
@@ -227,16 +241,41 @@ class UpsertResult(NamedTuple):
     status: jax.Array  # int8 [N]: 0 invalid / 1 updated / 2 inserted / 3 evicted / 4 rejected
 
 
+def _resolve_backend(backend: str) -> str:
+    """'auto' picks the Pallas path on TPU and jnp elsewhere: off-TPU the
+    kernels execute in interpret mode, which validates semantics but is far
+    slower than XLA — callers opt in explicitly with backend='kernel'."""
+    if backend == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in ("jnp", "kernel"):
+        raise ValueError(
+            f"unknown backend {backend!r}; one of 'auto'|'jnp'|'kernel'"
+        )
+    return backend
+
+
+def _upsert_stages(backend: str, cfg: HKVConfig):
+    """Resolve a backend name to UpsertStages (None = pure-jnp defaults)."""
+    if _resolve_backend(backend) == "jnp":
+        return None
+    from repro.kernels import ops as kernel_ops  # deferred: kernels import core
+
+    return kernel_ops.kernel_stages(cfg)
+
+
 def insert_or_assign(
     state: HKVState,
     cfg: HKVConfig,
     keys: U64,
     values: jax.Array,
     custom_scores: Optional[U64] = None,
+    *,
+    backend: str = "auto",
 ) -> UpsertResult:
     """Inserter. Update-or-insert with in-line eviction/admission (Alg. 2/3)."""
     res = merge_mod.upsert(
-        state, cfg, keys, _pad_aux(values, state), custom_scores=custom_scores
+        state, cfg, keys, _pad_aux(values, state), custom_scores=custom_scores,
+        stages=_upsert_stages(backend, cfg),
     )
     return UpsertResult(state=res.state, status=res.status)
 
@@ -258,6 +297,8 @@ def insert_and_evict(
     keys: U64,
     values: jax.Array,
     custom_scores: Optional[U64] = None,
+    *,
+    backend: str = "auto",
 ) -> InsertAndEvictResult:
     """Inserter. insert_or_assign that returns the displaced entries in the
     same launch (the paper's single-kernel eviction hand-off — used to spill
@@ -269,6 +310,7 @@ def insert_and_evict(
         _pad_aux(values, state),
         custom_scores=custom_scores,
         return_evicted=True,
+        stages=_upsert_stages(backend, cfg),
     )
     return InsertAndEvictResult(
         state=res.state,
@@ -295,6 +337,8 @@ def find_or_insert(
     keys: U64,
     init_values: jax.Array,
     custom_scores: Optional[U64] = None,
+    *,
+    backend: str = "auto",
 ) -> FindOrInsertResult:
     """Inserter. Lookup; insert `init_values` for missing keys (cold-start).
 
@@ -303,6 +347,14 @@ def find_or_insert(
     now present; the caller's init row for keys whose admission was rejected
     (an *ephemeral* value — the paper returns the same from its workspace).
     """
+    if _resolve_backend(backend) == "kernel":
+        from repro.kernels import ops as kernel_ops
+
+        st, vals, found, status = kernel_ops.find_or_insert_kernel(
+            state, cfg, keys, _pad_aux(init_values, state),
+            custom_scores=custom_scores,
+        )
+        return FindOrInsertResult(state=st, values=vals, found=found, status=status)
     pre = find_mod.locate(state, cfg, keys)
     res = merge_mod.upsert(
         state,

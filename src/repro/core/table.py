@@ -36,6 +36,20 @@ from repro.core.u64 import U64
 
 SLOTS_PER_BUCKET = 128  # the paper's (and the TPU lane width's) natural choice
 
+# Memories-API compat: `jax.memory.Space` appeared after 0.4.37.  Where the
+# running JAX has no addressable host space the HMEM tier degrades to a
+# structural split (placement stays wherever XLA put it) — same behaviour
+# the CPU dev container always had.
+_HOST_SPACE = getattr(getattr(jax, "memory", None), "Space", None)
+
+
+def _to_host(x: jax.Array) -> jax.Array:
+    return jax.device_put(x, _HOST_SPACE.Host) if _HOST_SPACE else x
+
+
+def _to_device(x: jax.Array) -> jax.Array:
+    return jax.device_put(x, _HOST_SPACE.Device) if _HOST_SPACE else x
+
 
 @dataclasses.dataclass(frozen=True)
 class HKVConfig:
@@ -160,8 +174,7 @@ def place_value_tier(state: HKVState) -> HKVState:
     is; the tier then remains a structural split that the dry-run compiles.
     """
     try:
-        values = jax.device_put(state.values, jax.memory.Space.Host)
-        return state._replace(values=values)
+        return state._replace(values=_to_host(state.values))
     except (ValueError, RuntimeError, KeyError):
         return state
 
@@ -181,9 +194,8 @@ def place_value_tier(state: HKVState) -> HKVState:
 def tier_gather(tier: str, values: jax.Array, rows: jax.Array) -> jax.Array:
     if tier != "hmem":
         return values[rows]
-    rows_h = jax.device_put(rows, jax.memory.Space.Host)
-    out_h = values[rows_h]
-    return jax.device_put(out_h, jax.memory.Space.Device)
+    out_h = values[_to_host(rows)]
+    return _to_device(out_h)
 
 
 def tier_scatter(tier: str, values: jax.Array, rows: jax.Array,
@@ -192,8 +204,8 @@ def tier_scatter(tier: str, values: jax.Array, rows: jax.Array,
     if tier != "hmem":
         op = values.at[rows]
         return op.add(updates, mode=mode) if add else op.set(updates, mode=mode)
-    rows_h = jax.device_put(rows, jax.memory.Space.Host)
-    upd_h = jax.device_put(updates, jax.memory.Space.Host)
+    rows_h = _to_host(rows)
+    upd_h = _to_host(updates)
     op = values.at[rows_h]
     return op.add(upd_h, mode=mode) if add else op.set(upd_h, mode=mode)
 

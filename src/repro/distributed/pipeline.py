@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.sharding import shard_map
+
 
 def pipeline_apply(mesh, axis: str, stage_fn, stage_params, x_microbatches):
     """stage_fn(params_slice, x) -> x, applied across `axis` stages.
@@ -69,6 +71,6 @@ def pipeline_apply(mesh, axis: str, stage_fn, stage_params, x_microbatches):
         jax.tree.map(lambda _: P(axis), stage_params),
         P(),  # microbatches replicated across stages
     )
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh, in_specs=in_specs, out_specs=P(), check_vma=False
     )(stage_params, x_microbatches)

@@ -38,6 +38,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import merge as merge_mod
+from repro.distributed.sharding import shard_map
 from repro.core import ops as hkv_ops
 from repro.core import u64
 from repro.core.u64 import U64
@@ -108,7 +109,10 @@ class ShardedHKVEmbedding:
         cfg = local.config()
         init = local.default_rows(rk)
         if train:
-            res = hkv_ops.find_or_insert(state, cfg, rk, init)
+            # owner-side structural op; backend follows the local embedding
+            # config ('auto' -> the fused Pallas path on TPU, DESIGN.md §4)
+            res = hkv_ops.find_or_insert(state, cfg, rk, init,
+                                         backend=self.emb.backend)
             state, rows = res.state, res.values
         else:
             fr = hkv_ops.find(state, cfg, rk)
@@ -164,7 +168,7 @@ class ShardedHKVEmbedding:
 
         specs = self.state_specs()
         return jax.jit(
-            jax.shard_map(body, mesh=mesh, in_specs=(), out_specs=specs,
+            shard_map(body, mesh=mesh, in_specs=(), out_specs=specs,
                           check_vma=False)
         )()
 
@@ -209,7 +213,7 @@ class ShardedHKVEmbedding:
             return state, rows[inv], ovf.reshape(1)  # rank-1 for out_specs
 
         specs = self.state_specs()
-        out = jax.shard_map(
+        out = shard_map(
             body, mesh=mesh,
             in_specs=(specs, P(dp, None)),
             out_specs=(specs, P(dp, None), P(dp)),
@@ -236,7 +240,7 @@ class ShardedHKVEmbedding:
             return self._grad_body(n_shards, cap, state, uk.hi, uk.lo, g_uniq)
 
         specs = self.state_specs()
-        return jax.shard_map(
+        return shard_map(
             body, mesh=mesh,
             in_specs=(specs, P(dp, None), P(dp, None, None)),
             out_specs=specs,

@@ -45,6 +45,7 @@ class HKVEmbedding:
     score_policy: str = "lru"
     value_dtype: jnp.dtype = jnp.float32
     value_tier: str = "hbm"
+    backend: str = "auto"              # inserter backend: 'auto'|'jnp'|'kernel' (DESIGN.md §4)
 
     def config(self) -> HKVConfig:
         return HKVConfig(
@@ -90,7 +91,7 @@ class HKVEmbedding:
         cfg = self.config()
         keys = self.keys_of(tokens)
         init = self.default_rows(keys)
-        res = hkv_ops.find_or_insert(state, cfg, keys, init)
+        res = hkv_ops.find_or_insert(state, cfg, keys, init, backend=self.backend)
         emb = res.values.reshape(tokens.shape + (self.dim,))
         return res.state, emb
 

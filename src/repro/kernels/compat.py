@@ -1,0 +1,19 @@
+"""Pallas-TPU API compatibility aliases.
+
+The memory-space enum was renamed across JAX releases
+(``pltpu.TPUMemorySpace`` -> ``pltpu.MemorySpace``) and older releases have
+no distinct HBM member (``ANY`` leaves placement to the compiler, which
+puts large operands in HBM).  Every kernel module imports the spaces from
+here so the package runs on both API generations.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_SPACES = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+
+SMEM = _SPACES.SMEM
+VMEM = _SPACES.VMEM
+ANY = _SPACES.ANY
+HBM = getattr(_SPACES, "HBM", _SPACES.ANY)

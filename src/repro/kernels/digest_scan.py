@@ -37,6 +37,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 LANES = 128  # TPU vreg minor dimension == slots per bucket
 
 
@@ -67,9 +69,9 @@ def digest_scan_tlp(tdigests, tkey_hi, tkey_lo, buckets, qdigest, qkey_hi,
         num_scalar_prefetch=1,
         grid=(n,),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),  # qdigest (full)
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),  # qkey_hi
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),  # qkey_lo
+            pl.BlockSpec(memory_space=compat.SMEM),  # qdigest (full)
+            pl.BlockSpec(memory_space=compat.SMEM),  # qkey_hi
+            pl.BlockSpec(memory_space=compat.SMEM),  # qkey_lo
             pl.BlockSpec((1, s), lambda i, b: (b[i], 0)),       # digest row
             pl.BlockSpec((1, s), lambda i, b: (b[i], 0)),       # key_hi row
             pl.BlockSpec((1, s), lambda i, b: (b[i], 0)),       # key_lo row
@@ -171,14 +173,14 @@ def digest_scan_pipeline(tdigests, tkey_hi, tkey_lo, buckets, qdigest,
         grid=(tiles,),
         in_specs=[
             pl.BlockSpec((1, q_tile), lambda i, b: (i, 0),
-                         memory_space=pltpu.MemorySpace.SMEM),
+                         memory_space=compat.SMEM),
             pl.BlockSpec((1, q_tile), lambda i, b: (i, 0),
-                         memory_space=pltpu.MemorySpace.SMEM),
+                         memory_space=compat.SMEM),
             pl.BlockSpec((1, q_tile), lambda i, b: (i, 0),
-                         memory_space=pltpu.MemorySpace.SMEM),
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.HBM),  # digest plane
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.HBM),  # key_hi plane
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.HBM),  # key_lo plane
+                         memory_space=compat.SMEM),
+            pl.BlockSpec(memory_space=compat.HBM),  # digest plane
+            pl.BlockSpec(memory_space=compat.HBM),  # key_hi plane
+            pl.BlockSpec(memory_space=compat.HBM),  # key_lo plane
         ],
         out_specs=[
             pl.BlockSpec((1, q_tile), lambda i, b: (i, 0)),

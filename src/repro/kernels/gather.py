@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 
 def _gather_kernel(rows_ref, mask_ref, val_ref, out_ref):
     i = pl.program_id(0)
@@ -37,7 +39,7 @@ def gather_rows(values, rows, mask, *, interpret: bool = True):
         num_scalar_prefetch=1,
         grid=(n,),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),        # mask
+            pl.BlockSpec(memory_space=compat.SMEM),        # mask
             pl.BlockSpec((1, d), lambda i, r: (r[i], 0)),             # values row
         ],
         out_specs=pl.BlockSpec((1, d), lambda i, r: (i, 0)),

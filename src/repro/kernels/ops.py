@@ -4,16 +4,34 @@
 on CPU (the validation mode this container supports) and compile to Mosaic
 on real TPUs.  The wrappers are drop-in equivalents of the pure-jnp paths
 in `repro.core` and are cross-checked against them in tests.
+
+Role taxonomy coverage (paper §3.5; see also `repro.core.ops`):
+
+  READERS    kernel-backed here: locate_kernel (digest_scan tlp/pipeline),
+             find_kernel (digest_scan + gather_rows), bucket_stats_kernel
+             (score_scan).  jnp-only: contains/size/load_factor/export_*
+             (trivial reductions/slices — nothing for a kernel to win).
+  UPDATERS   kernel-backed here: assign_kernel (assign / assign_add via
+             scatter_rows).  jnp-only: assign_scores (scalar metadata
+             scatter, no value traffic).
+  INSERTERS  kernel-backed here: upsert_kernel / insert_and_evict_kernel /
+             find_or_insert_kernel — the fused upsert_scan path (probe +
+             claim row passes plus gather/scatter value stages) sharing
+             `core.merge.upsert`'s batch-closure orchestration, so results
+             are bit-identical to the pure-jnp path (DESIGN.md §4).
+             jnp-only: erase, clear, accum_or_assign.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import find as find_mod
+from repro.core import merge as merge_mod
 from repro.core import u64
 from repro.core.table import HKVConfig, HKVState
 from repro.core.u64 import U64
@@ -22,6 +40,7 @@ from repro.kernels import gather as _ga
 from repro.kernels import ref as _ref
 from repro.kernels import scatter as _sc
 from repro.kernels import score_scan as _ss
+from repro.kernels import upsert_scan as _us
 
 
 def default_interpret() -> bool:
@@ -147,6 +166,209 @@ def bucket_stats_kernel(state: HKVState, *, interpret: bool | None = None):
         state.key_hi, state.key_lo, state.score_hi, state.score_lo,
         bucket_tile=tile, interpret=interpret,
     )
+
+
+# =============================================================================
+# Inserter path: fused upsert/evict kernels (upsert_scan + gather/scatter)
+# =============================================================================
+
+
+def _kernel_locate_stage(cfg: HKVConfig, interpret: bool):
+    """UpsertStages.locate backed by the kernel match path.
+
+    Single-bucket mode reuses the digest-scan reader kernel (3 planes, one
+    row per query); dual mode uses the fused upsert_probe so both candidate
+    rows stream through one pass instead of two kernel launches.
+    """
+
+    def locate_single(state: HKVState, _cfg: HKVConfig, keys: U64, probe):
+        return locate_kernel(state, cfg, keys, interpret=interpret)
+
+    if cfg.buckets_per_key == 1:
+        return locate_single
+
+    def locate(state: HKVState, _cfg: HKVConfig, keys: U64, probe):
+        found, hit_sel, hit_slot, _tgt = _us.upsert_probe(
+            state.digests, state.key_hi, state.key_lo,
+            state.score_hi, state.score_lo,
+            probe.bucket1, probe.bucket2,
+            probe.digest.astype(jnp.uint32), keys.hi, keys.lo,
+            use_digest=cfg.use_digest, interpret=interpret,
+        )
+        fnd = found.astype(bool) & probe.valid
+        bucket = jnp.where(
+            found.astype(bool) & (hit_sel == 1), probe.bucket2, probe.bucket1
+        )
+        s = cfg.slots_per_bucket
+        return find_mod.Locate(
+            found=fnd, bucket=bucket, slot=hit_slot, row=bucket * s + hit_slot
+        )
+
+    return locate
+
+
+def _kernel_select_stage(cfg: HKVConfig, interpret: bool):
+    """UpsertStages.select_target backed by the same fused probe pass.
+
+    Runs against the post-phase-1 state (hit scores already updated), as the
+    batch closure requires: D2's lower-min-score comparison must see this
+    batch's score touches.
+    """
+
+    def select(state: HKVState, _cfg: HKVConfig, probe):
+        if cfg.buckets_per_key == 1:
+            return probe.bucket1
+        zeros = jnp.zeros_like(probe.bucket1, jnp.uint32)
+        _f, _hs, _sl, tgt_sel = _us.upsert_probe(
+            state.digests, state.key_hi, state.key_lo,
+            state.score_hi, state.score_lo,
+            probe.bucket1, probe.bucket2,
+            zeros, zeros, zeros,  # match result unused: stats-only pass
+            use_digest=cfg.use_digest, interpret=interpret,
+        )
+        return jnp.where(tgt_sel == 1, probe.bucket2, probe.bucket1)
+
+    return select
+
+
+def _kernel_victim_stage(cfg: HKVConfig, interpret: bool):
+    """UpsertStages.victim_at_rank backed by the claim_scan rank kernel."""
+
+    def victim(state: HKVState, _cfg: HKVConfig, bkt_g, rank):
+        s = cfg.slots_per_bucket
+        vslot, vocc, vsh, vsl, vkh, vkl = _us.claim_scan(
+            state.key_hi, state.key_lo, state.score_hi, state.score_lo,
+            bkt_g, jnp.clip(rank, 0, s - 1), interpret=interpret,
+        )
+        return vslot, vocc.astype(bool), U64(vsh, vsl), U64(vkh, vkl)
+
+    return victim
+
+
+def _kernel_gather_stage(cfg: HKVConfig, interpret: bool):
+    jnp_gather = merge_mod.jnp_stages().gather_values
+
+    def gather(_cfg: HKVConfig, values, rows, mask):
+        if cfg.value_tier != "hbm":  # host-tier rows cross via the jnp path
+            return jnp_gather(cfg, values, rows, mask)
+        rows = jnp.clip(rows, 0, values.shape[0] - 1)
+        return _ga.gather_rows(values, rows, mask.astype(jnp.int32),
+                               interpret=interpret)
+
+    return gather
+
+
+def _kernel_scatter_stage(cfg: HKVConfig, interpret: bool):
+    jnp_scatter = merge_mod.jnp_stages().scatter_values
+
+    def scatter(_cfg: HKVConfig, values, rows, updates, mask):
+        if cfg.value_tier != "hbm":
+            return jnp_scatter(cfg, values, rows, updates, mask)
+        rows = jnp.clip(rows, 0, values.shape[0] - 1)
+        return _sc.scatter_rows(values, rows, updates.astype(values.dtype),
+                                mask.astype(jnp.int32), add=False,
+                                interpret=interpret)
+
+    return scatter
+
+
+def kernel_stages(cfg: HKVConfig, *, interpret: bool | None = None
+                  ) -> merge_mod.UpsertStages:
+    """Kernel-backed implementations of every upsert stage contract."""
+    if interpret is None:
+        interpret = default_interpret()
+    return merge_mod.UpsertStages(
+        locate=_kernel_locate_stage(cfg, interpret),
+        select_target=_kernel_select_stage(cfg, interpret),
+        victim_at_rank=_kernel_victim_stage(cfg, interpret),
+        gather_values=_kernel_gather_stage(cfg, interpret),
+        scatter_values=_kernel_scatter_stage(cfg, interpret),
+    )
+
+
+def upsert_kernel(
+    state: HKVState,
+    cfg: HKVConfig,
+    keys: U64,
+    values: jax.Array,
+    *,
+    custom_scores: Optional[U64] = None,
+    write_hit_values: bool = True,
+    update_hit_scores: bool = True,
+    insert_values: Optional[jax.Array] = None,
+    return_evicted: bool = False,
+    interpret: bool | None = None,
+) -> merge_mod.MergeResult:
+    """Kernel-backed drop-in for core.merge.upsert (Alg. 2/3 batch closure).
+
+    Same orchestration, kernel stages: one fused probe pass (digest
+    pre-filter -> full-key match -> occupancy/min-score -> dual-bucket
+    selection), one claim pass (rank-r empty claim / argmin eviction /
+    rejection), and gather/scatter row kernels for the value plane.
+    Bit-identical to the pure-jnp path — statuses, evicted pairs, state.
+    """
+    return merge_mod.upsert(
+        state, cfg, keys, values,
+        custom_scores=custom_scores,
+        write_hit_values=write_hit_values,
+        update_hit_scores=update_hit_scores,
+        insert_values=insert_values,
+        return_evicted=return_evicted,
+        stages=kernel_stages(cfg, interpret=interpret),
+    )
+
+
+def insert_and_evict_kernel(
+    state: HKVState,
+    cfg: HKVConfig,
+    keys: U64,
+    values: jax.Array,
+    *,
+    custom_scores: Optional[U64] = None,
+    interpret: bool | None = None,
+) -> merge_mod.MergeResult:
+    """Kernel-backed insert_or_assign returning displaced entries in-launch
+    (the paper's single-kernel eviction hand-off)."""
+    return upsert_kernel(
+        state, cfg, keys, values, custom_scores=custom_scores,
+        return_evicted=True, interpret=interpret,
+    )
+
+
+def find_or_insert_kernel(
+    state: HKVState,
+    cfg: HKVConfig,
+    keys: U64,
+    init_values: jax.Array,
+    *,
+    custom_scores: Optional[U64] = None,
+    interpret: bool | None = None,
+):
+    """Kernel-backed find_or_insert: probe, admission-controlled insert of
+    misses, then a position-addressed gather of every now-present row.
+
+    Returns (state, values, found, status) with core.ops.find_or_insert
+    semantics: hits keep their stored value, rejected keys get the caller's
+    init row back (ephemeral).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    pre = locate_kernel(state, cfg, keys, interpret=interpret)
+    res = upsert_kernel(
+        state, cfg, keys, init_values, custom_scores=custom_scores,
+        write_hit_values=False, interpret=interpret,
+    )
+    post = locate_kernel(res.state, cfg, keys, interpret=interpret)
+    if cfg.value_tier == "hbm":
+        rows = jnp.clip(post.row, 0, res.state.values.shape[0] - 1)
+        vals = _ga.gather_rows(
+            res.state.values, rows, post.found.astype(jnp.int32),
+            interpret=interpret,
+        )[:, : cfg.dim]
+    else:
+        vals = find_mod.gather_values(res.state, post, cfg.dim, cfg.value_tier)
+    vals = jnp.where(post.found[:, None], vals, init_values[:, : cfg.dim])
+    return res.state, vals, pre.found, res.status
 
 
 # Re-exported oracles for tests/benches

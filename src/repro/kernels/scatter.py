@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 
 def _scatter_kernel(add, rows_ref, mask_ref, upd_ref, val_ref, out_ref):
     i = pl.program_id(0)
@@ -34,14 +36,31 @@ def _scatter_kernel(add, rows_ref, mask_ref, upd_ref, val_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("add", "interpret"))
 def scatter_rows(values, rows, updates, mask, *, add: bool,
                  interpret: bool = True):
-    """values[rows[i]] = (values[rows[i]] +)? updates[i]  where mask[i]."""
+    """values[rows[i]] = (values[rows[i]] +)? updates[i]  where mask[i].
+
+    A masked-out lane rewrites its (clipped) row unchanged — which would
+    clobber a masked-in write to the same row if it ran afterwards.  The
+    lanes are therefore sorted masked-out-first before the grid launch:
+    every no-op rewrite lands before any real write, so collisions between
+    masked-out and masked-in rows are harmless.  That keeps the value plane
+    aliased in place (no O(capacity) copies); the cost is one O(N·D) lane
+    permutation.  Uniqueness is required of the masked-in rows only.
+    """
     n = rows.shape[0]
-    d = values.shape[1]
+    r_tot, d = values.shape
+    # masked-out lanes first (ascending mask); stable keeps masked-in rows
+    # in caller order (they are unique, so order among them is free anyway)
+    mask_s, rows_s, perm = jax.lax.sort(
+        (mask.astype(jnp.int32), jnp.clip(rows, 0, r_tot - 1),
+         jnp.arange(n, dtype=jnp.int32)),
+        num_keys=1, is_stable=True,
+    )
+    updates_s = updates[perm]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(n,),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.MemorySpace.SMEM),   # mask
+            pl.BlockSpec(memory_space=compat.SMEM),   # mask
             pl.BlockSpec((1, d), lambda i, r: (i, 0)),           # update row
             pl.BlockSpec((1, d), lambda i, r: (r[i], 0)),        # value row (aliased)
         ],
@@ -54,4 +73,4 @@ def scatter_rows(values, rows, updates, mask, *, add: bool,
         input_output_aliases={3: 0},  # values plane updated in place
         interpret=interpret,
         name="hkv_scatter_rows",
-    )(rows, mask, updates, values)
+    )(rows_s, mask_s, updates_s, values)

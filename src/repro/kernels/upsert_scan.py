@@ -1,0 +1,228 @@
+"""Pallas TPU kernels for the fused upsert/evict path (paper §3.3, Alg. 2/3).
+
+The paper resolves a full-bucket upsert *in line*: one kernel pass performs
+digest pre-filter -> full-key match -> empty-slot claim -> score-argmin
+eviction (or admission rejection), with dual-bucket selection picking the
+target bucket.  This module is the TPU inserter-side counterpart of
+``digest_scan`` (the reader side): two per-query row-pass kernels that,
+together with the shared batch-closure orchestration in ``core/merge.py``,
+kernel-complete the hottest mutation path (DESIGN.md §4).
+
+  upsert_probe  one fused pass over a query's candidate bucket row(s):
+                digest pre-filter + full-key compare (Alg. 1), occupancy
+                count, lexicographic min-score reduction (Alg. 2 line 11),
+                and the dual-bucket two-phase D1/D2 selection (Alg. 3 /
+                Fig. 5) — all computed from a single HBM->VMEM row fetch
+                per candidate bucket, the same one-transaction property
+                the GPU design gets from its 128 B digest cache line.
+  claim_scan    rank-r victim extraction: for a miss with within-bucket
+                canonical rank r, return the r-th weakest slot of its
+                target bucket under the total victim order (empty-first,
+                then ascending score / key / slot).  Computed branch-free
+                via pairwise lexicographic ranking over the 128-lane row
+                (a 128x128 VPU compare block), so every query is
+                independent — no serialization, conflict-free claims.
+
+Both kernels execute with ``interpret=True`` off-TPU and are swept against
+the pure-jnp stages in tests/test_upsert_kernel.py (bit-identical statuses,
+evicted pairs, and post-state required).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
+
+
+# =============================================================================
+# upsert_probe: fused match + bucket-stats + dual-bucket selection
+# =============================================================================
+
+
+def _probe_kernel(use_digest, slots, b1_ref, b2_ref, qd_ref, qh_ref, ql_ref,
+                  d1_ref, h1_ref, l1_ref, s1h_ref, s1l_ref,
+                  d2_ref, h2_ref, l2_ref, s2h_ref, s2l_ref,
+                  found_ref, hitsel_ref, slot_ref, tgtsel_ref):
+    i = pl.program_id(0)
+    qd = qd_ref[i]
+    qh = qh_ref[i]
+    ql = ql_ref[i]
+    ONES = jnp.uint32(0xFFFFFFFF)
+
+    def row_pass(d_ref, h_ref, l_ref, sh_ref, sl_ref):
+        hh = h_ref[0, :]
+        ll = l_ref[0, :]
+        # full-key compare, gated by the one-lane-row digest pre-filter
+        m = (hh == qh) & (ll == ql)
+        if use_digest:
+            m &= d_ref[0, :].astype(jnp.uint32) == qd
+        occ_mask = ~((hh == ONES) & (ll == ONES))
+        # lexicographic u64 min over live slots (empties -> +inf sentinel)
+        shi = jnp.where(occ_mask, sh_ref[0, :], ONES)
+        slo = jnp.where(occ_mask, sl_ref[0, :], ONES)
+        min_hi = jnp.min(shi)
+        min_lo = jnp.min(jnp.where(shi == min_hi, slo, ONES))
+        return (
+            jnp.any(m),
+            jnp.argmax(m).astype(jnp.int32),
+            jnp.sum(occ_mask.astype(jnp.int32)),
+            min_hi,
+            min_lo,
+        )
+
+    hit1, slot1, occ1, m1h, m1l = row_pass(d1_ref, h1_ref, l1_ref, s1h_ref, s1l_ref)
+    hit2, slot2, occ2, m2h, m2l = row_pass(d2_ref, h2_ref, l2_ref, s2h_ref, s2l_ref)
+
+    found_ref[0, 0] = (hit1 | hit2).astype(jnp.int32)
+    hitsel_ref[0, 0] = jnp.where(hit1, 0, 1).astype(jnp.int32)
+    slot_ref[0, 0] = jnp.where(hit1, slot1, jnp.where(hit2, slot2, 0))
+    # dual-bucket two-phase policy: D1 less-loaded while free slots exist,
+    # D2 lower-min-score at full occupancy (ties -> primary in both phases)
+    any_free = (occ1 < slots) | (occ2 < slots)
+    d1_sel = (occ2 < occ1).astype(jnp.int32)
+    d2_sel = ((m2h < m1h) | ((m2h == m1h) & (m2l < m1l))).astype(jnp.int32)
+    tgtsel_ref[0, 0] = jnp.where(any_free, d1_sel, d2_sel)
+
+
+@functools.partial(jax.jit, static_argnames=("use_digest", "interpret"))
+def upsert_probe(tdigests, tkey_hi, tkey_lo, tscore_hi, tscore_lo,
+                 bucket1, bucket2, qdigest, qkey_hi, qkey_lo, *,
+                 use_digest: bool = True, interpret: bool = True):
+    """Fused per-query probe over both candidate bucket rows.
+
+    Returns (found, hit_sel, hit_slot, tgt_sel) int32 [N]:
+      found    1 iff the key matched in either candidate bucket
+      hit_sel  0 = matched (or defaulted) in bucket1, 1 = matched in bucket2
+      hit_slot matching slot (0 on miss)
+      tgt_sel  insertion target: 0 = bucket1, 1 = bucket2 (Alg. 3 selection)
+
+    Single-bucket mode: pass bucket2 == bucket1; hit_sel/tgt_sel collapse
+    to 0 by the tie--> -primary rule.
+    """
+    n = bucket1.shape[0]
+    s = tdigests.shape[1]
+    row = lambda i, b1, b2: (b1[i], 0)
+    row2 = lambda i, b1, b2: (b2[i], 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec(memory_space=compat.SMEM),  # qdigest
+            pl.BlockSpec(memory_space=compat.SMEM),  # qkey_hi
+            pl.BlockSpec(memory_space=compat.SMEM),  # qkey_lo
+            pl.BlockSpec((1, s), row),    # bucket1 digest row
+            pl.BlockSpec((1, s), row),    # bucket1 key_hi row
+            pl.BlockSpec((1, s), row),    # bucket1 key_lo row
+            pl.BlockSpec((1, s), row),    # bucket1 score_hi row
+            pl.BlockSpec((1, s), row),    # bucket1 score_lo row
+            pl.BlockSpec((1, s), row2),   # bucket2 digest row
+            pl.BlockSpec((1, s), row2),   # bucket2 key_hi row
+            pl.BlockSpec((1, s), row2),   # bucket2 key_lo row
+            pl.BlockSpec((1, s), row2),   # bucket2 score_hi row
+            pl.BlockSpec((1, s), row2),   # bucket2 score_lo row
+        ],
+        out_specs=[pl.BlockSpec((1, 1), lambda i, b1, b2: (i, 0))] * 4,
+    )
+    found, hit_sel, hit_slot, tgt_sel = pl.pallas_call(
+        functools.partial(_probe_kernel, use_digest, s),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n, 1), jnp.int32)] * 4,
+        interpret=interpret,
+        name="hkv_upsert_probe",
+    )(
+        bucket1, bucket2, qdigest, qkey_hi, qkey_lo,
+        tdigests, tkey_hi, tkey_lo, tscore_hi, tscore_lo,
+        tdigests, tkey_hi, tkey_lo, tscore_hi, tscore_lo,
+    )
+    return found[:, 0], hit_sel[:, 0], hit_slot[:, 0], tgt_sel[:, 0]
+
+
+# =============================================================================
+# claim_scan: rank-r victim extraction (empty-slot claim / argmin eviction)
+# =============================================================================
+
+
+def _claim_kernel(slots, bkt_ref, rank_ref, kh_ref, kl_ref, sh_ref, sl_ref,
+                  vslot_ref, vocc_ref, vsh_ref, vsl_ref, vkh_ref, vkl_ref):
+    i = pl.program_id(0)
+    r = rank_ref[i]
+    ONES = jnp.uint32(0xFFFFFFFF)
+    hh = kh_ref[0, :]
+    ll = kl_ref[0, :]
+    occ = (~((hh == ONES) & (ll == ONES))).astype(jnp.uint32)
+    shi = sh_ref[0, :]
+    slo = sl_ref[0, :]
+    slot_iota = jax.lax.iota(jnp.int32, slots)
+
+    # Pairwise lexicographic rank under the victim total order
+    # (occupied asc, score_hi asc, score_lo asc, key_hi asc, key_lo asc,
+    # slot asc).  rho[s] = #entries strictly weaker than slot s; since the
+    # 6-tuples are distinct (slot tiebreak), rho is a permutation and the
+    # rank-r victim is the unique slot with rho == r.
+    lt_m = jnp.zeros((slots, slots), jnp.bool_)
+    eq_m = jnp.ones((slots, slots), jnp.bool_)
+    for plane in (occ, shi, slo, hh, ll, slot_iota):
+        lt_m = lt_m | (eq_m & (plane[:, None] < plane[None, :]))
+        eq_m = eq_m & (plane[:, None] == plane[None, :])
+    rho = jnp.sum(lt_m.astype(jnp.int32), axis=0)
+
+    sel = rho == r
+    pick32 = lambda a: jnp.max(jnp.where(sel, a, jnp.uint32(0)))
+    vslot_ref[0, 0] = jnp.argmax(sel).astype(jnp.int32)
+    vocc_ref[0, 0] = jnp.max(jnp.where(sel, occ, jnp.uint32(0))).astype(jnp.int32)
+    vsh_ref[0, 0] = pick32(shi)
+    vsl_ref[0, 0] = pick32(slo)
+    vkh_ref[0, 0] = pick32(hh)
+    vkl_ref[0, 0] = pick32(ll)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def claim_scan(tkey_hi, tkey_lo, tscore_hi, tscore_lo, buckets, rank, *,
+               interpret: bool = True):
+    """Per-query rank-r victim of each target bucket row.
+
+    buckets : int32 [N] target bucket per (canonically sorted) miss
+    rank    : int32 [N] within-bucket canonical rank, pre-clipped to [0, S)
+
+    Returns (slot, occupied, score_hi, score_lo, key_hi, key_lo), each [N]:
+    the entry the rank-r incoming key is paired against — an empty slot
+    (claim), or the rank-r weakest live entry (evict if strictly beaten,
+    reject otherwise).  Reads only: claims are scattered by the caller, so
+    queries stay independent and the pass pipelines like the find path.
+    """
+    n = buckets.shape[0]
+    s = tkey_hi.shape[1]
+    row = lambda i, b: (b[i], 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec(memory_space=compat.SMEM),  # rank
+            pl.BlockSpec((1, s), row),    # key_hi row
+            pl.BlockSpec((1, s), row),    # key_lo row
+            pl.BlockSpec((1, s), row),    # score_hi row
+            pl.BlockSpec((1, s), row),    # score_lo row
+        ],
+        out_specs=[pl.BlockSpec((1, 1), lambda i, b: (i, 0))] * 6,
+    )
+    vslot, vocc, vsh, vsl, vkh, vkl = pl.pallas_call(
+        functools.partial(_claim_kernel, s),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((n, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((n, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((n, 1), jnp.uint32),
+        ],
+        interpret=interpret,
+        name="hkv_claim_scan",
+    )(buckets, rank, tkey_hi, tkey_lo, tscore_hi, tscore_lo)
+    return (vslot[:, 0], vocc[:, 0], vsh[:, 0], vsl[:, 0], vkh[:, 0], vkl[:, 0])

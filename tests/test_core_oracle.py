@@ -11,6 +11,8 @@ duplicate keys, and sentinel padding.
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import ops, table, u64

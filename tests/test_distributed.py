@@ -15,6 +15,8 @@ import json
 import numpy as np
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import shard_map
 """
 
 
@@ -109,7 +111,7 @@ def test_compressed_psum_close_to_exact():
     def body(x):
         return compressed_psum(x, "d")
 
-    y = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("d"),
+    y = jax.jit(shard_map(body, mesh=mesh, in_specs=P("d"),
                               out_specs=P("d"), check_vma=False))(x)
     exact = jnp.broadcast_to(x.sum(0, keepdims=True), x.shape)
     err = float(jnp.max(jnp.abs(y - exact)) / (jnp.max(jnp.abs(exact)) + 1e-9))
@@ -130,7 +132,7 @@ def test_error_feedback_accumulates():
         # second step: error feedback should be non-zero
         return synced["w"], e2["w"]
 
-    s, e = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=({"w": P("d")},),
+    s, e = jax.jit(shard_map(body, mesh=mesh, in_specs=({"w": P("d")},),
                                  out_specs=(P("d"), P("d")), check_vma=False))(g)
     exact = jnp.broadcast_to(g["w"].mean(0, keepdims=True), g["w"].shape)
     rel = float(jnp.max(jnp.abs(s - exact)) / (jnp.max(jnp.abs(exact)) + 1e-9))

@@ -34,32 +34,36 @@ def kv_per_s(batch: int, seconds: float) -> float:
 EMPTY_KEY = np.uint64(0xFFFFFFFFFFFFFFFF)
 
 
-def make_insert_jit(cfg):
-    """One jitted insert_or_assign closure reused for every fill batch."""
-    import jax
-    import jax.numpy as jnp
+def make_insert_jit():
+    """One jitted insert_or_assign closure over a KVTable handle.
 
-    from repro.core import ops, u64
+    The handle is a pytree (static cfg/backend in aux data), so one
+    closure serves every table — HKV or baseline — and every fill batch;
+    retraces happen per distinct config, exactly like a static cfg arg.
+    """
+    import jax
+
+    from repro.core import U64
 
     @jax.jit
-    def ins(state, kh, kl, v):
-        return ops.insert_or_assign(state, cfg, u64.U64(kh, kl), v).state
+    def ins(table, kh, kl, v):
+        return table.insert_or_assign(U64(kh, kl), v).table
 
     return ins
 
 
-def fill_table(cfg, state, keys: np.ndarray, dim: int, batch: int = 4096,
-               ins=None):
+def fill_table(table, keys: np.ndarray, batch: int = 4096, ins=None):
+    """Stream `keys` into any KVTable handle; returns the filled handle."""
     import jax.numpy as jnp
 
     from repro.core import u64
 
-    ins = ins or make_insert_jit(cfg)
-    zeros = jnp.zeros((batch, dim), jnp.float32)
+    ins = ins or make_insert_jit()
+    zeros = jnp.zeros((batch, table.dim), jnp.float32)
     for kb in fill_batches(keys, batch):
         k = u64.from_uint64(kb)
-        state = ins(state, k.hi, k.lo, zeros)
-    return state
+        table = ins(table, k.hi, k.lo, zeros)
+    return table
 
 
 def fill_batches(keys: np.ndarray, batch: int = 4096):

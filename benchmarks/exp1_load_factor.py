@@ -8,19 +8,22 @@ Reproduced claims (hardware-independent form):
     capacity; bucketed-P2C silently drops inserts at λ=1.0 (BP2HT's 48%);
   * structural probe counts match Table 3 (HKV: 1 bucket row; P2C: 2;
     OA: grows super-linearly).
+
+Every table runs through ONE harness over the `KVTable` protocol
+(`repro.core.api`): the same fill loop, the same jitted find/insert
+closures, the same row format — the capability gap shows up in the data
+(`.ok` rates, reached λ), not in per-table driver code.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Csv, fill_batches, kv_per_s, make_insert_jit, time_fn
-from repro.baselines import BucketedP2CTable, OpenAddressingTable
-from repro.core import ops, table, u64
+from benchmarks.common import EMPTY_KEY, Csv, kv_per_s, make_insert_jit, time_fn
+from repro.baselines import DictKVTable
+from repro.core import HKVTable, U64, u64
 
 CAPACITY = 128 * 128   # 16,384 slots
 BATCH = 4096
@@ -28,106 +31,88 @@ DIM = 32
 LAMBDAS = (0.25, 0.50, 0.75, 0.95, 1.00)
 
 
-def _fill_hkv(cfg, state, rng, target, ins):
-    """Fill to target λ with constant-shape sentinel-padded batches."""
-    zeros = jnp.zeros((BATCH, DIM), jnp.float32)
-    empty = np.uint64(0xFFFFFFFFFFFFFFFF)
-    for _ in range(200):  # λ→1 convergence is asymptotic (evictions begin)
-        lf = float(ops.load_factor(state))
+def fill_to_lambda(table, target: float, rng, ins, batch: int = 2048,
+                   max_attempts: int = 200):
+    """Drive any KVTable to load factor `target` with fresh random keys.
+
+    Constant-shape sentinel-padded batches; stops at the target, at
+    `max_attempts`, or when the table stops accepting keys (the
+    dictionary-semantic stall the experiment is designed to expose).
+    The stall detector tolerates several zero-progress rounds: near
+    λ=1.0 an HKV batch of fresh keys can resolve purely by in-place
+    eviction (size unchanged) while convergence continues — only a
+    sustained stall means insert capability is exhausted.
+    """
+    zeros = jnp.zeros((batch, table.dim), jnp.float32)
+    prev, stalled = -1, 0
+    for _ in range(max_attempts):
+        lf = float(table.load_factor())
         if lf >= target - 1e-6:
             break
-        need = min(int((target - lf) * cfg.capacity) + 1, BATCH)
-        keys = np.full(BATCH, empty, np.uint64)
+        size = int(table.size())
+        stalled = stalled + 1 if size == prev else 0
+        if stalled >= 16:  # sustained no-progress: capability exhausted
+            break
+        prev = size
+        need = min(int((target - lf) * table.capacity) + 1, batch)
+        keys = np.full(batch, EMPTY_KEY, np.uint64)
         keys[:need] = rng.integers(0, 2**50, size=need).astype(np.uint64)
         k = u64.from_uint64(keys)
-        state = ins(state, k.hi, k.lo, zeros)
-    return state
+        table = ins(table, k.hi, k.lo, zeros)
+    return table
+
+
+def bench_table(csv: Csv, name: str, table, rng):
+    """The one measurement path every table goes through."""
+    ins = make_insert_jit()
+    find_j = jax.jit(lambda t, kh, kl: t.find(U64(kh, kl)))
+    find_times = {}
+    for lam in LAMBDAS:
+        table = fill_to_lambda(table, lam, rng, ins)
+        reached = float(table.load_factor())
+        qk = rng.integers(0, 2**50, size=BATCH).astype(np.uint64)
+        k = u64.from_uint64(qk)
+        t = time_fn(find_j, table, k.hi, k.lo)
+        find_times[lam] = t
+        rep = find_j(table, k.hi, k.lo)
+        probes = getattr(rep, "probes", None)
+        extra = (f",avg_probes={float(np.asarray(probes).mean()):.1f}"
+                 if probes is not None else "")
+        csv.row(f"{name}/find/lf={lam:.2f}", t,
+                f"{kv_per_s(BATCH, t)/1e6:.2f}M-KV/s,"
+                f"reached_lf={reached:.3f}{extra}")
+        vk = u64.from_uint64(rng.integers(0, 2**50, size=BATCH).astype(np.uint64))
+        ti = time_fn(ins, table, vk.hi, vk.lo, jnp.zeros((BATCH, DIM)))
+        csv.row(f"{name}/insert/lf={lam:.2f}", ti,
+                f"{kv_per_s(BATCH, ti)/1e6:.2f}M-KV/s")
+    spread = (max(find_times.values()) - min(find_times.values())) / min(
+        find_times.values()
+    )
+    csv.row(f"{name}/find/lf-variation", None, f"{spread*100:.1f}%")
+    # capability at capacity: fresh keys against the (near-)full table
+    extra_k = rng.integers(2**51, 2**52, size=2048).astype(np.uint64)
+    rep = table.insert_or_assign(u64.from_uint64(extra_k),
+                                 jnp.zeros((2048, DIM)))
+    ok = float(np.asarray(rep.ok).mean())
+    csv.row(f"{name}/insert-at-capacity", None,
+            f"resolved={ok*100:.0f}%,failed={100*(1-ok):.0f}%")
+    return table
 
 
 def run(csv: Csv | None = None):
-    csv = csv or Csv("Exp#1 load-factor sensitivity (Fig. 6 / Tables 3+6)")
+    csv = csv or Csv("Exp#1 load-factor sensitivity (Fig. 6 / Tables 3+6) "
+                     "[one KVTable harness]")
     rng = np.random.default_rng(0)
-
-    # ---- HKV ----------------------------------------------------------------
-    cfg = table.HKVConfig(capacity=CAPACITY, dim=DIM, buckets_per_key=1)
-    state = table.create(cfg)
-    find_j = jax.jit(lambda s, kh, kl: ops.find(s, cfg, u64.U64(kh, kl)).values)
-    ins_j = make_insert_jit(cfg)
-    hkv_find = {}
-    for lam in LAMBDAS:
-        state = _fill_hkv(cfg, state, rng, lam, ins_j)
-        # query mix: half hits, half misses (the paper's uniform-random sweep)
-        qk = rng.integers(0, 2**50, size=BATCH).astype(np.uint64)
-        k = u64.from_uint64(qk)
-        t = time_fn(find_j, state, k.hi, k.lo)
-        hkv_find[lam] = t
-        csv.row(f"hkv/find/lf={lam:.2f}", t, f"{kv_per_s(BATCH, t)/1e6:.2f}M-KV/s")
-        vk = u64.from_uint64(rng.integers(0, 2**50, size=BATCH).astype(np.uint64))
-        ti = time_fn(ins_j, state, vk.hi, vk.lo, jnp.zeros((BATCH, DIM)))
-        csv.row(f"hkv/insert/lf={lam:.2f}", ti,
-                f"{kv_per_s(BATCH, ti)/1e6:.2f}M-KV/s,resolved-in-place")
-    spread = (max(hkv_find.values()) - min(hkv_find.values())) / min(hkv_find.values())
-    csv.row("hkv/find/lf-variation", None, f"{spread*100:.1f}%[paper:<5%]")
-
-    # ---- Open addressing (WarpCore/cuCollections family) ---------------------
-    oa = OpenAddressingTable(capacity=CAPACITY, dim=DIM)
-    oas = oa.create()
-    oaf = jax.jit(lambda s, kh, kl: oa.find(s, u64.U64(kh, kl)))
-    oai = jax.jit(lambda s, kh, kl, v: oa.insert(s, u64.U64(kh, kl), v))
-    zeros2k = jnp.zeros((2048, DIM), jnp.float32)
-    empty = np.uint64(0xFFFFFFFFFFFFFFFF)
-    filled = 0
-    for lam in LAMBDAS:
-        target = int(lam * CAPACITY)
-        while filled < target:
-            need = min(target - filled, 2048)
-            keys = np.full(2048, empty, np.uint64)
-            keys[:need] = rng.integers(0, 2**50, size=need).astype(np.uint64)
-            k = u64.from_uint64(keys)
-            rep = oai(oas, k.hi, k.lo, zeros2k)
-            oas = rep.state
-            filled += int(np.asarray(rep.ok).sum())
-        qk = rng.integers(0, 2**50, size=BATCH).astype(np.uint64)
-        k = u64.from_uint64(qk)
-        t = time_fn(oaf, oas, k.hi, k.lo)
-        probes = float(np.asarray(oaf(oas, k.hi, k.lo).probes).mean())
-        csv.row(f"openaddr/find/lf={lam:.2f}", t,
-                f"{kv_per_s(BATCH, t)/1e6:.2f}M-KV/s,avg_probes={probes:.1f}")
-    # capability gap: inserting beyond capacity FAILS
-    extra = rng.integers(2**51, 2**52, size=2048).astype(np.uint64)
-    rep = oa.insert(oas, u64.from_uint64(extra), jnp.zeros((2048, DIM)))
-    fail = 1.0 - float(np.asarray(rep.ok).mean())
-    csv.row("openaddr/insert-at-capacity", None, f"fail_rate={fail*100:.0f}%")
-
-    # ---- Bucketed P2C (BGHT/BP2HT family) ------------------------------------
-    p2c = BucketedP2CTable(capacity=CAPACITY, dim=DIM)
-    ps = p2c.create()
-    p2cf = jax.jit(lambda s, kh, kl: p2c.find(s, u64.U64(kh, kl)))
-    p2ci = jax.jit(lambda s, kh, kl, v: p2c.insert(s, u64.U64(kh, kl), v))
-    filled = 0
-    for lam in LAMBDAS:
-        target = int(lam * CAPACITY)
-        attempts = 0
-        while filled < target and attempts < 50:
-            need = min(target - filled + 64, 2048)
-            keys = np.full(2048, empty, np.uint64)
-            keys[:need] = rng.integers(0, 2**50, size=need).astype(np.uint64)
-            k = u64.from_uint64(keys)
-            rep = p2ci(ps, k.hi, k.lo, zeros2k)
-            ps = rep.state
-            filled += int(np.asarray(rep.ok).sum())
-            attempts += 1
-        qk = rng.integers(0, 2**50, size=BATCH).astype(np.uint64)
-        k = u64.from_uint64(qk)
-        t = time_fn(p2cf, ps, k.hi, k.lo)
-        csv.row(f"bucketp2c/find/lf={lam:.2f}", t,
-                f"{kv_per_s(BATCH, t)/1e6:.2f}M-KV/s,probes<=2,"
-                f"reached_lf={filled/CAPACITY:.2f}")
-    extra = rng.integers(2**51, 2**52, size=2048).astype(np.uint64)
-    rep = p2c.insert(ps, u64.from_uint64(extra), jnp.zeros((2048, DIM)))
-    ok = float(np.asarray(rep.ok).mean())
-    csv.row("bucketp2c/insert-at-lf1.0", None,
-            f"success={ok*100:.0f}%[paper:BP2HT=48%]")
+    tables = {
+        # single-bucket HKV: the baseline-comparable configuration
+        "hkv": HKVTable.create(capacity=CAPACITY, dim=DIM, buckets_per_key=1),
+        # WarpCore / cuCollections family
+        "openaddr": DictKVTable.open_addressing(CAPACITY, DIM),
+        # BGHT / BP2HT family
+        "bucketp2c": DictKVTable.bucketed_p2c(CAPACITY, DIM),
+    }
+    for name, table in tables.items():
+        bench_table(csv, name, table, rng)
 
 
 if __name__ == "__main__":

@@ -7,7 +7,8 @@ dimension-INDEPENDENT; find (value copy) scales with dim; assign varies
 little with λ (non-structural); insert_or_assign pays a bounded eviction
 overhead at λ=1.0.
 
-The inserter ops run on a selectable backend (DESIGN.md §4):
+All ops run through the `HKVTable` handle; the inserter backend is part
+of the handle (DESIGN.md §4):
 
     PYTHONPATH=src python -m benchmarks.exp2_throughput --backend kernel
 
@@ -24,8 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Csv, fill_table, kv_per_s, make_insert_jit, time_fn
-from repro.core import find as find_mod
-from repro.core import ops, table, u64
+from repro.core import HKVTable, U64, u64
 
 CAPACITY = 64 * 128
 BATCH = 4096
@@ -40,12 +40,10 @@ def _insert_batch(backend: str) -> int:
     return BATCH
 
 
-def _fill(cfg, rng, lam, ins):
-    state = table.create(cfg)
-    n = int(lam * cfg.capacity)
+def _fill(table, rng, lam, ins):
+    n = int(lam * table.capacity)
     keys = rng.integers(0, 2**50, size=n).astype(np.uint64)
-    state = fill_table(cfg, state, keys, cfg.dim, ins=ins)
-    return state, keys
+    return fill_table(table, keys, ins=ins), keys
 
 
 def run(csv: Csv | None = None, backend: str = "jnp"):
@@ -53,35 +51,34 @@ def run(csv: Csv | None = None, backend: str = "jnp"):
     csv = csv or Csv(f"Exp#2 API throughput (configs A-C, Figs. 7/8){tag}")
     rng = np.random.default_rng(1)
     ibatch = _insert_batch(backend)
+    ins_shared = make_insert_jit()
     for name, dim in CONFIGS.items():
-        cfg = table.HKVConfig(capacity=CAPACITY, dim=dim)
-        ins_shared = make_insert_jit(cfg)
         for lam in (0.5, 1.0):
-            state, keys = _fill(cfg, rng, lam, ins_shared)
+            # fill on the jnp backend (interpret-mode kernels would make
+            # the fill dominate off-TPU), measure on the requested one
+            table = HKVTable.create(capacity=CAPACITY, dim=dim, backend="jnp")
+            table, keys = _fill(table, rng, lam, ins_shared)
+            table = table.with_backend(backend)
             hot = u64.from_uint64(rng.choice(keys, size=BATCH))
             hot_i = u64.from_uint64(rng.choice(keys, size=ibatch))
             vals = jnp.asarray(rng.normal(size=(ibatch, dim)), jnp.float32)
 
-            find_j = jax.jit(lambda s, h, l: ops.find(s, cfg, u64.U64(h, l)).values)
-            findp_j = jax.jit(lambda s, h, l: find_mod.locate(s, cfg, u64.U64(h, l)).row)
-            cont_j = jax.jit(lambda s, h, l: ops.contains(s, cfg, u64.U64(h, l)))
+            find_j = jax.jit(lambda t, h, l: t.find(U64(h, l)).values)
+            findp_j = jax.jit(lambda t, h, l: t.find_ptr(U64(h, l)).row)
+            cont_j = jax.jit(lambda t, h, l: t.contains(U64(h, l)))
             ins_j = jax.jit(
-                lambda s, h, l, v: ops.insert_or_assign(
-                    s, cfg, u64.U64(h, l), v, backend=backend).state
-            )
+                lambda t, h, l, v: t.insert_or_assign(U64(h, l), v).table)
             ine_j = jax.jit(
-                lambda s, h, l, v: ops.insert_and_evict(
-                    s, cfg, u64.U64(h, l), v, backend=backend).state
-            )
-            asg_j = jax.jit(lambda s, h, l, v: ops.assign(s, cfg, u64.U64(h, l), v))
+                lambda t, h, l, v: t.insert_and_evict(U64(h, l), v).table)
+            asg_j = jax.jit(lambda t, h, l, v: t.assign(U64(h, l), v))
 
             for api, fn, n, args in (
-                ("find", find_j, BATCH, (state, hot.hi, hot.lo)),
-                ("find_ptr", findp_j, BATCH, (state, hot.hi, hot.lo)),
-                ("contains", cont_j, BATCH, (state, hot.hi, hot.lo)),
-                ("insert_or_assign", ins_j, ibatch, (state, hot_i.hi, hot_i.lo, vals)),
-                ("insert_and_evict", ine_j, ibatch, (state, hot_i.hi, hot_i.lo, vals)),
-                ("assign", asg_j, ibatch, (state, hot_i.hi, hot_i.lo, vals)),
+                ("find", find_j, BATCH, (table, hot.hi, hot.lo)),
+                ("find_ptr", findp_j, BATCH, (table, hot.hi, hot.lo)),
+                ("contains", cont_j, BATCH, (table, hot.hi, hot.lo)),
+                ("insert_or_assign", ins_j, ibatch, (table, hot_i.hi, hot_i.lo, vals)),
+                ("insert_and_evict", ine_j, ibatch, (table, hot_i.hi, hot_i.lo, vals)),
+                ("assign", asg_j, ibatch, (table, hot_i.hi, hot_i.lo, vals)),
             ):
                 t = time_fn(fn, *args)
                 csv.row(f"{api}/cfg{name}(dim={dim})/lf={lam}", t,
@@ -90,18 +87,21 @@ def run(csv: Csv | None = None, backend: str = "jnp"):
     # config D (paper Table 5): HBM keys + HMEM (host-tier) values. The
     # paper's claim: the pointer-returning find* is tier-INDEPENDENT (keys
     # never leave HBM); value-copying find pays the host link per row.
-    import dataclasses as _dc
-
     from repro.core import table as table_mod
 
-    cfgd = table.HKVConfig(capacity=CAPACITY, dim=64, value_tier="hmem")
-    state, keys = _fill(cfgd, rng, 1.0, make_insert_jit(cfgd))
-    state = table_mod.place_value_tier(state)
+    tabled = HKVTable.create(capacity=CAPACITY, dim=64, value_tier="hmem",
+                             backend="jnp")
+    tabled, keys = _fill(tabled, rng, 1.0, ins_shared)
+    # re-pin after the fill: each jitted insert returns a fresh values
+    # array placed by XLA's default (device) memory, undoing the
+    # create-time pinned_host placement the tier measurement needs
+    tabled = tabled.with_state(table_mod.place_value_tier(tabled.state))
+    tabled = tabled.with_backend(backend)
     hot = u64.from_uint64(rng.choice(keys, size=BATCH))
-    findd_j = jax.jit(lambda s, h, l: ops.find(s, cfgd, u64.U64(h, l)).values)
-    findpd_j = jax.jit(lambda s, h, l: find_mod.locate(s, cfgd, u64.U64(h, l)).row)
-    td = time_fn(findd_j, state, hot.hi, hot.lo)
-    tpd = time_fn(findpd_j, state, hot.hi, hot.lo)
+    findd_j = jax.jit(lambda t, h, l: t.find(U64(h, l)).values)
+    findpd_j = jax.jit(lambda t, h, l: t.find_ptr(U64(h, l)).row)
+    td = time_fn(findd_j, tabled, hot.hi, hot.lo)
+    tpd = time_fn(findpd_j, tabled, hot.hi, hot.lo)
     csv.row("find/cfgD(dim=64,hmem)/lf=1.0", td,
             f"{kv_per_s(BATCH, td)/1e6:.2f}M-KV/s,values-cross-tier")
     csv.row("find_ptr/cfgD(dim=64,hmem)/lf=1.0", tpd,

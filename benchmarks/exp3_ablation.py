@@ -9,34 +9,34 @@
       (Δhit = 0), high-score burst displaces residents.
   3e  triple-group concurrency adaptation (Exp#3e): reader+updater ops
       FUSED into one jitted program (the role split lets XLA overlap them)
-      vs serialized separate dispatches.
+      vs serialized separate dispatches — plus the op-session planner,
+      which additionally shares ONE locate across the commuting pair.
   3f  upsert backend (DESIGN.md §4): insert_or_assign throughput on the
       pure-jnp batch closure vs the fused Pallas upsert path.  Off-TPU the
       kernel executes in interpret mode, so 3f reports it as a correctness
       checkpoint (statuses must agree), not a wall-clock comparison.
+
+All table traffic goes through the `HKVTable` handle.
 """
 
 from __future__ import annotations
-
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Csv, fill_table, kv_per_s, make_insert_jit, time_fn
-from repro.core import ops, table, u64
+from benchmarks.common import Csv, fill_batches, fill_table, kv_per_s, \
+    make_insert_jit, time_fn
+from repro.core import HKVTable, U64, u64
 from repro.data import zipf_keys
 
 CAPACITY = 64 * 128
 BATCH = 4096
 
 
-def _fill_full(cfg, rng):
-    state = table.create(cfg)
-    keys = rng.integers(0, 2**50, size=2 * cfg.capacity).astype(np.uint64)
-    state = fill_table(cfg, state, keys, cfg.dim)
-    return state, keys
+def _fill_full(table, rng):
+    keys = rng.integers(0, 2**50, size=2 * table.capacity).astype(np.uint64)
+    return fill_table(table, keys), keys
 
 
 def run(csv: Csv | None = None):
@@ -50,19 +50,16 @@ def run(csv: Csv | None = None):
     # The pure-jnp CPU path computes both compares regardless (no I/O to
     # save), so we report the structural I/O ratio driven by the MEASURED
     # false-positive rate, and validate fp_rate == 1/256 per slot.
-    from repro.core import find as find_mod
-
     for lam_name, lam in (("0.50", 0.5), ("1.00", 1.0)):
-        base = table.HKVConfig(capacity=CAPACITY, dim=32)
-        state = table.create(base)
+        table = HKVTable.create(capacity=CAPACITY, dim=32)
         n = int(lam * CAPACITY)
         keys = rng.integers(0, 2**50, size=n).astype(np.uint64)
-        state = fill_table(base, state, keys, 32)
+        table = fill_table(table, keys)
         q = u64.from_uint64(rng.integers(0, 2**51, size=BATCH).astype(np.uint64))
-        probe = find_mod.probe_keys(base, q)
-        drow = np.asarray(state.digests)[np.asarray(probe.bucket1)]
+        probe = table.probe_keys(q)
+        drow = np.asarray(table.state.digests)[np.asarray(probe.bucket1)]
         fp = float((drow == np.asarray(probe.digest)[:, None]).sum(axis=1).mean())
-        s = base.slots_per_bucket
+        s = table.cfg.slots_per_bucket
         bytes_with = s * 1 + fp * 8          # digest row + fp full keys
         bytes_without = s * 8                # both uint32 key planes
         csv.row(f"3a/digest/lf={lam_name}", None,
@@ -71,107 +68,117 @@ def run(csv: Csv | None = None):
                 f"[paper wall-clock:1.65-2.61x on H100]")
 
     # ---- 3b: eviction overhead -----------------------------------------------
-    cfg = table.HKVConfig(capacity=CAPACITY, dim=32)
-    ins_j = make_insert_jit(cfg)
+    ins_j = make_insert_jit()
     for lam in (0.5, 1.0):
-        state = table.create(cfg)
+        table = HKVTable.create(capacity=CAPACITY, dim=32)
         n = int(lam * CAPACITY)
         keys = rng.integers(0, 2**50, size=max(n, 1)).astype(np.uint64)
-        state = fill_table(cfg, state, keys, 32, ins=ins_j)
+        table = fill_table(table, keys, ins=ins_j)
         fresh = u64.from_uint64(rng.integers(2**51, 2**52, size=BATCH).astype(np.uint64))
-        t = time_fn(ins_j, state, fresh.hi, fresh.lo, jnp.zeros((BATCH, 32)))
+        t = time_fn(ins_j, table, fresh.hi, fresh.lo, jnp.zeros((BATCH, 32)))
         csv.row(f"3b/insert/lf={lam}", t, f"{kv_per_s(BATCH, t)/1e6:.2f}M-KV/s")
 
     # ---- 3c: hit rate by policy x zipf alpha (Table 8) ------------------------
     for policy in ("lru", "lfu", "epoch_lru", "epoch_lfu"):
         for alpha in (0.50, 0.75, 0.99, 1.25):
-            cfg = table.HKVConfig(capacity=32 * 128, dim=4, score_policy=policy)
-            state = table.create(cfg)
-            ins_p = make_insert_jit(cfg)
-            con_p = jax.jit(lambda s, h, l: ops.contains(s, cfg, u64.U64(h, l)))
+            table = HKVTable.create(capacity=32 * 128, dim=4,
+                                    score_policy=policy)
+            ins_p = make_insert_jit()
+            con_p = jax.jit(lambda t, h, l: t.contains(U64(h, l)))
             zeros4 = jnp.zeros((2048, 4), jnp.float32)
             rng_a = np.random.default_rng(42)
             hits = total = 0
             steps = 40
-            key_space = 16 * cfg.capacity
+            key_space = 16 * table.capacity
             for step in range(steps):
                 keys = zipf_keys(rng_a, 2048, alpha, key_space)
                 k = u64.from_uint64(keys)
                 if step >= steps // 2:  # measure after warm-up
-                    found = np.asarray(con_p(state, k.hi, k.lo))
+                    found = np.asarray(con_p(table, k.hi, k.lo))
                     hits += int(found.sum())
                     total += len(keys)
-                state = ins_p(state, k.hi, k.lo, zeros4)
+                table = ins_p(table, k.hi, k.lo, zeros4)
             csv.row(f"3c/hit_rate/{policy}/alpha={alpha}", None,
                     f"{100*hits/max(total,1):.1f}%")
 
     # ---- 3d: admission control burst (Table 9) --------------------------------
-    cfg = table.HKVConfig(capacity=32 * 128, dim=4, score_policy="custom")
-    state = table.create(cfg)
-    resident = rng.integers(0, 2**40, size=3 * cfg.capacity).astype(np.uint64)
-    ins_c = jax.jit(lambda s, h, l, v, sh, sl: ops.insert_or_assign(
-        s, cfg, u64.U64(h, l), v, custom_scores=u64.U64(sh, sl)).state)
+    table = HKVTable.create(capacity=32 * 128, dim=4, score_policy="custom")
+    resident = rng.integers(0, 2**40, size=3 * table.capacity).astype(np.uint64)
+    ins_c = jax.jit(lambda t, h, l, v, sh, sl: t.insert_or_assign(
+        U64(h, l), v, custom_scores=U64(sh, sl)).table)
     sc1000 = u64.from_uint64(np.full(4096, 1000, np.uint64))
-    from benchmarks.common import fill_batches
     for kb in fill_batches(resident, 4096):
         k = u64.from_uint64(kb)
-        state = ins_c(state, k.hi, k.lo, jnp.zeros((4096, 4)), sc1000.hi, sc1000.lo)
+        table = ins_c(table, k.hi, k.lo, jnp.zeros((4096, 4)),
+                      sc1000.hi, sc1000.lo)
     probe = rng.choice(resident, size=2048)
-    pre = float(np.asarray(ops.contains(state, cfg, u64.from_uint64(probe))).mean())
+    pre = float(np.asarray(table.contains(probe)).mean())
     burst = rng.integers(2**41, 2**42, size=1024).astype(np.uint64)
     for score, label in ((1, "low"), (10**9, "high")):
-        r = ops.insert_or_assign(
-            state, cfg, u64.from_uint64(burst), jnp.zeros((1024, 4)),
-            custom_scores=u64.from_uint64(np.full(1024, score, np.uint64)),
+        r = table.insert_or_assign(
+            burst, jnp.zeros((1024, 4)),
+            custom_scores=np.full(1024, score, np.uint64),
         )
-        post = float(np.asarray(ops.contains(r.state, cfg, u64.from_uint64(probe))).mean())
+        post = float(np.asarray(r.table.contains(probe)).mean())
         admitted = float(np.isin(np.asarray(r.status), (2, 3)).mean())
         csv.row(f"3d/burst/{label}_score", None,
                 f"admitted={admitted*100:.0f}%,dhit={100*(post-pre):+.2f}pp")
 
     # ---- 3e: role-fused vs serialized dispatch --------------------------------
-    cfg = table.HKVConfig(capacity=CAPACITY, dim=16)
-    state, keys = _fill_full(cfg, rng)
+    table = HKVTable.create(capacity=CAPACITY, dim=16)
+    table, keys = _fill_full(table, rng)
     ra = u64.from_uint64(rng.choice(keys[-CAPACITY:], size=BATCH))
-    rb = u64.from_uint64(rng.choice(keys[-CAPACITY:], size=BATCH))
     vals = jnp.asarray(rng.normal(size=(BATCH, 16)), jnp.float32)
 
-    def fused(s, ah, al, bh, bl, v):
+    def fused(t, ah, al, v):
         # reader + updater in ONE program: the non-structural role contract
         # means XLA may interleave/overlap them freely
-        out = ops.find(s, cfg, u64.U64(ah, al)).values
-        s2 = ops.assign(s, cfg, u64.U64(bh, bl), v)
-        return out, s2
+        out = t.find(U64(ah, al)).values
+        t2 = t.assign(U64(ah, al), v)
+        return out, t2
+
+    def session_fused(t, ah, al, v):
+        # the op-session planner: same two ops, one shared locate
+        k = U64(ah, al)
+        s = t.session()
+        hit = s.find(k)
+        s.assign(k, v)
+        t2 = s.commit()
+        return hit.get().values, t2
 
     fused_j = jax.jit(fused)
-    find_j = jax.jit(lambda s, h, l: ops.find(s, cfg, u64.U64(h, l)).values)
-    asg_j = jax.jit(lambda s, h, l, v: ops.assign(s, cfg, u64.U64(h, l), v))
+    sess_j = jax.jit(session_fused)
+    find_j = jax.jit(lambda t, h, l: t.find(U64(h, l)).values)
+    asg_j = jax.jit(lambda t, h, l, v: t.assign(U64(h, l), v))
 
-    tf = time_fn(fused_j, state, ra.hi, ra.lo, rb.hi, rb.lo, vals)
+    tf = time_fn(fused_j, table, ra.hi, ra.lo, vals)
+    tss = time_fn(sess_j, table, ra.hi, ra.lo, vals)
 
-    def serialized(s):
-        out = find_j(s, ra.hi, ra.lo)
-        s2 = asg_j(s, rb.hi, rb.lo, vals)
-        return out, s2
+    def serialized(t):
+        out = find_j(t, ra.hi, ra.lo)
+        t2 = asg_j(t, ra.hi, ra.lo, vals)
+        return out, t2
 
-    ts = time_fn(serialized, state)
+    ts = time_fn(serialized, table)
     csv.row("3e/reader+updater/fused", tf, f"{kv_per_s(2*BATCH, tf)/1e6:.2f}M-op/s")
+    csv.row("3e/reader+updater/session(one-locate)", tss,
+            f"{kv_per_s(2*BATCH, tss)/1e6:.2f}M-op/s")
     csv.row("3e/reader+updater/serialized", ts,
-            f"{kv_per_s(2*BATCH, ts)/1e6:.2f}M-op/s,fused_speedup={ts/tf:.2f}x")
+            f"{kv_per_s(2*BATCH, ts)/1e6:.2f}M-op/s,fused_speedup={ts/tf:.2f}x,"
+            f"session_speedup={ts/tss:.2f}x")
 
     # ---- 3f: upsert backend (jnp batch closure vs fused Pallas path) ----------
     on_tpu = jax.default_backend() == "tpu"
     n3f = 1024 if on_tpu else 256  # interpret mode: keep the grid small
-    cfg = table.HKVConfig(capacity=8 * 128, dim=16)
-    state = table.create(cfg)
+    table = HKVTable.create(capacity=8 * 128, dim=16)
     keys3f = u64.from_uint64(rng.integers(0, 2**50, size=n3f).astype(np.uint64))
     vals3f = jnp.asarray(rng.normal(size=(n3f, 16)), jnp.float32)
     results = {}
     for backend in ("jnp", "kernel"):
-        fn = jax.jit(lambda s, h, l, v, b=backend: ops.insert_or_assign(
-            s, cfg, u64.U64(h, l), v, backend=b).status)
-        t = time_fn(fn, state, keys3f.hi, keys3f.lo, vals3f, reps=3, warmup=1)
-        results[backend] = (t, np.asarray(fn(state, keys3f.hi, keys3f.lo, vals3f)))
+        tb = table.with_backend(backend)
+        fn = jax.jit(lambda t, h, l, v: t.insert_or_assign(U64(h, l), v).status)
+        t = time_fn(fn, tb, keys3f.hi, keys3f.lo, vals3f, reps=3, warmup=1)
+        results[backend] = (t, np.asarray(fn(tb, keys3f.hi, keys3f.lo, vals3f)))
         mode = "xla" if (backend == "jnp" or on_tpu) else "interpret"
         csv.row(f"3f/upsert_backend/{backend}", t,
                 f"{kv_per_s(n3f, t)/1e6:.2f}M-KV/s[{mode}]")

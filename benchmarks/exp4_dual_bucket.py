@@ -7,6 +7,8 @@
   * steady-state cache hit ratio: dual >= single;
   * throughput: dual is comparable or better at λ=1.0 (premature-eviction
     overhead avoided).
+
+All table traffic goes through the `HKVTable` handle.
 """
 
 from __future__ import annotations
@@ -15,8 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Csv, fill_table, kv_per_s, make_insert_jit, time_fn
-from repro.core import ops, table, u64
+from benchmarks.common import Csv, fill_batches, fill_table, kv_per_s, \
+    make_insert_jit, time_fn
+from repro.core import HKVTable, U64, u64
 
 CAPACITY = 64 * 128
 BATCH = 4096
@@ -28,66 +31,62 @@ def first_eviction_lf(dual: bool, rng) -> float:
     We use 128 buckets (the largest CPU-friendly size) and small insert
     batches for λ granularity; tests/test_cache_semantics measures 0.63±
     at the same scale."""
-    cfg = table.HKVConfig(capacity=128 * 128, dim=1,
-                          buckets_per_key=2 if dual else 1)
-    state = table.create(cfg)
-    ins_r = jax.jit(lambda s, h, l, v: ops.insert_or_assign(s, cfg, u64.U64(h, l), v))
+    table = HKVTable.create(capacity=128 * 128, dim=1,
+                            buckets_per_key=2 if dual else 1)
+    ins_r = jax.jit(lambda t, h, l, v: t.insert_or_assign(U64(h, l), v))
     zeros = jnp.zeros((256, 1), jnp.float32)
     while True:
         keys = rng.integers(0, 2**60, size=256).astype(np.uint64)
         k = u64.from_uint64(keys)
-        res = ins_r(state, k.hi, k.lo, zeros)
-        state = res.state
+        res = ins_r(table, k.hi, k.lo, zeros)
+        table = res.table
         st = np.asarray(res.status)
         if np.any((st == 3) | (st == 4)):
-            return float(ops.load_factor(state))
+            return float(table.load_factor())
 
 
 def retention(dual: bool, rng) -> tuple[float, float]:
-    cfg = table.HKVConfig(
+    table = HKVTable.create(
         capacity=CAPACITY, dim=1, buckets_per_key=2 if dual else 1,
         score_policy="custom",
     )
-    state = table.create(cfg)
     n_stream = 3 * CAPACITY
     keys = rng.permutation(n_stream).astype(np.uint64)
-    ins_c = jax.jit(lambda s, h, l, v, sh, sl: ops.insert_or_assign(
-        s, cfg, u64.U64(h, l), v, custom_scores=u64.U64(sh, sl)).state)
-    from benchmarks.common import fill_batches
+    ins_c = jax.jit(lambda t, h, l, v, sh, sl: t.insert_or_assign(
+        U64(h, l), v, custom_scores=U64(sh, sl)).table)
     for kb in fill_batches(keys, 2048):
         k = u64.from_uint64(kb)
         sc = u64.from_uint64(kb)  # score == key: ideal top-N known
-        state = ins_c(state, k.hi, k.lo, jnp.zeros((2048, 1)), sc.hi, sc.lo)
-    exp = ops.export_batch(state, cfg, 0, cfg.num_buckets)
+        table = ins_c(table, k.hi, k.lo, jnp.zeros((2048, 1)), sc.hi, sc.lo)
+    exp = table.export_batch(0, table.cfg.num_buckets)
     live = np.asarray(exp.mask)
     got = set(map(int, ((np.asarray(exp.key_hi, np.uint64) << np.uint64(32))
                         | np.asarray(exp.key_lo, np.uint64))[live]))
     ideal = set(range(n_stream - CAPACITY, n_stream))
     topn = len(got & ideal) / CAPACITY
-    lf = float(ops.load_factor(state))
+    lf = float(table.load_factor())
     return topn, lf
 
 
 def hit_ratio(dual: bool, rng) -> float:
     from repro.data import zipf_keys
 
-    cfg = table.HKVConfig(
+    table = HKVTable.create(
         capacity=CAPACITY, dim=1, buckets_per_key=2 if dual else 1,
         score_policy="lru",
     )
-    state = table.create(cfg)
-    ins_h = make_insert_jit(cfg)
-    con_h = jax.jit(lambda s, h, l: ops.contains(s, cfg, u64.U64(h, l)))
+    ins_h = make_insert_jit()
+    con_h = jax.jit(lambda t, h, l: t.contains(U64(h, l)))
     zeros1 = jnp.zeros((2048, 1), jnp.float32)
     hits = total = 0
     for step in range(40):
         keys = zipf_keys(rng, 2048, 0.99, 16 * CAPACITY)
         k = u64.from_uint64(keys)
         if step >= 20:
-            found = np.asarray(con_h(state, k.hi, k.lo))
+            found = np.asarray(con_h(table, k.hi, k.lo))
             hits += int(found.sum())
             total += len(keys)
-        state = ins_h(state, k.hi, k.lo, zeros1)
+        table = ins_h(table, k.hi, k.lo, zeros1)
     return hits / max(total, 1)
 
 
@@ -106,17 +105,16 @@ def run(csv: Csv | None = None):
         hr = hit_ratio(dual, np.random.default_rng(99))
         csv.row(f"4/{tag}/hit_ratio_zipf0.99", None, f"{hr*100:.2f}%")
         # throughput at lambda=1.0
-        cfg = table.HKVConfig(capacity=CAPACITY, dim=32, buckets_per_key=2 if dual else 1)
-        state = table.create(cfg)
+        table = HKVTable.create(capacity=CAPACITY, dim=32,
+                                buckets_per_key=2 if dual else 1)
         fill = rng.integers(0, 2**50, size=2 * CAPACITY).astype(np.uint64)
-        state = fill_table(cfg, state, fill, 32)
+        table = fill_table(table, fill)
         q = u64.from_uint64(rng.integers(0, 2**51, size=BATCH).astype(np.uint64))
-        find_j = jax.jit(lambda s, h, l: ops.find(s, cfg, u64.U64(h, l)).values)
+        find_j = jax.jit(lambda t, h, l: t.find(U64(h, l)).values)
         ins_j = jax.jit(
-            lambda s, h, l, v: ops.insert_or_assign(s, cfg, u64.U64(h, l), v).state
-        )
-        tf = time_fn(find_j, state, q.hi, q.lo)
-        ti = time_fn(ins_j, state, q.hi, q.lo, jnp.zeros((BATCH, 32)))
+            lambda t, h, l, v: t.insert_or_assign(U64(h, l), v).table)
+        tf = time_fn(find_j, table, q.hi, q.lo)
+        ti = time_fn(ins_j, table, q.hi, q.lo, jnp.zeros((BATCH, 32)))
         res[tag] = (tf, ti)
         csv.row(f"4/{tag}/find_lf1.0", tf, f"{kv_per_s(BATCH, tf)/1e6:.2f}M-KV/s")
         csv.row(f"4/{tag}/insert_lf1.0", ti, f"{kv_per_s(BATCH, ti)/1e6:.2f}M-KV/s")

@@ -21,7 +21,7 @@ from repro.models.common import dense_init
 def main():
     cfg = scaled(PAPER_CONFIGS["B"], scale=2**13)  # 16k slots on CPU
     emb = cfg.embedding()
-    table_state = emb.create()
+    table = emb.create()   # HKVTable handle
     rng = np.random.default_rng(0)
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 4)
@@ -66,16 +66,14 @@ def main():
         dense_x = jnp.asarray(rng.normal(size=(batch, cfg.dense_features)), jnp.float32)
         labels = jnp.asarray(rng.integers(0, 2, size=batch), jnp.float32)
 
-        table_state, rows = emb.lookup_train(table_state, toks)
+        table, rows = emb.lookup_train(table, toks)
         loss, (gp, ge) = grad_fn(params, rows, dense_x, labels)
         params = jax.tree.map(lambda p, g: p - lr * g, params, gp)
-        table_state = emb.apply_grads(table_state, toks, ge)
+        table = emb.apply_grads(table, toks, ge)
         losses.append(float(loss))
         if step % 20 == 19:
-            from repro.core import ops as hkv_ops
-
             print(f"step {step:3d}: loss={np.mean(losses[-20:]):.4f} "
-                  f"lf={float(hkv_ops.load_factor(table_state)):.3f}")
+                  f"lf={float(table.load_factor()):.3f}")
 
     assert np.mean(losses[-20:]) < np.mean(losses[:20])
     print(f"loss {np.mean(losses[:20]):.4f} -> {np.mean(losses[-20:]):.4f}  ok.")

@@ -7,10 +7,8 @@ role) interleaved with an online-training path ingesting new feature IDs
 """
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
-from repro.core import ops, table, u64
 from repro.data import zipf_keys
 from repro.embedding.dynamic import HKVEmbedding
 from repro.embedding.sparse_opt import SparseOptimizer
@@ -22,35 +20,32 @@ def main():
         optimizer=SparseOptimizer("rowwise_adagrad", lr=0.1),
         buckets_per_key=2, score_policy="lfu",  # LFU: best hit rate at α≈1 (Table 8)
     )
-    state = emb.create()
-    cfg = emb.config()
+    table = emb.create()   # an HKVTable handle — the one surface for all roles
     rng = np.random.default_rng(0)
     serve_rng = np.random.default_rng(1)
 
-    lookup_serve = jax.jit(emb.lookup_serve)
     hit_hist = []
     for step in range(60):
         # --- online training path: ingest a Zipfian batch (inserter) --------
         train_keys = zipf_keys(rng, 1024, 0.99, 64 * emb.capacity)
         toks = jnp.asarray(train_keys.astype(np.int64), jnp.int32)  # low bits
-        state, rows = emb.lookup_train(state, toks)
+        table, rows = emb.lookup_train(table, toks)
         # one sparse-SGD step pulling embeddings toward a target
         g = (rows - 1.0) * 0.1
-        state = emb.apply_grads(state, toks, g)
+        table = emb.apply_grads(table, toks, g)
 
         # --- concurrent inference path: read-only lookups (reader) ----------
+        # (same low-32-bit token-id truncation as the training path)
         serve_keys = zipf_keys(serve_rng, 2048, 0.99, 64 * emb.capacity)
-        sk = u64.U64(
-            jnp.zeros(2048, jnp.uint32),
-            jnp.asarray(serve_keys.astype(np.uint32)),
-        )
-        hit = float(np.asarray(ops.contains(state, cfg, sk)).mean())
+        hit = float(np.asarray(
+            table.contains(serve_keys.astype(np.uint32))
+        ).mean())
         hit_hist.append(hit)
         if step % 10 == 9:
-            print(f"step {step:3d}: lf={float(ops.load_factor(state)):.3f} "
+            print(f"step {step:3d}: lf={float(table.load_factor()):.3f} "
                   f"serve_hit_rate={100*np.mean(hit_hist[-10:]):.1f}%")
 
-    lf = float(ops.load_factor(state))
+    lf = float(table.load_factor())
     print(f"steady state: lf={lf:.3f}, hit-rate trend "
           f"{100*np.mean(hit_hist[:10]):.1f}% -> {100*np.mean(hit_hist[-10:]):.1f}%")
     assert lf > 0.99

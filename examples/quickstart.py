@@ -2,71 +2,74 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Walks the paper's core semantics end to end on CPU: batched upsert with
-in-place eviction at load factor 1.0, digest-accelerated lookup, scoring
-policies, admission control, dual-bucket retention, and the updater role.
+Walks the paper's core semantics end to end on CPU through the public
+`HKVTable` handle: batched upsert with in-place eviction at load factor
+1.0, digest-accelerated lookup, scoring policies, admission control,
+dual-bucket retention, the updater role, and a fused op session.
+This file is the executable version of the README quickstart.
 """
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import ops, table, u64
+from repro.core import HKVTable, U64
 
 
 def main():
     # A 16k-slot table of 32-dim float values, dual-bucket, LRU scoring —
-    # the paper's config-B analogue at laptop scale.
-    cfg = table.HKVConfig(
+    # the paper's config-B analogue at laptop scale.  The handle carries
+    # cfg/backend statically; only the state arrays flow through ops.
+    table = HKVTable.create(
         capacity=128 * 128, dim=32, buckets_per_key=2, score_policy="lru"
     )
-    state = table.create(cfg)
     rng = np.random.default_rng(0)
 
     # --- continuous online ingestion: 3x capacity through a full table ------
     print("ingesting 3x capacity ...")
     for step in range(12):
-        keys = u64.from_uint64(rng.integers(0, 2**50, size=4096).astype(np.uint64))
+        keys = rng.integers(0, 2**50, size=4096).astype(np.uint64)
         values = jnp.asarray(rng.normal(size=(4096, 32)), jnp.float32)
-        res = ops.insert_or_assign(state, cfg, keys, values)
-        state = res.state
+        res = table.insert_or_assign(keys, values)   # keys: raw numpy uint64
+        table = res.table
         status = np.asarray(res.status)
         print(
-            f"  step {step:2d}: lf={float(ops.load_factor(state)):.3f} "
+            f"  step {step:2d}: lf={float(table.load_factor()):.3f} "
             f"updated={np.sum(status == 1):4d} inserted={np.sum(status == 2):4d} "
             f"evicted={np.sum(status == 3):4d} rejected={np.sum(status == 4):4d}"
         )
-    assert float(ops.load_factor(state)) > 0.99  # full == normal operating point
+    assert float(table.load_factor()) > 0.99  # full == normal operating point
 
     # --- reader role: digest-accelerated find --------------------------------
-    q = u64.from_uint64(rng.integers(0, 2**50, size=1024).astype(np.uint64))
-    found = ops.find(state, cfg, q)
+    q = rng.integers(0, 2**50, size=1024).astype(np.uint64)
+    found = table.find(q)
     print(f"find: {int(found.found.sum())}/1024 hits at lf=1.0 "
           f"(misses cost one bucket row each — Prop. 3.1)")
 
-    # --- updater role: in-place value update (non-structural) ----------------
-    exp = ops.export_batch(state, cfg, 0, 4)
+    # --- updater role via an op session (one shared probe) -------------------
+    exp = table.export_batch(0, 4)
     live = np.asarray(exp.mask)
-    some = u64.U64(jnp.asarray(np.asarray(exp.key_hi)[live][:16]),
-                   jnp.asarray(np.asarray(exp.key_lo)[live][:16]))
-    state = ops.assign(state, cfg, some, jnp.ones((16, 32)))
-    check = ops.find(state, cfg, some)
-    assert bool(np.allclose(np.asarray(check.values), 1.0))
-    print("assign: 16 rows updated in place, no structural change")
+    some = U64(jnp.asarray(np.asarray(exp.key_hi)[live][:16]),
+               jnp.asarray(np.asarray(exp.key_lo)[live][:16]))
+    sess = table.session()
+    sess.assign(some, jnp.ones((16, 32)))   # updater
+    check = sess.find(some)                 # reader — shares the same locate
+    table = sess.commit()
+    print(sess.explain())
+    assert bool(np.allclose(np.asarray(check.get().values), 1.0))
+    print("assign+find fused: 16 rows updated in place, one probe, "
+          "no structural change")
 
     # --- admission control (custom scores) -----------------------------------
-    cfg_c = table.HKVConfig(capacity=512, dim=4, score_policy="custom")
-    st = table.create(cfg_c)
-    res = ops.insert_or_assign(
-        st, cfg_c,
-        u64.from_uint64(np.arange(1024, dtype=np.uint64)),
+    t = HKVTable.create(capacity=512, dim=4, score_policy="custom")
+    res = t.insert_or_assign(
+        np.arange(1024, dtype=np.uint64),
         jnp.zeros((1024, 4)),
-        custom_scores=u64.from_uint64(np.full(1024, 100, np.uint64)),
+        custom_scores=np.full(1024, 100, np.uint64),
     )
-    low = ops.insert_or_assign(
-        res.state, cfg_c,
-        u64.from_uint64(np.arange(5000, 5128, dtype=np.uint64)),
+    low = res.table.insert_or_assign(
+        np.arange(5000, 5128, dtype=np.uint64),
         jnp.zeros((128, 4)),
-        custom_scores=u64.from_uint64(np.full(128, 1, np.uint64)),
+        custom_scores=np.full(128, 1, np.uint64),
     )
     print(f"admission control: low-score burst -> "
           f"{int((np.asarray(low.status) == 4).sum())}/128 rejected (Table 9)")

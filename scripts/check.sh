@@ -2,13 +2,18 @@
 # Tier-1 verification (see ROADMAP.md): run the full test suite from a
 # fresh checkout, deterministically.
 #
-#   scripts/check.sh            # tier-1: pytest -x -q
+#   scripts/check.sh            # tier-1: pytest -x -q (full suite)
+#   scripts/check.sh --fast     # CI gate: skip @pytest.mark.slow tests
 #   scripts/check.sh -q tests/  # any extra pytest args pass through
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+if [ "${1:-}" = "--fast" ]; then
+    shift
+    exec python -m pytest -x -q -m "not slow" "$@"
+fi
 if [ "$#" -gt 0 ]; then
     exec python -m pytest "$@"
 fi

@@ -16,5 +16,7 @@ eviction, so λ=1.0 is a failure regime rather than an operating point.
 
 from repro.baselines.dict_tables import (  # noqa: F401
     BucketedP2CTable,
+    DictKVTable,
+    DictUpsert,
     OpenAddressingTable,
 )

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import u64
+from repro.core.api import normalize_keys
 from repro.core.u64 import U64
 
 
@@ -270,3 +271,82 @@ class BucketedP2CTable:
         row = jnp.where(h1, b1 * self.slots + s1, b2 * self.slots + s2)
         vals = jnp.where(found[:, None], state.values[jnp.clip(row, 0, self.capacity - 1)], 0.0)
         return FindReport(values=vals, found=found, probes=probes)
+
+
+# =============================================================================
+# KVTable-protocol handle over either baseline (repro.core.api.KVTable)
+# =============================================================================
+
+
+class DictUpsert(NamedTuple):
+    table: "DictKVTable"
+    ok: jax.Array       # bool [N] — placement success (dictionary semantics)
+    probes: jax.Array   # int32 [N]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DictKVTable:
+    """Handle binding a baseline's state to its implementation dataclass.
+
+    Implements the same `KVTable` protocol as `repro.core.HKVTable`, so the
+    benchmark harness drives HKV and the dictionary-semantic baselines
+    through one code path.  The capability gap the paper measures remains
+    visible through `.ok`: at capacity these tables FAIL inserts where HKV
+    evicts in place.
+    """
+
+    state: object                 # OAState | P2CState (the pytree leaf struct)
+    impl: object                  # OpenAddressingTable | BucketedP2CTable (static)
+
+    def tree_flatten(self):
+        return (self.state,), (self.impl,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(state=children[0], impl=aux[0])
+
+    # -- construction ----------------------------------------------------------
+
+    @classmethod
+    def open_addressing(cls, capacity: int, dim: int, **kw) -> "DictKVTable":
+        impl = OpenAddressingTable(capacity=capacity, dim=dim, **kw)
+        return cls(state=impl.create(), impl=impl)
+
+    @classmethod
+    def bucketed_p2c(cls, capacity: int, dim: int, **kw) -> "DictKVTable":
+        impl = BucketedP2CTable(capacity=capacity, dim=dim, **kw)
+        return cls(state=impl.create(), impl=impl)
+
+    def with_state(self, state) -> "DictKVTable":
+        return dataclasses.replace(self, state=state)
+
+    # -- KVTable protocol ------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.impl.capacity
+
+    @property
+    def dim(self) -> int:
+        return self.impl.dim
+
+    def find(self, keys) -> FindReport:
+        return self.impl.find(self.state, normalize_keys(keys))
+
+    def insert_or_assign(self, keys, values) -> DictUpsert:
+        rep = self.impl.insert(self.state, normalize_keys(keys), values)
+        return DictUpsert(table=self.with_state(rep.state), ok=rep.ok,
+                          probes=rep.probes)
+
+    def contains(self, keys) -> jax.Array:
+        return self.find(keys).found
+
+    def size(self) -> jax.Array:
+        khi = self.state.key_hi
+        klo = self.state.key_lo
+        live = ~u64.is_empty(U64(khi, klo))
+        return jnp.sum(live.astype(jnp.int32))
+
+    def load_factor(self) -> jax.Array:
+        return self.size().astype(jnp.float32) / float(self.capacity)

@@ -1,3 +1,23 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""HKV core: table state, op engine, and the public handle surface.
+
+Consumers import the handle layer from here::
+
+    from repro.core import HKVTable
+    table = HKVTable.create(capacity=128 * 128, dim=32)
+
+`repro.core.ops` / `repro.core.table` stay importable as the underlying
+engine (DESIGN.md §API layer).
+"""
+
+from repro.core.api import (  # noqa: F401
+    HKVTable,
+    KVTable,
+    OpSession,
+    TableFindOrInsert,
+    TableInsertAndEvict,
+    TableUpsert,
+    dedupe_keys,
+    normalize_keys,
+)
+from repro.core.table import HKVConfig, HKVState  # noqa: F401
+from repro.core.u64 import U64  # noqa: F401

@@ -1,0 +1,671 @@
+"""The public HKV surface: the `HKVTable` handle + role-aware op sessions.
+
+Layering (DESIGN.md §API layer):
+
+  handle   `HKVTable` — a pytree-registered value object binding an
+           `HKVState` (the single leaf) to its static description
+           (`HKVConfig`, inserter backend).  Because cfg/backend live in
+           pytree aux data, a handle passes through `jax.jit` (donatable),
+           `jax.lax.scan` carries, checkpoint trees, and `shard_map`
+           without any (state, cfg) re-threading by the caller.
+  engine   `repro.core.ops` — the free functions the handle delegates to.
+           They remain the single implementation of every op; the handle
+           adds no semantics, only binding + key normalization.
+  session  `OpSession` — the paper's triple-group taxonomy (§3.5) made
+           first-class: record reader/updater/inserter ops, share one
+           `locate` across commuting ops on the same key batch, serialize
+           only at inserters, and show the fused plan via `explain()`.
+
+Key normalization: every handle/session op accepts keys as a `U64` pair,
+a numpy `uint64` array, a python int list, or a signed int array (negative
+ids become the EMPTY padding sentinel, matching the embedding layer) —
+all funneled through `normalize_keys`, the single conversion point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import find as find_mod
+from repro.core import ops as ops_mod
+from repro.core import table as table_mod
+from repro.core import u64
+from repro.core.table import HKVConfig, HKVState
+from repro.core.u64 import U64
+
+# =============================================================================
+# Key normalization — the single entry point for every key-shaped argument
+# =============================================================================
+
+
+def normalize_keys(keys: Any) -> U64:
+    """Coerce caller keys to the canonical U64 (hi, lo) plane pair.
+
+    Accepted forms:
+      * `U64`                      — passed through;
+      * numpy uint64 array/scalar  — exact 64-bit split (host-side);
+      * signed int array (numpy or jax) / python int list — non-negative
+        ids map to their unsigned value; NEGATIVE ids become the EMPTY
+        sentinel (the padding convention of the embedding layer);
+      * unsigned 32-bit arrays     — zero-extended into the low plane.
+    """
+    if isinstance(keys, U64):
+        return keys
+    if isinstance(keys, (list, tuple, int, np.generic)):
+        # np.generic: numpy SCALARS (np.uint64(x)) are not ndarrays and
+        # would otherwise fall through to jnp.asarray, which downcasts
+        # uint64 to uint32 when x64 is disabled
+        keys = np.atleast_1d(np.asarray(keys))
+    if isinstance(keys, np.ndarray):
+        keys = np.atleast_1d(keys)
+        if keys.dtype == np.uint64:
+            return u64.from_uint64(keys)
+        if np.issubdtype(keys.dtype, np.signedinteger):
+            arr = keys.astype(np.int64)
+            neg = arr < 0
+            as_u = arr.astype(np.uint64)
+            hi = np.where(neg, u64.EMPTY_HI,
+                          (as_u >> np.uint64(32)).astype(np.uint32))
+            lo = np.where(neg, u64.EMPTY_LO,
+                          (as_u & u64.UINT32_MASK).astype(np.uint32))
+            return U64(jnp.asarray(hi.astype(np.uint32)),
+                       jnp.asarray(lo.astype(np.uint32)))
+        if np.issubdtype(keys.dtype, np.unsignedinteger):
+            lo = jnp.asarray(keys.astype(np.uint32))
+            return U64(jnp.zeros(lo.shape, jnp.uint32), lo)
+        raise TypeError(f"cannot use {keys.dtype} array as table keys")
+    x = jnp.atleast_1d(jnp.asarray(keys))
+    if x.dtype == jnp.uint32:
+        return U64(jnp.zeros(x.shape, jnp.uint32), x)
+    if jnp.issubdtype(x.dtype, jnp.signedinteger):
+        neg = x < 0
+        if x.dtype.itemsize == 8:  # int64 under jax x64: keep the high bits
+            hi_bits = jax.lax.shift_right_logical(x, 32).astype(jnp.uint32)
+        else:
+            hi_bits = jnp.zeros(x.shape, jnp.uint32)
+        return U64(
+            jnp.where(neg, jnp.uint32(u64.EMPTY_HI), hi_bits),
+            jnp.where(neg, jnp.uint32(u64.EMPTY_LO), x.astype(jnp.uint32)),
+        )
+    raise TypeError(f"cannot use {x.dtype} values as table keys")
+
+
+def dedupe_keys(keys: Any) -> "DedupeResult":
+    """Public dedupe helper: key normalization + the engine's canonical
+    dedupe (`repro.core.merge.dedupe_keys`, the single implementation).
+
+    Consumers (embedding gradient paths, shard routing) use this instead of
+    reaching into merge internals: route/reduce per `unique`, then map
+    per-group results back with `inverse`.
+    """
+    from repro.core import merge as merge_mod
+
+    return merge_mod.dedupe_keys(normalize_keys(keys))
+
+
+def _key_identity(keys: Any):
+    """Identity token for session key-batch sharing.
+
+    Two ops recorded with the *same object* (same U64 planes or the same
+    array) share a locate; distinct objects are conservatively treated as
+    distinct batches even if value-equal.
+    """
+    if isinstance(keys, U64):
+        return ("u64", id(keys.hi), id(keys.lo))
+    return ("obj", id(keys))
+
+
+# =============================================================================
+# Handle-level result tuples (state replaced by the new handle)
+# =============================================================================
+
+
+class TableUpsert(NamedTuple):
+    table: "HKVTable"
+    status: jax.Array    # int8 [N] — merge status codes, batch order
+
+    @property
+    def ok(self) -> jax.Array:
+        """bool [N] — key is present after the op (updated/inserted/evicted)."""
+        return (self.status >= ops_mod.STATUS_UPDATED) & (
+            self.status <= ops_mod.STATUS_EVICTED
+        )
+
+
+class TableInsertAndEvict(NamedTuple):
+    table: "HKVTable"
+    status: jax.Array
+    evicted_key_hi: jax.Array
+    evicted_key_lo: jax.Array
+    evicted_values: jax.Array
+    evicted_score_hi: jax.Array
+    evicted_score_lo: jax.Array
+    evicted_mask: jax.Array
+
+
+class TableFindOrInsert(NamedTuple):
+    table: "HKVTable"
+    values: jax.Array
+    found: jax.Array
+    status: jax.Array
+
+
+# =============================================================================
+# The KVTable protocol — the one benchmark/consumer-facing contract
+# =============================================================================
+
+
+@runtime_checkable
+class KVTable(Protocol):
+    """Minimal table-object contract shared by `HKVTable`, the dict-semantic
+    baselines (`repro.baselines.DictKVTable`), and `ShardedHKVTable`.
+
+    Handles are immutable values: mutating ops return a result whose
+    `.table` field is the successor handle.  `find(...)` results expose
+    `.values` and `.found`; `insert_or_assign(...)` results expose
+    `.table` and `.ok` (per-key success — for HKV, admission; for
+    dictionary-semantic tables, placement).
+    """
+
+    @property
+    def capacity(self) -> int: ...
+
+    def find(self, keys: Any) -> Any: ...
+
+    def insert_or_assign(self, keys: Any, values: jax.Array) -> Any: ...
+
+    def contains(self, keys: Any) -> jax.Array: ...
+
+    def size(self) -> jax.Array: ...
+
+    def load_factor(self) -> jax.Array: ...
+
+
+# =============================================================================
+# HKVTable — the handle
+# =============================================================================
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class HKVTable:
+    """Cache-semantic HKV hash table as a jit-friendly handle.
+
+    `state` is the only pytree leaf; `cfg` and `backend` are static aux
+    data, so a jitted function taking an `HKVTable` specializes per config
+    (exactly like passing cfg statically) while the state arrays flow —
+    and may be donated — as ordinary buffers.
+
+        table = HKVTable.create(capacity=128 * 128, dim=32)
+        res = table.insert_or_assign(keys, values)   # res.table, res.status
+        out = res.table.find(keys)                   # out.values, out.found
+    """
+
+    state: HKVState
+    cfg: HKVConfig
+    backend: str = "auto"
+
+    # -- pytree protocol -----------------------------------------------------
+
+    def tree_flatten(self):
+        return (self.state,), (self.cfg, self.backend)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        cfg, backend = aux
+        return cls(state=children[0], cfg=cfg, backend=backend)
+
+    # -- construction ----------------------------------------------------------
+
+    @classmethod
+    def create(cls, cfg: Optional[HKVConfig] = None, *, backend: str = "auto",
+               **cfg_kwargs) -> "HKVTable":
+        """Allocate an empty table from an `HKVConfig` (or its kwargs)."""
+        if cfg is None:
+            cfg = HKVConfig(**cfg_kwargs)
+        elif cfg_kwargs:
+            cfg = dataclasses.replace(cfg, **cfg_kwargs)
+        return cls(state=table_mod.create(cfg), cfg=cfg, backend=backend)
+
+    @classmethod
+    def wrap(cls, state: HKVState, cfg: HKVConfig,
+             backend: str = "auto") -> "HKVTable":
+        """Bind an existing state (e.g. a shard-local state under shard_map)."""
+        return cls(state=state, cfg=cfg, backend=backend)
+
+    def with_state(self, state: HKVState) -> "HKVTable":
+        return dataclasses.replace(self, state=state)
+
+    def with_backend(self, backend: str) -> "HKVTable":
+        return dataclasses.replace(self, backend=backend)
+
+    # -- config views ----------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.cfg.capacity
+
+    @property
+    def dim(self) -> int:
+        return self.cfg.dim
+
+    def keys(self, keys: Any) -> U64:
+        """Expose the normalization point (useful for pre-normalizing once)."""
+        return normalize_keys(keys)
+
+    # -- readers ---------------------------------------------------------------
+
+    def find(self, keys: Any) -> ops_mod.FindResult:
+        return ops_mod.find(self.state, self.cfg, normalize_keys(keys))
+
+    def find_ptr(self, keys: Any) -> find_mod.Locate:
+        return ops_mod.find_ptr(self.state, self.cfg, normalize_keys(keys))
+
+    def find_rows(self, keys: Any) -> ops_mod.FindRowsResult:
+        return ops_mod.find_rows(self.state, self.cfg, normalize_keys(keys))
+
+    def contains(self, keys: Any) -> jax.Array:
+        return ops_mod.contains(self.state, self.cfg, normalize_keys(keys))
+
+    def probe_keys(self, keys: Any) -> find_mod.Probe:
+        return find_mod.probe_keys(self.cfg, normalize_keys(keys))
+
+    def size(self) -> jax.Array:
+        return ops_mod.size(self.state)
+
+    def load_factor(self) -> jax.Array:
+        return ops_mod.load_factor(self.state)
+
+    def export_batch(self, bucket_start: int,
+                     bucket_count: int) -> ops_mod.ExportResult:
+        return ops_mod.export_batch(self.state, self.cfg, bucket_start,
+                                    bucket_count)
+
+    def export_batch_if(self, bucket_start: int, bucket_count: int,
+                        score_threshold: Any) -> ops_mod.ExportResult:
+        return ops_mod.export_batch_if(self.state, self.cfg, bucket_start,
+                                       bucket_count,
+                                       normalize_keys(score_threshold))
+
+    # -- updaters (non-structural; return the successor handle) ---------------
+
+    def assign(self, keys: Any, values: jax.Array,
+               update_scores: bool = False) -> "HKVTable":
+        return self.with_state(ops_mod.assign(
+            self.state, self.cfg, normalize_keys(keys), values,
+            update_scores=update_scores,
+        ))
+
+    def assign_add(self, keys: Any, deltas: jax.Array) -> "HKVTable":
+        return self.with_state(ops_mod.assign_add(
+            self.state, self.cfg, normalize_keys(keys), deltas,
+        ))
+
+    def assign_scores(self, keys: Any, scores: Any) -> "HKVTable":
+        return self.with_state(ops_mod.assign_scores(
+            self.state, self.cfg, normalize_keys(keys),
+            normalize_keys(scores),
+        ))
+
+    # -- inserters (structural; return result tuples with `.table`) -----------
+
+    def insert_or_assign(self, keys: Any, values: jax.Array,
+                         custom_scores: Optional[Any] = None) -> TableUpsert:
+        res = ops_mod.insert_or_assign(
+            self.state, self.cfg, normalize_keys(keys), values,
+            custom_scores=_opt_keys(custom_scores), backend=self.backend,
+        )
+        return TableUpsert(table=self.with_state(res.state), status=res.status)
+
+    def insert_and_evict(self, keys: Any, values: jax.Array,
+                         custom_scores: Optional[Any] = None,
+                         ) -> TableInsertAndEvict:
+        res = ops_mod.insert_and_evict(
+            self.state, self.cfg, normalize_keys(keys), values,
+            custom_scores=_opt_keys(custom_scores), backend=self.backend,
+        )
+        return TableInsertAndEvict(self.with_state(res.state), *res[1:])
+
+    def find_or_insert(self, keys: Any, init_values: jax.Array,
+                       custom_scores: Optional[Any] = None,
+                       ) -> TableFindOrInsert:
+        res = ops_mod.find_or_insert(
+            self.state, self.cfg, normalize_keys(keys), init_values,
+            custom_scores=_opt_keys(custom_scores), backend=self.backend,
+        )
+        return TableFindOrInsert(table=self.with_state(res.state),
+                                 values=res.values, found=res.found,
+                                 status=res.status)
+
+    def ingest(self, keys: Any, init_values: jax.Array,
+               custom_scores: Optional[Any] = None) -> TableUpsert:
+        res = ops_mod.ingest(
+            self.state, self.cfg, normalize_keys(keys), init_values,
+            custom_scores=_opt_keys(custom_scores), backend=self.backend,
+        )
+        return TableUpsert(table=self.with_state(res.state), status=res.status)
+
+    def accum_or_assign(self, keys: Any, values: jax.Array,
+                        custom_scores: Optional[Any] = None) -> TableUpsert:
+        res = ops_mod.accum_or_assign(
+            self.state, self.cfg, normalize_keys(keys), values,
+            custom_scores=_opt_keys(custom_scores),
+        )
+        return TableUpsert(table=self.with_state(res.state), status=res.status)
+
+    def erase(self, keys: Any) -> "HKVTable":
+        return self.with_state(ops_mod.erase(self.state, self.cfg,
+                                             normalize_keys(keys)))
+
+    def clear(self) -> "HKVTable":
+        return self.with_state(ops_mod.clear(self.state, self.cfg))
+
+    # -- sessions --------------------------------------------------------------
+
+    def session(self) -> "OpSession":
+        """Open a role-aware op session against this handle (see OpSession)."""
+        return OpSession(self)
+
+
+def _opt_keys(x: Optional[Any]) -> Optional[U64]:
+    return None if x is None else normalize_keys(x)
+
+
+# =============================================================================
+# Op sessions — the triple-group taxonomy as a planner
+# =============================================================================
+
+_READER, _UPDATER, _INSERTER = "reader", "updater", "inserter"
+
+
+class SessionRef:
+    """Deferred result of a session op; `.value` is set by `commit()`."""
+
+    __slots__ = ("op", "value", "_committed")
+
+    def __init__(self, op: str):
+        self.op = op
+        self.value = None
+        self._committed = False
+
+    def get(self):
+        if not self._committed:
+            raise RuntimeError(
+                f"session op {self.op!r} not executed yet — call session.commit()"
+            )
+        return self.value
+
+    def __repr__(self):
+        state = "pending" if not self._committed else f"value={type(self.value).__name__}"
+        return f"<SessionRef {self.op} {state}>"
+
+
+@dataclasses.dataclass
+class _RecordedOp:
+    kind: str                    # op name
+    role: str                    # reader | updater | inserter
+    key_ref: Optional[int]       # index into session key batches (None: keyless)
+    args: tuple                  # op-specific payload
+    ref: SessionRef
+    shares_locate: bool = False  # resolved at plan time
+
+
+class OpSession:
+    """Collect table ops, fuse commuting probes, serialize only at inserters.
+
+    The paper's triple-group role taxonomy (§3.5) gives three facts the
+    planner exploits:
+
+      * READERS and UPDATERS never change bucket membership, so the
+        (bucket, slot, row) positions returned by `locate` stay valid
+        across any run of them — ops on the same key batch can share ONE
+        probe where an unfused sequence would issue one each;
+      * UPDATERS thread state (values/scores change) but commute with
+        readers' key-side work;
+      * INSERTERS are structural: each one is a serialization point that
+        invalidates every cached locate.
+
+    Usage::
+
+        s = table.session()
+        hit = s.find(keys)                  # reader  — SessionRef
+        s.assign(keys, new_values)          # updater — shares hit's locate
+        st = s.insert_or_assign(k2, v2)     # inserter — serialization point
+        table = s.commit()                  # execute; refs hold results
+        print(s.explain())                  # the fused plan, human-readable
+
+    Results are bit-identical to issuing the same ops unfused in the same
+    order: sharing a locate is exact (not approximate) because locate
+    output depends only on the key plane, which non-structural ops never
+    write.
+    """
+
+    def __init__(self, table: HKVTable):
+        self._table = table
+        self._ops: list[_RecordedOp] = []
+        self._key_ids: dict = {}       # identity token -> batch index
+        self._key_batches: list[U64] = []
+        self._key_objs: list = []      # originals, retained — see _key_ref
+        self._committed = False
+        self._result_table: Optional[HKVTable] = None
+
+    # -- key batch bookkeeping -------------------------------------------------
+
+    def _key_ref(self, keys: Any) -> int:
+        tok = _key_identity(keys)
+        if tok not in self._key_ids:
+            self._key_ids[tok] = len(self._key_batches)
+            self._key_batches.append(normalize_keys(keys))
+            # retain the ORIGINAL object: identity is id()-based, and a
+            # garbage-collected array's id can be recycled by a later,
+            # different key batch — which would silently alias the two
+            self._key_objs.append(keys)
+        return self._key_ids[tok]
+
+    def _record(self, kind: str, role: str, keys: Any, *args) -> SessionRef:
+        if self._committed:
+            raise RuntimeError("session already committed; open a new one")
+        ref = SessionRef(kind)
+        kref = None if keys is None else self._key_ref(keys)
+        self._ops.append(_RecordedOp(kind, role, kref, args, ref))
+        return ref
+
+    # -- recorded ops ----------------------------------------------------------
+
+    # readers
+    def find(self, keys: Any) -> SessionRef:
+        return self._record("find", _READER, keys)
+
+    def find_rows(self, keys: Any) -> SessionRef:
+        return self._record("find_rows", _READER, keys)
+
+    def contains(self, keys: Any) -> SessionRef:
+        return self._record("contains", _READER, keys)
+
+    # updaters
+    def assign(self, keys: Any, values: jax.Array,
+               update_scores: bool = False) -> SessionRef:
+        return self._record("assign", _UPDATER, keys, values, update_scores)
+
+    def assign_add(self, keys: Any, deltas: jax.Array) -> SessionRef:
+        return self._record("assign_add", _UPDATER, keys, deltas)
+
+    def assign_scores(self, keys: Any, scores: Any) -> SessionRef:
+        return self._record("assign_scores", _UPDATER, keys,
+                            normalize_keys(scores))
+
+    def update_rows(self, keys: Any, fn, update_scores: bool = False
+                    ) -> SessionRef:
+        """Updater. Fused read-modify-write: rows[k] = fn(rows[k]) for
+        existing keys (misses untouched; fn sees zero rows there).
+
+        `fn` maps the gathered full-width rows [N, dim+aux] to replacement
+        rows — the sparse-optimizer shape.  Gather and write-back share ONE
+        locate (the unfused sequence find_rows + assign issues two).
+        """
+        return self._record("update_rows", _UPDATER, keys, fn, update_scores)
+
+    # inserters
+    def insert_or_assign(self, keys: Any, values: jax.Array,
+                         custom_scores: Optional[Any] = None) -> SessionRef:
+        return self._record("insert_or_assign", _INSERTER, keys, values,
+                            _opt_keys(custom_scores))
+
+    def find_or_insert(self, keys: Any, init_values: jax.Array,
+                       custom_scores: Optional[Any] = None) -> SessionRef:
+        return self._record("find_or_insert", _INSERTER, keys, init_values,
+                            _opt_keys(custom_scores))
+
+    def insert_and_evict(self, keys: Any, values: jax.Array,
+                         custom_scores: Optional[Any] = None) -> SessionRef:
+        return self._record("insert_and_evict", _INSERTER, keys, values,
+                            _opt_keys(custom_scores))
+
+    def erase(self, keys: Any) -> SessionRef:
+        return self._record("erase", _INSERTER, keys)
+
+    # -- planning --------------------------------------------------------------
+
+    def _plan(self) -> list[list[_RecordedOp]]:
+        """Split the op list into fusion groups at inserter boundaries and
+        mark which non-structural ops reuse a previously issued locate."""
+        groups: list[list[_RecordedOp]] = []
+        cur: list[_RecordedOp] = []
+        seen: set = set()
+        for op in self._ops:
+            if op.role == _INSERTER:
+                if cur:
+                    groups.append(cur)
+                    cur = []
+                op.shares_locate = False
+                groups.append([op])
+                seen = set()
+            else:
+                op.shares_locate = op.key_ref in seen
+                if op.key_ref is not None:
+                    seen.add(op.key_ref)
+                cur.append(op)
+        if cur:
+            groups.append(cur)
+        return groups
+
+    def explain(self) -> str:
+        """Human-readable fused plan: groups, shared probes, serialization
+        points.  Safe to call before or after commit()."""
+        lines = [f"session plan: {len(self._ops)} ops, "
+                 f"{len(self._key_batches)} key batch(es)"]
+        probes = 0
+        for gi, group in enumerate(self._plan()):
+            if group[0].role == _INSERTER:
+                op = group[0]
+                probes_here = 1
+                probes += probes_here
+                lines.append(
+                    f"  group {gi} [INSERTER — serialization point]: "
+                    f"{op.kind}(keys#{op.key_ref}) — invalidates cached locates"
+                )
+                continue
+            fresh = {op.key_ref for op in group if not op.shares_locate}
+            probes += len(fresh)
+            lines.append(
+                f"  group {gi} [reader/updater — commuting]: "
+                f"{len(group)} op(s), {len(fresh)} locate(s)"
+            )
+            for op in group:
+                tag = "shares" if op.shares_locate else "issues"
+                lines.append(f"    {op.kind}(keys#{op.key_ref}) — {tag} "
+                             f"locate[keys#{op.key_ref}]")
+        unfused = sum(1 for op in self._ops if op.key_ref is not None)
+        lines.append(f"  probes: {probes} fused vs {unfused} unfused")
+        return "\n".join(lines)
+
+    # -- execution -------------------------------------------------------------
+
+    def commit(self) -> HKVTable:
+        """Execute the recorded plan; fill every SessionRef; return the
+        successor handle.  Idempotent (a second call returns the cached
+        result table)."""
+        if self._committed:
+            return self._result_table
+        state, cfg, backend = (self._table.state, self._table.cfg,
+                               self._table.backend)
+        locs: dict[int, find_mod.Locate] = {}
+        for group in self._plan():
+            for op in group:
+                keys = (None if op.key_ref is None
+                        else self._key_batches[op.key_ref])
+                if op.role == _INSERTER:
+                    locs.clear()  # structural op: cached positions die
+                    state = self._run_inserter(op, state, cfg, backend, keys)
+                    locs.clear()
+                    continue
+                loc = locs.get(op.key_ref)
+                if loc is None and op.kind != "noop":
+                    loc = find_mod.locate(state, cfg, keys)
+                    locs[op.key_ref] = loc
+                state = self._run_nonstructural(op, state, cfg, keys, loc)
+        for op in self._ops:
+            op.ref._committed = True
+        self._committed = True
+        self._result_table = self._table.with_state(state)
+        return self._result_table
+
+    def _run_nonstructural(self, op, state, cfg, keys, loc):
+        if op.kind == "find":
+            op.ref.value = ops_mod.find(state, cfg, keys, loc=loc)
+        elif op.kind == "find_rows":
+            op.ref.value = ops_mod.find_rows(state, cfg, keys, loc=loc)
+        elif op.kind == "contains":
+            op.ref.value = ops_mod.contains(state, cfg, keys, loc=loc)
+        elif op.kind == "assign":
+            values, update_scores = op.args
+            state = ops_mod.assign(state, cfg, keys, values,
+                                   update_scores=update_scores, loc=loc)
+            op.ref.value = state
+        elif op.kind == "assign_add":
+            (deltas,) = op.args
+            state = ops_mod.assign_add(state, cfg, keys, deltas, loc=loc)
+            op.ref.value = state
+        elif op.kind == "assign_scores":
+            (scores,) = op.args
+            state = ops_mod.assign_scores(state, cfg, keys, scores, loc=loc)
+            op.ref.value = state
+        elif op.kind == "update_rows":
+            fn, update_scores = op.args
+            got = ops_mod.find_rows(state, cfg, keys, loc=loc)
+            state = ops_mod.assign(state, cfg, keys, fn(got.rows),
+                                   update_scores=update_scores, loc=loc)
+            op.ref.value = got
+        else:  # pragma: no cover - guarded by _record
+            raise AssertionError(op.kind)
+        return state
+
+    def _run_inserter(self, op, state, cfg, backend, keys):
+        if op.kind == "insert_or_assign":
+            values, cs = op.args
+            res = ops_mod.insert_or_assign(state, cfg, keys, values,
+                                           custom_scores=cs, backend=backend)
+            op.ref.value = res.status
+            return res.state
+        if op.kind == "find_or_insert":
+            init, cs = op.args
+            res = ops_mod.find_or_insert(state, cfg, keys, init,
+                                         custom_scores=cs, backend=backend)
+            op.ref.value = (res.values, res.found, res.status)
+            return res.state
+        if op.kind == "insert_and_evict":
+            values, cs = op.args
+            res = ops_mod.insert_and_evict(state, cfg, keys, values,
+                                           custom_scores=cs, backend=backend)
+            op.ref.value = res
+            return res.state
+        if op.kind == "erase":
+            state = ops_mod.erase(state, cfg, keys)
+            op.ref.value = state
+            return state
+        raise AssertionError(op.kind)  # pragma: no cover

@@ -141,6 +141,39 @@ def _dedupe_sort(keys: U64):
     return keys_s, idx_s, gid, counts[gid], last_idx[gid], rep_mask
 
 
+class DedupeResult(NamedTuple):
+    """Key-batch dedupe in sorted space (the engine's canonical form).
+
+    All arrays have the batch length N.  `unique` carries each group's
+    representative key at the group's first sorted slot and the EMPTY
+    sentinel elsewhere — exactly the shape table ops expect (duplicates
+    masked out, constant shape preserved).
+    """
+
+    unique: U64            # [N] EMPTY-padded representative keys (sorted space)
+    idx_sorted: jax.Array  # int32 [N] original position of sorted slot j
+    gid: jax.Array         # int32 [N] group id of sorted slot j
+    rep_mask: jax.Array    # bool [N] True at each group's first sorted slot
+    last_index: jax.Array  # int32 [N] original index of the group's LAST occurrence
+    inverse: jax.Array     # int32 [N] original position -> its rep's sorted slot
+
+
+def dedupe_keys(keys: U64) -> DedupeResult:
+    """Public dedupe over the canonical key sort (shared by the engine and
+    the api layer — see `repro.core.api.dedupe_keys` for the normalizing
+    wrapper consumers use): route/reduce per `unique`, then map per-group
+    results back with `inverse`."""
+    n = keys.hi.shape[0]
+    keys_s, idx_s, gid, _count, last_idx, rep = _dedupe_sort(keys)
+    unique = u64.select(rep, keys_s, u64.empty_sentinel((n,)))
+    rep_pos = jax.ops.segment_min(
+        jnp.arange(n, dtype=jnp.int32), gid, num_segments=n
+    )
+    inverse = jnp.zeros((n,), jnp.int32).at[idx_s].set(rep_pos[gid])
+    return DedupeResult(unique=unique, idx_sorted=idx_s, gid=gid,
+                        rep_mask=rep, last_index=last_idx, inverse=inverse)
+
+
 def _bucket_minscore_and_occ(state: HKVState, bucket: jax.Array):
     """(occupancy[N], min-score[N] as U64) of the given bucket rows.
 

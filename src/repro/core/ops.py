@@ -1,4 +1,16 @@
-"""HKV public API (paper §4.1) — STL-style ops over a pure-functional state.
+"""HKV op engine (paper §4.1) — STL-style ops over a pure-functional state.
+
+NOTE (API layering, DESIGN.md §API layer): the *public* surface is the
+`HKVTable` handle in `repro.core.api`, which binds (state, cfg, backend)
+once and normalizes key dtypes; these free functions remain the single
+underlying implementation the handle delegates to.  New consumer code
+should prefer `HKVTable` / `table.session()`; call these directly only
+from inside `repro.core` / `repro.kernels` or where the unbound form is
+genuinely needed (e.g. custom shard_map bodies).
+
+Non-structural ops accept an optional precomputed `loc=` (a
+`find.Locate` for the same key batch against a state with identical key
+planes) so an op session can share one probe across commuting ops.
 
 Triple-group role taxonomy (paper §3.5) survives on TPU as *dependency
 structure* rather than a lock protocol (DESIGN.md §2):
@@ -68,9 +80,14 @@ class FindResult(NamedTuple):
     score_lo: jax.Array
 
 
-def find(state: HKVState, cfg: HKVConfig, keys: U64) -> FindResult:
-    """Reader. Digest-accelerated lookup with value copy (paper `find`)."""
-    loc = find_mod.locate(state, cfg, keys)
+def find(state: HKVState, cfg: HKVConfig, keys: U64,
+         loc: Optional[find_mod.Locate] = None) -> FindResult:
+    """Reader. Digest-accelerated lookup with value copy (paper `find`).
+
+    Consumer code: prefer `HKVTable.find` / `session.find` (repro.core.api).
+    """
+    if loc is None:
+        loc = find_mod.locate(state, cfg, keys)
     vals = find_mod.gather_values(state, loc, cfg.dim, cfg.value_tier)
     shi = jnp.where(loc.found, state.score_hi[loc.bucket, loc.slot], 0)
     slo = jnp.where(loc.found, state.score_lo[loc.bucket, loc.slot], 0)
@@ -87,9 +104,32 @@ def find_ptr(state: HKVState, cfg: HKVConfig, keys: U64) -> find_mod.Locate:
     return find_mod.locate(state, cfg, keys)
 
 
-def contains(state: HKVState, cfg: HKVConfig, keys: U64) -> jax.Array:
+def contains(state: HKVState, cfg: HKVConfig, keys: U64,
+             loc: Optional[find_mod.Locate] = None) -> jax.Array:
     """Reader. Membership only (no value traffic)."""
-    return find_mod.locate(state, cfg, keys).found
+    if loc is None:
+        loc = find_mod.locate(state, cfg, keys)
+    return loc.found
+
+
+class FindRowsResult(NamedTuple):
+    rows: jax.Array     # [N, dim + aux] full-width table rows (zeros on miss)
+    found: jax.Array    # bool [N]
+    row: jax.Array      # int32 [N] value-plane row index (position addressing)
+
+
+def find_rows(state: HKVState, cfg: HKVConfig, keys: U64,
+              loc: Optional[find_mod.Locate] = None) -> FindRowsResult:
+    """Reader. Full-width row gather (embedding + aux optimizer columns).
+
+    The sparse-optimizer path: gathers the entire stored row so slot state
+    colocated with the embedding travels with it.  Missing keys return
+    zero rows — callers must mask by `found` (the usual consumer, a
+    row-refresh via `assign`, drops misses anyway)."""
+    if loc is None:
+        loc = find_mod.locate(state, cfg, keys)
+    rows = find_mod.gather_values(state, loc, None, cfg.value_tier)
+    return FindRowsResult(rows=rows, found=loc.found, row=loc.row)
 
 
 def size(state: HKVState) -> jax.Array:
@@ -116,13 +156,20 @@ def export_batch(
     """Reader. Stream a contiguous bucket range to the caller (checkpointing).
 
     Static-shape: returns bucket_count*S entries with a liveness mask.
+    Value rows cross tiers through `tier_gather`, so an 'hmem' table's
+    checkpoint export honors the explicit host<->device crossing contract
+    (§3.6) instead of slicing the host-resident plane in device code.
     """
     sl = slice(bucket_start, bucket_start + bucket_count)
     khi = state.key_hi[sl].reshape(-1)
     klo = state.key_lo[sl].reshape(-1)
     mask = ~u64.is_empty(U64(khi, klo))
     s = cfg.slots_per_bucket
-    rows = state.values[bucket_start * s : (bucket_start + bucket_count) * s]
+    rows = table_mod.tier_gather(
+        cfg.value_tier, state.values,
+        jnp.arange(bucket_start * s, (bucket_start + bucket_count) * s,
+                   dtype=jnp.int32),
+    )
     return ExportResult(
         key_hi=khi,
         key_lo=klo,
@@ -157,14 +204,18 @@ def assign(
     keys: U64,
     values: jax.Array,
     update_scores: bool = False,
+    loc: Optional[find_mod.Locate] = None,
 ) -> HKVState:
     """Updater. Write values of *existing* keys in place; misses are no-ops.
 
     Never allocates slots, never evicts, never touches digests — the
     non-structural contract that lets updater batches run concurrently in
     the paper and fuse freely under XLA here.
+
+    Consumer code: prefer `HKVTable.assign` / `session.assign`.
     """
-    loc = find_mod.locate(state, cfg, keys)
+    if loc is None:
+        loc = find_mod.locate(state, cfg, keys)
     b, s = cfg.num_buckets, cfg.slots_per_bucket
     # last-writer-wins on within-batch duplicates: scatter in batch order
     row = jnp.where(loc.found, loc.row, b * s)
@@ -198,7 +249,8 @@ def assign(
 
 
 def assign_add(
-    state: HKVState, cfg: HKVConfig, keys: U64, deltas: jax.Array
+    state: HKVState, cfg: HKVConfig, keys: U64, deltas: jax.Array,
+    loc: Optional[find_mod.Locate] = None,
 ) -> HKVState:
     """Updater. values[k] += delta for existing keys (duplicates accumulate).
 
@@ -206,7 +258,8 @@ def assign_add(
     non-structural scatter-add, the TPU analogue of the paper's concurrent
     updater kernels.
     """
-    loc = find_mod.locate(state, cfg, keys)
+    if loc is None:
+        loc = find_mod.locate(state, cfg, keys)
     b, s = cfg.num_buckets, cfg.slots_per_bucket
     row = jnp.where(loc.found, loc.row, b * s)
     if deltas.shape[1] < state.values.shape[1]:
@@ -220,10 +273,12 @@ def assign_add(
 
 
 def assign_scores(
-    state: HKVState, cfg: HKVConfig, keys: U64, scores: U64
+    state: HKVState, cfg: HKVConfig, keys: U64, scores: U64,
+    loc: Optional[find_mod.Locate] = None,
 ) -> HKVState:
     """Updater. Overwrite scores of existing keys (paper `assign_scores`)."""
-    loc = find_mod.locate(state, cfg, keys)
+    if loc is None:
+        loc = find_mod.locate(state, cfg, keys)
     hb = jnp.where(loc.found, loc.bucket, cfg.num_buckets)
     return state._replace(
         score_hi=state.score_hi.at[hb, loc.slot].set(scores.hi, mode="drop"),
@@ -272,7 +327,10 @@ def insert_or_assign(
     *,
     backend: str = "auto",
 ) -> UpsertResult:
-    """Inserter. Update-or-insert with in-line eviction/admission (Alg. 2/3)."""
+    """Inserter. Update-or-insert with in-line eviction/admission (Alg. 2/3).
+
+    Consumer code: prefer `HKVTable.insert_or_assign` (repro.core.api).
+    """
     res = merge_mod.upsert(
         state, cfg, keys, _pad_aux(values, state), custom_scores=custom_scores,
         stages=_upsert_stages(backend, cfg),
@@ -346,6 +404,8 @@ def find_or_insert(
     subject to admission control.  Returned rows: stored value for every key
     now present; the caller's init row for keys whose admission was rejected
     (an *ephemeral* value — the paper returns the same from its workspace).
+
+    Consumer code: prefer `HKVTable.find_or_insert` (repro.core.api).
     """
     if _resolve_backend(backend) == "kernel":
         from repro.kernels import ops as kernel_ops
@@ -384,20 +444,43 @@ def accum_or_assign(
     then a single += applies on hit (or the sum is inserted on miss,
     admission-controlled)."""
     n = keys.hi.shape[0]
-    keys_s, idx_s, gid, _c, _l, rep = merge_mod._dedupe_sort(keys)
+    d = merge_mod.dedupe_keys(keys)
     v = _pad_aux(values, state)
-    v_sum = jax.ops.segment_sum(v[idx_s], gid, num_segments=n)[gid]
-    uk = u64.select(rep, keys_s, u64.empty_sentinel((n,)))
+    v_sum = jax.ops.segment_sum(v[d.idx_sorted], d.gid, num_segments=n)[d.gid]
     # phase 1: += on existing keys (updater-style, but score-touching)
-    state2 = assign_add(state, cfg, uk, v_sum)
+    state2 = assign_add(state, cfg, d.unique, v_sum)
     # phase 2: structural insert of the remaining misses with the summed value
     cs = None
     if custom_scores is not None:
-        cs = U64(custom_scores.hi[idx_s], custom_scores.lo[idx_s])
+        cs = U64(custom_scores.hi[d.idx_sorted], custom_scores.lo[d.idx_sorted])
     res = merge_mod.upsert(
-        state2, cfg, uk, v_sum, custom_scores=cs, write_hit_values=False
+        state2, cfg, d.unique, v_sum, custom_scores=cs, write_hit_values=False
     )
-    status = jnp.zeros((n,), jnp.int8).at[idx_s].set(res.status[jnp.arange(n)])
+    # res.status is in unique's (key-sorted, deduped) order: only each
+    # group's representative slot carries the group status (the masked
+    # duplicates are INVALID) — d.inverse maps every original position to
+    # its group's representative slot.
+    return UpsertResult(state=res.state, status=res.status[d.inverse])
+
+
+def ingest(
+    state: HKVState,
+    cfg: HKVConfig,
+    keys: U64,
+    init_values: jax.Array,
+    custom_scores: Optional[U64] = None,
+    *,
+    backend: str = "auto",
+) -> UpsertResult:
+    """Inserter. Admission-only upsert: misses insert `init_values`
+    (admission-controlled), hits keep their stored value with scores
+    touched per policy — find_or_insert without the value readback (the
+    deferred-structural overlapped-ingest schedule, §3.5/Exp#3e)."""
+    res = merge_mod.upsert(
+        state, cfg, keys, _pad_aux(init_values, state),
+        custom_scores=custom_scores, write_hit_values=False,
+        stages=_upsert_stages(backend, cfg),
+    )
     return UpsertResult(state=res.state, status=res.status)
 
 

@@ -24,24 +24,30 @@ Skew handling: per-destination capacity = factor x fair share.  Uniques
 beyond capacity fall back to deterministic init rows and are counted in
 the returned `overflow` metric (they retry next step; a recurring hot key
 is admitted on its next occurrence).
+
+Surfaces (DESIGN.md §API layer): `ShardedHKVEmbedding` is the shard_map
+engine (raw HKVState in/out — the form shard_map specs want); the
+`ShardedHKVTable` handle on top implements the same `KVTable` protocol as
+the single-device `HKVTable`, so consumers and benchmarks drive local and
+sharded tables through one code path.  Owner-side table traffic inside
+the shard bodies goes through `HKVTable.wrap(...)` — this module never
+touches the op engine directly.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import merge as merge_mod
-from repro.distributed.sharding import shard_map
-from repro.core import ops as hkv_ops
 from repro.core import u64
+from repro.core.api import HKVTable, dedupe_keys, normalize_keys
 from repro.core.u64 import U64
+from repro.distributed.sharding import shard_map
 from repro.embedding.dynamic import HKVEmbedding
 
 
@@ -97,7 +103,7 @@ class ShardedHKVEmbedding:
 
     def _lookup_body(self, n_shards, cap, train, state, khi, klo):
         """Executes per shard under shard_map: khi/klo are the LOCAL tokens'
-        unique keys (padded with EMPTY)."""
+        unique keys (padded with EMPTY).  Returns (state, rows, found, ovf)."""
         axis = self.axis_names
         local = self.local_embedding(n_shards)
         keys = U64(khi, klo)
@@ -106,30 +112,36 @@ class ShardedHKVEmbedding:
         recv_hi = jax.lax.all_to_all(send_hi, axis, 0, 0, tiled=True)
         recv_lo = jax.lax.all_to_all(send_lo, axis, 0, 0, tiled=True)
         rk = U64(recv_hi.reshape(-1), recv_lo.reshape(-1))
-        cfg = local.config()
         init = local.default_rows(rk)
+        # owner-side table op through the handle; the inserter backend
+        # follows the embedding config ('auto' -> fused Pallas on TPU)
+        t = HKVTable.wrap(state, local.config(), backend=self.emb.backend)
         if train:
-            # owner-side structural op; backend follows the local embedding
-            # config ('auto' -> the fused Pallas path on TPU, DESIGN.md §4)
-            res = hkv_ops.find_or_insert(state, cfg, rk, init,
-                                         backend=self.emb.backend)
-            state, rows = res.state, res.values
+            res = t.find_or_insert(rk, init)
+            state, rows = res.table.state, res.values
+            present = res.found  # pre-existing (HKVTable.find_or_insert contract)
         else:
-            fr = hkv_ops.find(state, cfg, rk)
+            fr = t.find(rk)
             rows = jnp.where(fr.found[:, None], fr.values, init[:, : local.dim])
-        # return rows to requesters
-        rows = rows.reshape(n_shards, cap, local.dim)
+            present = fr.found
+        # return rows to requesters with the presence flag as one extra
+        # column (exact in float: the flag is 0.0 or 1.0)
+        rows = jnp.concatenate(
+            [rows, present.astype(rows.dtype)[:, None]], axis=1
+        ).reshape(n_shards, cap, local.dim + 1)
         back = jax.lax.all_to_all(rows, axis, 0, 0, tiled=True)
-        back = back.reshape(n_shards * cap, local.dim)
+        back = back.reshape(n_shards * cap, local.dim + 1)
         ovf = jnp.sum((key_slot < 0) & ~u64.is_empty(keys))
         # overflowed / padded keys fall back to deterministic init rows
         fallback = local.default_rows(keys)
+        routed = key_slot >= 0
         out = jnp.where(
-            (key_slot >= 0)[:, None],
-            back[jnp.clip(key_slot, 0)],
+            routed[:, None],
+            back[jnp.clip(key_slot, 0), : local.dim],
             fallback,
         )
-        return state, out, ovf
+        found = routed & (back[jnp.clip(key_slot, 0), local.dim] > 0)
+        return state, out, found, ovf
 
     def _grad_body(self, n_shards, cap, state, khi, klo, grads):
         axis = self.axis_names
@@ -146,16 +158,42 @@ class ShardedHKVEmbedding:
         rk = U64(recv_hi.reshape(-1), recv_lo.reshape(-1))
         # owner-side dedupe across sources: same key from several data shards
         n = rk.hi.shape[0]
-        keys_s, idx_s, gid, _c, _l, rep = merge_mod._dedupe_sort(rk)
-        g_sum = jax.ops.segment_sum(recv_g[idx_s], gid, num_segments=n)[gid]
-        uk = u64.select(rep, keys_s, u64.empty_sentinel((n,)))
-        cfg = local.config()
-        from repro.core import find as find_mod
+        d = dedupe_keys(rk)
+        g_sum = jax.ops.segment_sum(recv_g[d.idx_sorted], d.gid, num_segments=n)[d.gid]
+        # fused read-modify-write: optimizer gather + assign share one locate
+        t = HKVTable.wrap(state, local.config(), backend=self.emb.backend)
+        s = t.session()
+        s.update_rows(d.unique,
+                      lambda rows: local.optimizer.apply(rows, g_sum, local.dim))
+        return s.commit().state
 
-        loc = find_mod.locate(state, cfg, uk)
-        rows = state.values[jnp.clip(loc.row, 0, state.values.shape[0] - 1)]
-        new_rows = local.optimizer.apply(rows, g_sum, local.dim)
-        return hkv_ops.assign(state, cfg, uk, new_rows)
+    def _upsert_body(self, n_shards, cap, state, khi, klo, values):
+        """insert_or_assign with caller values routed to owners; statuses
+        routed back (the ShardedHKVTable protocol path)."""
+        axis = self.axis_names
+        local = self.local_embedding(n_shards)
+        keys = U64(khi, klo)
+        n = khi.shape[0]
+        d = dedupe_keys(keys)
+        send_hi, send_lo, key_slot = self._route(d.unique, n_shards, cap)
+        # last-writer-wins within the batch: route the group's final row
+        v_u = values[d.last_index]
+        vbuf = jnp.zeros((n_shards * cap, values.shape[1]), values.dtype).at[
+            jnp.where(key_slot >= 0, key_slot, n_shards * cap)
+        ].set(v_u, mode="drop")
+        recv_hi = jax.lax.all_to_all(send_hi, axis, 0, 0, tiled=True)
+        recv_lo = jax.lax.all_to_all(send_lo, axis, 0, 0, tiled=True)
+        recv_v = jax.lax.all_to_all(vbuf.reshape(n_shards, cap, -1), axis, 0, 0,
+                                    tiled=True).reshape(n_shards * cap, -1)
+        rk = U64(recv_hi.reshape(-1), recv_lo.reshape(-1))
+        t = HKVTable.wrap(state, local.config(), backend=self.emb.backend)
+        res = t.insert_or_assign(rk, recv_v)
+        sbuf = res.status.astype(jnp.int32).reshape(n_shards, cap)
+        back = jax.lax.all_to_all(sbuf, axis, 0, 0, tiled=True).reshape(-1)
+        st_u = jnp.where(key_slot >= 0, back[jnp.clip(key_slot, 0)], 0)
+        status = st_u[d.inverse].astype(jnp.int8)
+        ovf = jnp.sum((key_slot < 0) & ~u64.is_empty(d.unique))
+        return res.table.state, status, ovf
 
     # -- public API (call under `with mesh:` inside jit) ---------------------
 
@@ -164,7 +202,7 @@ class ShardedHKVEmbedding:
         local = self.local_embedding(n_shards)
 
         def body():
-            return local.create()
+            return local.create().state
 
         specs = self.state_specs()
         return jax.jit(
@@ -186,28 +224,23 @@ class ShardedHKVEmbedding:
 
     def _uniq(self, tokens):
         """Local dedupe: unique keys (EMPTY-padded) + inverse map."""
-        keys = self.emb.keys_of(tokens)
-        n = keys.hi.shape[0]
-        keys_s, idx_s, gid, _c, _l, rep = merge_mod._dedupe_sort(keys)
-        uk = u64.select(rep, keys_s, u64.empty_sentinel((n,)))
-        # token i -> position of its group representative in sorted space
-        rep_pos = jax.ops.segment_min(
-            jnp.arange(n, dtype=jnp.int32), gid, num_segments=n
-        )
-        inv = jnp.zeros((n,), jnp.int32).at[idx_s].set(rep_pos[gid])
-        return uk, inv
+        d = dedupe_keys(self.emb.keys_of(tokens))
+        return d.unique, d.inverse
+
+    def _dp_axes(self, mesh):
+        return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
     def lookup(self, mesh, state, tokens, *, train: bool):
         """tokens: [B, S] (data-sharded). Returns (state, rows, overflow)."""
         n_shards = int(np.prod([mesh.shape[a] for a in self.axis_names]))
-        dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        dp = self._dp_axes(mesh)
         flat = tokens.reshape(-1)
         per_shard = max(flat.shape[0] // max(np.prod([mesh.shape[a] for a in dp]), 1), 1)
         cap = self._cap(per_shard, n_shards)
 
         def body(state, toks):
             uk, inv = self._uniq(toks.reshape(-1))
-            state, rows, ovf = self._lookup_body(
+            state, rows, _found, ovf = self._lookup_body(
                 n_shards, cap, train, state, uk.hi, uk.lo
             )
             return state, rows[inv], ovf.reshape(1)  # rank-1 for out_specs
@@ -222,9 +255,64 @@ class ShardedHKVEmbedding:
         state, rows, ovf = out
         return state, rows.reshape(tokens.shape + (self.emb.dim,)), jnp.sum(ovf)
 
+    def find_keys(self, mesh, state, keys: U64, *, train: bool = False):
+        """Key-level lookup: keys U64 [N] (N divisible by the dp world size).
+
+        Returns (state, values [N, dim], found [N], overflow).  Misses
+        return ZERO rows (the table-surface contract, unlike the embedding
+        path's deterministic init fallback)."""
+        n_shards = int(np.prod([mesh.shape[a] for a in self.axis_names]))
+        dp = self._dp_axes(mesh)
+        per_shard = max(keys.hi.shape[0] // max(np.prod([mesh.shape[a] for a in dp]), 1), 1)
+        cap = self._cap(per_shard, n_shards)
+
+        def body(state, khi, klo):
+            d = dedupe_keys(U64(khi, klo))
+            state, rows, found, ovf = self._lookup_body(
+                n_shards, cap, train, state, d.unique.hi, d.unique.lo
+            )
+            rows_o = rows[d.inverse]
+            found_o = found[d.inverse] & ~u64.is_empty(U64(khi, klo))
+            if not train:  # reader contract: zeros where not found
+                rows_o = jnp.where(found_o[:, None], rows_o, 0.0)
+            return state, rows_o, found_o, ovf.reshape(1)
+
+        specs = self.state_specs()
+        state, rows, found, ovf = shard_map(
+            body, mesh=mesh,
+            in_specs=(specs, P(dp), P(dp)),
+            out_specs=(specs, P(dp, None), P(dp), P(dp)),
+            check_vma=False,
+        )(state, keys.hi, keys.lo)
+        return state, rows, found, jnp.sum(ovf)
+
+    def upsert_keys(self, mesh, state, keys: U64, values):
+        """Key-level insert_or_assign: values routed to owner shards.
+
+        Returns (state, status [N] int8, overflow)."""
+        n_shards = int(np.prod([mesh.shape[a] for a in self.axis_names]))
+        dp = self._dp_axes(mesh)
+        per_shard = max(keys.hi.shape[0] // max(np.prod([mesh.shape[a] for a in dp]), 1), 1)
+        cap = self._cap(per_shard, n_shards)
+
+        def body(state, khi, klo, v):
+            state, status, ovf = self._upsert_body(
+                n_shards, cap, state, khi, klo, v
+            )
+            return state, status, ovf.reshape(1)
+
+        specs = self.state_specs()
+        state, status, ovf = shard_map(
+            body, mesh=mesh,
+            in_specs=(specs, P(dp), P(dp), P(dp, None)),
+            out_specs=(specs, P(dp), P(dp)),
+            check_vma=False,
+        )(state, keys.hi, keys.lo, values)
+        return state, status, jnp.sum(ovf)
+
     def apply_grads(self, mesh, state, tokens, grads):
         n_shards = int(np.prod([mesh.shape[a] for a in self.axis_names]))
-        dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        dp = self._dp_axes(mesh)
         per_shard = max(
             tokens.size // max(np.prod([mesh.shape[a] for a in dp]), 1), 1
         )
@@ -251,3 +339,142 @@ class ShardedHKVEmbedding:
     def _cap(self, per_shard_tokens: int, n_shards: int) -> int:
         c = int(per_shard_tokens * self.capacity_factor / n_shards)
         return max(8, -(-c // 8) * 8)
+
+
+# =============================================================================
+# ShardedHKVTable — the KVTable-protocol handle over the sharded engine
+# =============================================================================
+
+
+class ShardedFind(NamedTuple):
+    values: jax.Array   # [N, dim] (zeros where not found)
+    found: jax.Array    # bool [N]
+    overflow: jax.Array  # int — keys that missed their routing budget
+
+
+class ShardedUpsert(NamedTuple):
+    table: "ShardedHKVTable"
+    status: jax.Array   # int8 [N] merge status codes (0 where unrouted)
+    overflow: jax.Array
+
+    @property
+    def ok(self) -> jax.Array:
+        return (self.status >= 1) & (self.status <= 3)
+
+
+class ShardedFindOrInsert(NamedTuple):
+    table: "ShardedHKVTable"
+    values: jax.Array
+    found: jax.Array
+    overflow: jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ShardedHKVTable:
+    """One table sharded over a mesh, behind the same handle discipline as
+    `HKVTable`: sharded `state` is the only pytree leaf; the engine
+    (`ShardedHKVEmbedding`) and mesh are static aux data.  Implements the
+    `KVTable` protocol, so harness code is agnostic to whether a table
+    lives on one device or a pod."""
+
+    state: object                  # HKVState with leaves sharded over the mesh
+    semb: ShardedHKVEmbedding
+    mesh: object
+
+    def tree_flatten(self):
+        return (self.state,), (self.semb, self.mesh)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        semb, mesh = aux
+        return cls(state=children[0], semb=semb, mesh=mesh)
+
+    # -- construction ----------------------------------------------------------
+
+    @classmethod
+    def create(cls, mesh, emb: Optional[HKVEmbedding] = None, *,
+               axis_names: Optional[tuple] = None,
+               capacity_factor: float = 2.0, **emb_kwargs) -> "ShardedHKVTable":
+        if emb is None:
+            emb = HKVEmbedding(**emb_kwargs)
+        semb = ShardedHKVEmbedding(
+            emb=emb, axis_names=axis_names or tuple(mesh.axis_names),
+            capacity_factor=capacity_factor,
+        )
+        return cls(state=semb.create_sharded(mesh), semb=semb, mesh=mesh)
+
+    def with_state(self, state) -> "ShardedHKVTable":
+        return dataclasses.replace(self, state=state)
+
+    # -- static views ----------------------------------------------------------
+
+    @property
+    def n_shards(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.semb.axis_names]))
+
+    @property
+    def capacity(self) -> int:
+        # realized capacity: per-shard rounding times shard count
+        return self.semb.local_embedding(self.n_shards).capacity * self.n_shards
+
+    @property
+    def dim(self) -> int:
+        return self.semb.emb.dim
+
+    # -- KVTable protocol ------------------------------------------------------
+
+    def find(self, keys) -> ShardedFind:
+        _state, values, found, ovf = self.semb.find_keys(
+            self.mesh, self.state, normalize_keys(keys), train=False
+        )
+        return ShardedFind(values=values, found=found, overflow=ovf)
+
+    def insert_or_assign(self, keys, values) -> ShardedUpsert:
+        state, status, ovf = self.semb.upsert_keys(
+            self.mesh, self.state, normalize_keys(keys), values
+        )
+        return ShardedUpsert(table=self.with_state(state), status=status,
+                             overflow=ovf)
+
+    def find_or_insert(self, keys) -> ShardedFindOrInsert:
+        """Admission-controlled lookup; misses insert the deterministic
+        hash-derived init rows (routing caller init rows is not supported —
+        owner shards recompute the init from the key)."""
+        state, values, found, ovf = self.semb.find_keys(
+            self.mesh, self.state, normalize_keys(keys), train=True
+        )
+        return ShardedFindOrInsert(table=self.with_state(state), values=values,
+                                   found=found, overflow=ovf)
+
+    def contains(self, keys) -> jax.Array:
+        return self.find(keys).found
+
+    def size(self) -> jax.Array:
+        specs = self.semb.state_specs()
+        ax = self.semb.axis_names
+
+        def body(state):
+            live = ~u64.is_empty(U64(state.key_hi, state.key_lo))
+            return jnp.sum(live.astype(jnp.int32)).reshape(1)
+
+        per_shard = shard_map(
+            body, mesh=self.mesh, in_specs=(specs,), out_specs=P(ax),
+            check_vma=False,
+        )(self.state)
+        return jnp.sum(per_shard)
+
+    def load_factor(self) -> jax.Array:
+        return self.size().astype(jnp.float32) / float(self.capacity)
+
+    # -- embedding-layer delegates (the training path) -------------------------
+
+    def lookup(self, tokens, *, train: bool):
+        state, rows, ovf = self.semb.lookup(self.mesh, self.state, tokens,
+                                            train=train)
+        return self.with_state(state), rows, ovf
+
+    def apply_grads(self, tokens, grads) -> "ShardedHKVTable":
+        return self.with_state(
+            self.semb.apply_grads(self.mesh, self.state, tokens, grads)
+        )

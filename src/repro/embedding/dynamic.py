@@ -10,12 +10,15 @@ Training path (one step):
   2. The model consumes the gathered rows; jax.grad gives d(loss)/d(rows).
   3. apply_grads — UPDATER role: per-unique-token gradient sums feed a
      sparse optimizer whose slot state lives in aux value columns, and the
-     refreshed rows are written back with `assign` (non-structural, so XLA
-     may overlap it with the next microbatch's compute; §3.5 adaptation).
+     refreshed rows write back through a fused read-modify-write session op
+     (one shared locate for gather + assign; §3.5 adaptation).
 
 Serving path: `find` only — READER role; unseen tokens fall back to the
 same deterministic hash-derived init the training path would insert, so
 train/serve disagree only by the not-yet-applied gradients.
+
+All table traffic goes through the `HKVTable` handle (`repro.core.api`);
+this module owns only token↔key derivation and the optimizer hookup.
 """
 
 from __future__ import annotations
@@ -26,12 +29,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import merge as merge_mod
-from repro.core import find as find_mod
-from repro.core import ops as hkv_ops
-from repro.core import table as table_mod
 from repro.core import u64
-from repro.core.table import HKVConfig, HKVState
+from repro.core.api import HKVTable, dedupe_keys
+from repro.core.table import HKVConfig
 from repro.core.u64 import U64
 from repro.embedding.sparse_opt import SparseOptimizer
 
@@ -58,8 +58,8 @@ class HKVEmbedding:
             aux_value_dim=self.optimizer.aux_dim(self.dim),
         )
 
-    def create(self) -> HKVState:
-        return table_mod.create(self.config())
+    def create(self) -> HKVTable:
+        return HKVTable.create(self.config(), backend=self.backend)
 
     # -- key & init derivation -------------------------------------------------
 
@@ -86,54 +86,41 @@ class HKVEmbedding:
 
     # -- roles -------------------------------------------------------------
 
-    def lookup_train(self, state: HKVState, tokens: jax.Array):
-        """INSERTER: find_or_insert the token batch. Returns (state, rows)."""
-        cfg = self.config()
+    def lookup_train(self, table: HKVTable, tokens: jax.Array):
+        """INSERTER: find_or_insert the token batch. Returns (table, rows)."""
         keys = self.keys_of(tokens)
-        init = self.default_rows(keys)
-        res = hkv_ops.find_or_insert(state, cfg, keys, init, backend=self.backend)
+        res = table.find_or_insert(keys, self.default_rows(keys))
         emb = res.values.reshape(tokens.shape + (self.dim,))
-        return res.state, emb
+        return res.table, emb
 
-    def lookup_serve(self, state: HKVState, tokens: jax.Array) -> jax.Array:
+    def lookup_serve(self, table: HKVTable, tokens: jax.Array) -> jax.Array:
         """READER: find; misses fall back to the deterministic init row."""
-        cfg = self.config()
         keys = self.keys_of(tokens)
-        res = hkv_ops.find(state, cfg, keys)
+        res = table.find(keys)
         vals = jnp.where(res.found[:, None], res.values, self.default_rows(keys))
         return vals.reshape(tokens.shape + (self.dim,))
 
     def apply_grads(
-        self, state: HKVState, tokens: jax.Array, grads: jax.Array
-    ) -> HKVState:
+        self, table: HKVTable, tokens: jax.Array, grads: jax.Array
+    ) -> HKVTable:
         """UPDATER: sum grads per unique token, run the sparse optimizer on
-        the gathered rows, write back with `assign` (non-structural)."""
-        cfg = self.config()
+        the gathered rows, write back — one session op, one shared locate
+        (the unfused gather + assign sequence would probe twice)."""
         keys = self.keys_of(tokens)
         g = grads.reshape(-1, self.dim)
         n = g.shape[0]
-        keys_s, idx_s, gid, _count, _last, rep = merge_mod._dedupe_sort(keys)
-        g_sum = jax.ops.segment_sum(g[idx_s], gid, num_segments=n)
-        g_rep = g_sum[gid]  # at each group's first slot: the group total
-        uk = u64.select(rep, keys_s, u64.empty_sentinel((n,)))
-        loc = find_mod.locate(state, cfg, uk)
-        rows = table_mod.tier_gather(
-            cfg.value_tier, state.values,
-            jnp.clip(loc.row, 0, state.values.shape[0] - 1),
-        )
-        new_rows = self.optimizer.apply(rows, g_rep, self.dim)
+        d = dedupe_keys(keys)
+        g_sum = jax.ops.segment_sum(g[d.idx_sorted], d.gid, num_segments=n)
+        g_rep = g_sum[d.gid]  # at each group's first slot: the group total
+        s = table.session()
         # rejected-admission tokens simply have no row to update (cache
         # semantics: un-admitted embeddings do not train)
-        return hkv_ops.assign(state, cfg, uk, new_rows)
+        s.update_rows(d.unique,
+                      lambda rows: self.optimizer.apply(rows, g_rep, self.dim))
+        return s.commit()
 
-    def ingest(self, state: HKVState, tokens: jax.Array) -> HKVState:
+    def ingest(self, table: HKVTable, tokens: jax.Array) -> HKVTable:
         """Deferred-structural variant: admit this batch's new tokens without
         reading values (used by the overlapped-ingest schedule, §3.5/Exp#3e)."""
-        cfg = self.config()
         keys = self.keys_of(tokens)
-        init = self.default_rows(keys)
-        return merge_mod.upsert(
-            state, cfg, keys,
-            hkv_ops._pad_aux(init, state),
-            write_hit_values=False,
-        ).state
+        return table.ingest(keys, self.default_rows(keys)).table

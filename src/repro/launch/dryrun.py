@@ -37,7 +37,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_NAMES, get_arch
 from repro.distributed import sharding as shard_rules
-from repro.distributed.table_sharding import ShardedHKVEmbedding
+from repro.distributed.table_sharding import ShardedHKVEmbedding, ShardedHKVTable
 from repro.embedding.dynamic import HKVEmbedding
 from repro.embedding.sparse_opt import SparseOptimizer
 from repro.launch.mesh import make_production_mesh
@@ -225,20 +225,25 @@ def build_and_compile(arch_name: str, shape_name: str, mesh_kind: str,
                 psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
                 opt_shape = jax.eval_shape(opt.init, hkv_params_shape)
                 osh = _opt_specs(opt_name, opt_shape, pspecs, mesh)
-                builder = StepBuilder(hkv_model, opt, sharded_emb=emb, mesh=mesh)
+                builder = StepBuilder(hkv_model, opt)
                 n_shards = record["devices"]
                 local = emb.local_embedding(n_shards)
-                local_shape = jax.eval_shape(local.create)
+                local_shape = jax.eval_shape(lambda: local.create().state)
                 # GLOBAL table ShapeDtypeStructs: local bucket/value planes
                 # concatenate over the n_shards table shards; clocks replicate
-                table_shape = jax.tree.map(
+                table_state_shape = jax.tree.map(
                     lambda a: jax.ShapeDtypeStruct(
                         (a.shape[0] * n_shards,) + a.shape[1:], a.dtype
                     ) if a.ndim >= 1 else a,
                     local_shape,
                 )
-                tsh = jax.tree.map(
-                    lambda s: NamedSharding(mesh, s), emb.state_specs())
+                # the step threads the handle; shapes/shardings wrap its leaf
+                table_shape = ShardedHKVTable(
+                    state=table_state_shape, semb=emb, mesh=mesh)
+                tsh = ShardedHKVTable(
+                    state=jax.tree.map(
+                        lambda s: NamedSharding(mesh, s), emb.state_specs()),
+                    semb=emb, mesh=mesh)
                 fn = jax.jit(
                     builder.train_step_hkv,
                     in_shardings=(psh, osh, tsh, bsh),

@@ -46,7 +46,7 @@ def main():
 
     from repro.configs import get_arch
     from repro.data import DataCursor, HostPrefetcher, TokenStream
-    from repro.distributed.table_sharding import ShardedHKVEmbedding
+    from repro.distributed.table_sharding import ShardedHKVTable
     from repro.embedding.dynamic import HKVEmbedding
     from repro.embedding.sparse_opt import SparseOptimizer
     from repro.launch.mesh import make_dev_mesh
@@ -72,16 +72,15 @@ def main():
                          vocab=lm.vocab, alpha=1.0)
 
     if args.backend == "hkv":
-        semb = ShardedHKVEmbedding(
-            emb=HKVEmbedding(
+        table = ShardedHKVTable.create(
+            mesh,
+            HKVEmbedding(
                 capacity=max(256, (2 * lm.vocab // 128) * 128),
                 dim=lm.d_model,
                 optimizer=SparseOptimizer("rowwise_adagrad", lr=0.05),
             ),
-            axis_names=tuple(mesh.axis_names),
         )
-        table = semb.create_sharded(mesh)
-        builder = StepBuilder(model, opt, sharded_emb=semb, mesh=mesh)
+        builder = StepBuilder(model, opt)
 
         @jax.jit
         def step_fn(state, batch):

@@ -17,13 +17,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
 from repro.distributed import sharding as shard_rules
-from repro.distributed.table_sharding import ShardedHKVEmbedding
+from repro.distributed.table_sharding import ShardedHKVTable
 from repro.models.lm import CompositeLM
 from repro.optim import Optimizer
 from repro.optim.optimizers import apply_updates
@@ -41,8 +39,6 @@ class StepBuilder:
     model: CompositeLM
     optimizer: Optimizer
     grad_clip: float = 1.0
-    sharded_emb: Optional[ShardedHKVEmbedding] = None
-    mesh: Optional[object] = None
 
     # ------------------------------------------------------------- dense path
 
@@ -67,8 +63,9 @@ class StepBuilder:
 
     # --------------------------------------------------------------- hkv path
 
-    def train_step_hkv(self, params, opt_state, table_state, batch):
-        assert self.sharded_emb is not None and self.mesh is not None
+    def train_step_hkv(self, params, opt_state, table: ShardedHKVTable, batch):
+        """The HKV step threads a `ShardedHKVTable` handle: mesh + engine
+        ride as static pytree aux, so this jits/donates like any state."""
         tokens = batch["tokens"]
         extras = {
             k: batch[k]
@@ -76,9 +73,7 @@ class StepBuilder:
             if k in batch
         }
         # INSERTER: one structural op per step (admission-controlled)
-        table_state, embeds, overflow = self.sharded_emb.lookup(
-            self.mesh, table_state, tokens, train=True
-        )
+        table, embeds, overflow = table.lookup(tokens, train=True)
 
         def loss_fn(p, e):
             loss, aux = self.model.loss(p, None, batch["labels"], embeds=e, **extras)
@@ -91,11 +86,9 @@ class StepBuilder:
         updates, opt_state = self.optimizer.update(grads, opt_state, params)
         params = apply_updates(params, updates)
         # UPDATER: non-structural sparse write-back, overlappable by XLA
-        table_state = self.sharded_emb.apply_grads(
-            self.mesh, table_state, tokens, egrads
-        )
+        table = table.apply_grads(tokens, egrads)
         metrics = {"loss": loss, "grad_norm": gnorm, "emb_overflow": overflow, **aux}
-        return params, opt_state, table_state, metrics
+        return params, opt_state, table, metrics
 
     # ----------------------------------------------------------------- serve
 

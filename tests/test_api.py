@@ -1,0 +1,449 @@
+"""HKVTable handle API: pytree/jit compatibility, key normalization,
+op-session fusion parity, KVTable protocol conformance, and the satellite
+regressions (accum_or_assign status order, tier-aware export)."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.baselines import DictKVTable
+from repro.core import (
+    HKVTable,
+    KVTable,
+    U64,
+    dedupe_keys,
+    normalize_keys,
+    u64,
+)
+from repro.core import find as find_mod
+
+
+def _table(**kw):
+    kw.setdefault("capacity", 8 * 128)
+    kw.setdefault("dim", 4)
+    return HKVTable.create(**kw)
+
+
+def _keys(rng, n, lo=0, hi=2**50):
+    return rng.integers(lo, hi, size=n).astype(np.uint64)
+
+
+# =============================================================================
+# Key normalization
+# =============================================================================
+
+
+class TestNormalizeKeys:
+    def test_uint64_roundtrip(self):
+        arr = np.array([0, 1, 2**33 + 7, 2**63 + 5], np.uint64)
+        k = normalize_keys(arr)
+        np.testing.assert_array_equal(u64.to_uint64(k), arr)
+
+    def test_u64_passthrough(self):
+        k = U64(jnp.zeros(3, jnp.uint32), jnp.arange(3, dtype=jnp.uint32))
+        assert normalize_keys(k) is k
+
+    def test_int_list(self):
+        k = normalize_keys([1, 2, 3])
+        np.testing.assert_array_equal(u64.to_uint64(k), [1, 2, 3])
+
+    def test_negative_ints_become_empty_sentinel(self):
+        for arr in (np.array([5, -1, 7], np.int64),
+                    jnp.asarray([5, -1, 7], jnp.int32)):
+            k = normalize_keys(arr)
+            empt = np.asarray(u64.is_empty(k))
+            np.testing.assert_array_equal(empt, [False, True, False])
+
+    def test_signed_int64_wide_values(self):
+        arr = np.array([2**40 + 3], np.int64)
+        k = normalize_keys(arr)
+        assert int(u64.to_uint64(k)[0]) == 2**40 + 3
+
+    def test_uint32_zero_extended(self):
+        k = normalize_keys(np.array([7, 9], np.uint32))
+        np.testing.assert_array_equal(u64.to_uint64(k), [7, 9])
+
+    def test_numpy_scalar_uint64_exact(self):
+        # np scalars are not ndarrays; they must not fall into the jnp
+        # path, which would truncate uint64 to the low 32 bits
+        k = normalize_keys(np.uint64(2**40 + 7))
+        assert int(u64.to_uint64(k)[0]) == 2**40 + 7
+
+    def test_float_rejected(self):
+        with pytest.raises(TypeError):
+            normalize_keys(np.array([1.5]))
+
+    def test_table_accepts_all_forms(self):
+        t = _table()
+        vals = jnp.ones((3, 4))
+        r = t.insert_or_assign(np.array([1, 2, 3], np.uint64), vals)
+        for form in ([1, 2, 3], np.array([1, 2, 3], np.int64),
+                     jnp.asarray([1, 2, 3], jnp.int32)):
+            found = r.table.contains(form)
+            assert bool(np.asarray(found).all())
+
+
+# =============================================================================
+# Pytree / jit / scan compatibility (satellite: jit-compat coverage)
+# =============================================================================
+
+
+class TestHandlePytree:
+    def test_tree_roundtrip_preserves_statics(self):
+        t = _table(buckets_per_key=2, score_policy="lfu", backend="jnp")
+        leaves, treedef = jax.tree_util.tree_flatten(t)
+        t2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert t2.cfg == t.cfg and t2.backend == t.backend
+        assert isinstance(t2, HKVTable)
+
+    def test_jit_with_donated_state(self):
+        t = _table()
+        keys = _keys(np.random.default_rng(0), 64)
+        vals = jnp.ones((64, 4))
+
+        @jax.jit
+        def step(table, kh, kl, v):
+            return table.insert_or_assign(U64(kh, kl), v).table
+
+        step_donating = jax.jit(step, donate_argnums=0)
+        k = u64.from_uint64(keys)
+        t_ref = step(t, k.hi, k.lo, vals)
+        t_don = step_donating(t, k.hi, k.lo, vals)
+        np.testing.assert_array_equal(np.asarray(t_ref.state.key_lo),
+                                      np.asarray(t_don.state.key_lo))
+        assert int(t_don.size()) == 64
+
+    def test_scan_over_steps(self):
+        t = _table()
+        rng = np.random.default_rng(1)
+        key_batches = np.stack([_keys(rng, 32) for _ in range(5)])
+        kb = u64.from_uint64(key_batches)  # U64 with [5, 32] planes
+
+        def body(table, k):
+            res = table.insert_or_assign(U64(k[0], k[1]), jnp.ones((32, 4)))
+            return res.table, res.status
+
+        final, statuses = jax.lax.scan(
+            body, t, (jnp.stack([kb.hi, kb.lo], axis=1)))
+        assert statuses.shape == (5, 32)
+        # sequential reference
+        t_seq = t
+        for i in range(5):
+            t_seq = t_seq.insert_or_assign(
+                key_batches[i], jnp.ones((32, 4))).table
+        np.testing.assert_array_equal(np.asarray(final.state.key_lo),
+                                      np.asarray(t_seq.state.key_lo))
+
+    def test_with_backend_and_state(self):
+        t = _table()
+        assert t.with_backend("kernel").backend == "kernel"
+        t2 = t.with_state(t.state)
+        assert t2.cfg == t.cfg
+
+
+# =============================================================================
+# Op sessions (tentpole acceptance: one locate, bit-identical)
+# =============================================================================
+
+
+class _LocateCounter:
+    def __init__(self, monkeypatch):
+        self.count = 0
+        real = find_mod.locate
+
+        def counting(*a, **kw):
+            self.count += 1
+            return real(*a, **kw)
+
+        monkeypatch.setattr(find_mod, "locate", counting)
+
+
+class TestOpSession:
+    def _filled(self):
+        t = _table(capacity=4 * 128, dim=4)
+        keys = _keys(np.random.default_rng(2), 200)
+        return t.insert_or_assign(keys, jnp.ones((200, 4))).table, keys
+
+    def test_find_assign_shares_one_locate_and_is_bit_identical(
+            self, monkeypatch):
+        table, keys = self._filled()
+        q = u64.from_uint64(keys[:64])
+        vals = jnp.full((64, 4), 2.0)
+
+        # unfused reference: find then assign, two probes
+        ref_find = table.find(q)
+        ref_table = table.assign(q, vals)
+
+        counter = _LocateCounter(monkeypatch)
+        s = table.session()
+        got_find = s.find(q)
+        s.assign(q, vals)
+        new_table = s.commit()
+        assert counter.count == 1  # the acceptance criterion: ONE locate
+
+        np.testing.assert_array_equal(np.asarray(got_find.get().values),
+                                      np.asarray(ref_find.values))
+        np.testing.assert_array_equal(np.asarray(got_find.get().found),
+                                      np.asarray(ref_find.found))
+        for a, b in zip(jax.tree.leaves(new_table), jax.tree.leaves(ref_table)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_session_matches_unfused_sequence_with_inserter(self):
+        table, keys = self._filled()
+        q = u64.from_uint64(keys[:32])
+        fresh = _keys(np.random.default_rng(3), 32, lo=2**51, hi=2**52)
+        vals = jnp.full((32, 4), 3.0)
+
+        # unfused: contains, assign, insert, find (in order)
+        ref_c = table.contains(q)
+        t1 = table.assign(q, vals)
+        r = t1.insert_or_assign(fresh, vals)
+        ref_f = r.table.find(q)
+
+        s = table.session()
+        c = s.contains(q)
+        s.assign(q, vals)
+        st = s.insert_or_assign(fresh, vals)
+        f = s.find(q)
+        t2 = s.commit()
+        np.testing.assert_array_equal(np.asarray(c.get()), np.asarray(ref_c))
+        np.testing.assert_array_equal(np.asarray(st.get()), np.asarray(r.status))
+        np.testing.assert_array_equal(np.asarray(f.get().values),
+                                      np.asarray(ref_f.values))
+        for a, b in zip(jax.tree.leaves(t2), jax.tree.leaves(r.table)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_inserter_invalidates_cached_locates(self, monkeypatch):
+        table, keys = self._filled()
+        q = u64.from_uint64(keys[:16])
+        counter = _LocateCounter(monkeypatch)
+        s = table.session()
+        s.find(q)                                    # locate #1 (+0 internal)
+        s.erase(q)                                   # serialization point
+        s.find(q)                                    # must re-probe: locate #3
+        s.commit()
+        # erase issues its own locate internally; the second find must NOT
+        # reuse the pre-erase locate
+        assert counter.count == 3
+
+    def test_update_rows_matches_find_rows_plus_assign(self):
+        table, keys = self._filled()
+        q = u64.from_uint64(keys[:48])
+        fn = lambda rows: rows * 2.0 + 1.0
+
+        got = table.find_rows(q)
+        ref_table = table.assign(q, fn(got.rows))
+
+        s = table.session()
+        s.update_rows(q, fn)
+        new_table = s.commit()
+        for a, b in zip(jax.tree.leaves(new_table), jax.tree.leaves(ref_table)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_session_is_jittable(self):
+        table, keys = self._filled()
+        q = u64.from_uint64(keys[:32])
+        vals = jnp.full((32, 4), 5.0)
+
+        @jax.jit
+        def fused(t, kh, kl, v):
+            k = U64(kh, kl)
+            s = t.session()
+            hit = s.find(k)
+            s.assign(k, v)
+            t2 = s.commit()
+            return hit.get().values, t2
+
+        out, t2 = fused(table, q.hi, q.lo, vals)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(table.find(q).values))
+        np.testing.assert_allclose(np.asarray(t2.find(q).values), 5.0)
+
+    def test_explain_reports_groups_and_probes(self):
+        table, keys = self._filled()
+        q = u64.from_uint64(keys[:8])
+        s = table.session()
+        s.find(q)
+        s.assign(q, jnp.ones((8, 4)))
+        s.insert_or_assign(_keys(np.random.default_rng(5), 8), jnp.ones((8, 4)))
+        plan = s.explain()
+        assert "serialization point" in plan
+        assert "shares locate" in plan
+        assert "2 fused vs 3 unfused" in plan
+
+    def test_distinct_temp_key_arrays_not_aliased(self):
+        """id() of a freed array can be recycled; the session must retain
+        originals so two different temp key batches never share a locate."""
+        table, _ = self._filled()
+        s = table.session()
+        # both arrays are temporaries: without retention, numpy may reuse
+        # the first array's address for the second
+        s.find(np.arange(4, dtype=np.uint64))
+        s.assign(np.arange(1000, 1004, dtype=np.uint64), jnp.ones((4, 4)))
+        assert len(s._key_batches) == 2
+        s2 = table.session()
+        s2.find(np.arange(4, dtype=np.uint64))
+        s2.assign(np.arange(4, dtype=np.uint64) + 0, jnp.ones((4, 4)))
+        assert len(s2._key_batches) == 2  # value-equal but distinct objects
+
+    def test_refs_error_before_commit(self):
+        table, _ = self._filled()
+        s = table.session()
+        ref = s.find(np.array([1], np.uint64))
+        with pytest.raises(RuntimeError):
+            ref.get()
+
+
+# =============================================================================
+# Satellite regressions
+# =============================================================================
+
+
+class TestAccumOrAssignStatusOrder:
+    def test_shuffled_duplicates_map_statuses_to_batch_positions(self):
+        rng = np.random.default_rng(7)
+        t = _table(capacity=4 * 128, dim=2)
+        existing = np.arange(10, 20, dtype=np.uint64)
+        t = t.insert_or_assign(existing, jnp.ones((10, 2))).table
+
+        # batch: duplicates of existing + new keys, shuffled
+        batch = np.array([15, 100, 15, 11, 100, 11, 101, 15], np.uint64)
+        perm = rng.permutation(len(batch))
+        batch = batch[perm]
+        deltas = jnp.ones((len(batch), 2))
+        res = t.accum_or_assign(batch, deltas)
+        status = np.asarray(res.status)
+        for i, k in enumerate(batch):
+            expect = 1 if k in existing else 2  # UPDATED vs INSERTED
+            assert status[i] == expect, (i, int(k), status.tolist())
+
+    def test_accumulation_values(self):
+        t = _table(capacity=4 * 128, dim=2)
+        t = t.insert_or_assign(np.array([5], np.uint64),
+                               jnp.full((1, 2), 10.0)).table
+        batch = np.array([5, 6, 5, 6, 5], np.uint64)
+        vals = jnp.ones((5, 2))
+        res = t.accum_or_assign(batch, vals)
+        out = res.table.find(np.array([5, 6], np.uint64))
+        np.testing.assert_allclose(np.asarray(out.values)[0], 13.0)  # 10 + 3
+        np.testing.assert_allclose(np.asarray(out.values)[1], 2.0)   # inserted sum
+
+    def test_empty_sentinel_positions_invalid(self):
+        t = _table(capacity=4 * 128, dim=2)
+        batch = np.array([1, 0xFFFFFFFFFFFFFFFF, 2], np.uint64)
+        res = t.accum_or_assign(batch, jnp.ones((3, 2)))
+        status = np.asarray(res.status)
+        assert status[1] == 0 and status[0] != 0 and status[2] != 0
+
+
+class TestTierAwareExport:
+    @pytest.mark.parametrize("tier", ["hbm", "hmem"])
+    def test_export_values_match_find(self, tier):
+        t = _table(capacity=2 * 128, dim=3, value_tier=tier)
+        keys = _keys(np.random.default_rng(9), 100)
+        vals = jnp.asarray(
+            np.random.default_rng(9).normal(size=(100, 3)), jnp.float32)
+        t = t.insert_or_assign(keys, vals).table
+        exp = t.export_batch(0, t.cfg.num_buckets)
+        live = np.asarray(exp.mask)
+        assert live.sum() == len(set(keys.tolist()))
+        got_keys = U64(jnp.asarray(np.asarray(exp.key_hi)[live]),
+                       jnp.asarray(np.asarray(exp.key_lo)[live]))
+        looked = t.find(got_keys)
+        np.testing.assert_array_equal(np.asarray(exp.values)[live],
+                                      np.asarray(looked.values))
+
+    def test_export_batch_if_threshold_hmem(self):
+        t = _table(capacity=2 * 128, dim=2, value_tier="hmem",
+                   score_policy="custom")
+        keys = np.arange(1, 33, dtype=np.uint64)
+        t = t.insert_or_assign(keys, jnp.ones((32, 2)),
+                               custom_scores=keys).table
+        out = t.export_batch_if(0, t.cfg.num_buckets,
+                                np.array([17], np.uint64))
+        live = np.asarray(out.mask)
+        kept = u64.to_uint64(U64(jnp.asarray(np.asarray(out.key_hi)[live]),
+                                 jnp.asarray(np.asarray(out.key_lo)[live])))
+        assert set(kept.tolist()) == set(range(17, 33))
+
+
+# =============================================================================
+# dedupe_keys helper
+# =============================================================================
+
+
+class TestDedupeKeys:
+    def test_groups_and_inverse(self):
+        keys = np.array([7, 3, 7, 9, 3, 7], np.uint64)
+        d = dedupe_keys(keys)
+        uniq = u64.to_uint64(d.unique)
+        live = ~np.asarray(u64.is_empty(d.unique))
+        assert sorted(uniq[live].tolist()) == [3, 7, 9]
+        # inverse maps each original position to its group's rep slot
+        inv = np.asarray(d.inverse)
+        for i, k in enumerate(keys):
+            assert uniq[inv[i]] == k
+
+    def test_last_index_is_last_writer(self):
+        keys = np.array([7, 3, 7], np.uint64)
+        d = dedupe_keys(keys)
+        # the rep slot of key 7 must carry original index 2 (its last occurrence)
+        inv = np.asarray(d.inverse)
+        assert int(np.asarray(d.last_index)[inv[0]]) == 2
+
+
+# =============================================================================
+# KVTable protocol conformance — one harness, three implementations
+# =============================================================================
+
+
+def _protocol_roundtrip(table):
+    """The single code path the benchmarks use, over any KVTable."""
+    assert isinstance(table, KVTable)
+    keys = np.arange(1, 65, dtype=np.uint64)
+    vals = jnp.broadcast_to(jnp.arange(64, dtype=jnp.float32)[:, None],
+                            (64, table.dim)) + 1.0
+    rep = table.insert_or_assign(keys, vals)
+    assert bool(np.asarray(rep.ok).all())
+    table = rep.table
+    assert int(table.size()) == 64
+    assert 0.0 < float(table.load_factor()) <= 1.0
+    f = table.find(keys)
+    assert bool(np.asarray(f.found).all())
+    np.testing.assert_allclose(np.asarray(f.values), np.asarray(vals))
+    miss = table.find(np.arange(1000, 1010, dtype=np.uint64))
+    assert not bool(np.asarray(miss.found).any())
+    np.testing.assert_array_equal(np.asarray(miss.values), 0.0)
+    assert bool(np.asarray(table.contains(keys)).all())
+    return table
+
+
+class TestKVTableProtocol:
+    def test_hkv(self):
+        _protocol_roundtrip(HKVTable.create(capacity=4 * 128, dim=3))
+
+    def test_open_addressing(self):
+        _protocol_roundtrip(DictKVTable.open_addressing(512, 3))
+
+    def test_bucketed_p2c(self):
+        _protocol_roundtrip(DictKVTable.bucketed_p2c(512, 3))
+
+    @pytest.mark.slow  # shard_map compiles per op: ~2 min on CPU
+    def test_sharded(self):
+        from repro.distributed.table_sharding import ShardedHKVTable
+        from repro.embedding.dynamic import HKVEmbedding
+        from repro.embedding.sparse_opt import SparseOptimizer
+
+        mesh = jax.make_mesh((1,), ("data",))
+        table = ShardedHKVTable.create(
+            mesh,
+            HKVEmbedding(capacity=4 * 128, dim=3,
+                         optimizer=SparseOptimizer("sgd")),
+        )
+        table = _protocol_roundtrip(table)
+        # the sharded extras: admission-controlled find_or_insert
+        r = table.find_or_insert(np.arange(1, 65, dtype=np.uint64))
+        assert bool(np.asarray(r.found).all())  # all present from the insert

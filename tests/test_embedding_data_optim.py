@@ -56,26 +56,22 @@ class TestHKVEmbedding:
 
     def test_padding_tokens_ignored(self):
         emb = self._emb()
-        state = emb.create()
+        table = emb.create()
         toks = jnp.asarray([[3, -1, 4]], jnp.int32)
-        state, rows = emb.lookup_train(state, toks)
-        from repro.core import ops as hkv_ops
-
-        assert int(hkv_ops.size(state)) == 2
+        table, rows = emb.lookup_train(table, toks)
+        assert int(table.size()) == 2
 
     def test_continuous_ingestion_stays_full(self):
         emb = self._emb(capacity=2 * 128, dim=4)
-        state = emb.create()
-        from repro.core import ops as hkv_ops
-
+        table = emb.create()
         for step in range(8):
             toks = jnp.asarray(
                 np.random.default_rng(step).integers(0, 10**9, size=(1, 128)), jnp.int32
             )
-            state, _ = emb.lookup_train(state, toks)
-        assert float(hkv_ops.load_factor(state)) == 1.0
+            table, _ = emb.lookup_train(table, toks)
+        assert float(table.load_factor()) == 1.0
         # next batch still resolves in place
-        state, rows = emb.lookup_train(state, toks + 1)
+        table, rows = emb.lookup_train(table, toks + 1)
         assert np.isfinite(np.asarray(rows)).all()
 
 

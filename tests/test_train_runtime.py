@@ -104,10 +104,14 @@ class TestDriver:
 
 def test_end_to_end_smoke_training_dense():
     """A few steps of the real launcher path on a reduced arch: loss drops."""
+    import shutil
     import sys
 
     from repro.launch import train as train_mod
 
+    # hermetic: a stale checkpoint from a previous session would otherwise
+    # be restored on any mid-run failure
+    shutil.rmtree("/tmp/repro_ckpt_test", ignore_errors=True)
     argv = sys.argv
     sys.argv = [
         "train", "--arch", "qwen2-0.5b", "--smoke", "--steps", "8",
@@ -122,14 +126,26 @@ def test_end_to_end_smoke_training_dense():
 
 
 def test_end_to_end_smoke_training_hkv():
-    """The paper-technique path: HKV dynamic embedding backend end to end."""
+    """The paper-technique path: HKV dynamic embedding backend end to end.
+
+    Assertion note: each step's loss is measured on a DIFFERENT batch of
+    the Zipf stream, and per-batch difficulty varies by ~±0.3 nats at this
+    scale — with both learning rates zeroed the endpoint-vs-endpoint
+    comparison still swings either way, so `loss[-1] < loss[0]` over 6
+    steps asserted batch noise, not learning (same-batch replay descends
+    6.39 -> 3.8 over 8 steps, and per-step losses beat a frozen-table run
+    from step 3 on).  The deterministic form: 12 steps, first-4 vs last-4
+    means — a fixed-seed margin of ~0.18 nats.
+    """
+    import shutil
     import sys
 
     from repro.launch import train as train_mod
 
+    shutil.rmtree("/tmp/repro_ckpt_test_hkv", ignore_errors=True)
     argv = sys.argv
     sys.argv = [
-        "train", "--arch", "qwen2-0.5b", "--smoke", "--steps", "6",
+        "train", "--arch", "qwen2-0.5b", "--smoke", "--steps", "12",
         "--batch", "2", "--seq", "32", "--backend", "hkv",
         "--ckpt-dir", "/tmp/repro_ckpt_test_hkv",
     ]
@@ -137,5 +153,5 @@ def test_end_to_end_smoke_training_hkv():
         hist = train_mod.main()
     finally:
         sys.argv = argv
-    assert len(hist["loss"]) == 6
-    assert hist["loss"][-1] < hist["loss"][0]
+    assert len(hist["loss"]) == 12
+    assert np.mean(hist["loss"][-4:]) < np.mean(hist["loss"][:4])

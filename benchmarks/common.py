@@ -80,12 +80,47 @@ def fill_batches(keys: np.ndarray, batch: int = 4096):
 
 
 class Csv:
-    """name,us_per_call,derived printer (the benchmarks.run contract)."""
+    """name,us_per_call,derived printer (the benchmarks.run contract).
+
+    Rows are also RETAINED so `benchmarks.run` can emit a `BENCH_<exp>.json`
+    trajectory artifact (see `to_json`) — the CSV stdout stays byte-for-byte
+    what it always was."""
 
     def __init__(self, title: str):
+        self.title = title
+        self.rows: list[dict] = []
         print(f"# === {title} ===")
         print("name,us_per_call,derived")
 
-    def row(self, name: str, seconds: float | None, derived: str):
+    def row(self, name: str, seconds: float | None, derived: str,
+            kv_s: float | None = None):
         us = "" if seconds is None else f"{seconds * 1e6:.1f}"
         print(f"{name},{us},{derived}")
+        self.rows.append({
+            "name": name,
+            "us_per_call": None if seconds is None else seconds * 1e6,
+            "derived": derived,
+            "kv_per_s": kv_s if kv_s is not None else _kv_s_of(derived),
+        })
+
+    def to_json(self, experiment: str, *, commit: str, timestamp: str) -> dict:
+        """The stable trajectory schema (`bench-trajectory/v1`): one object
+        per experiment run, identifying (commit, timestamp) passed IN by the
+        driver — this function never reads a clock — plus per-variant rows
+        with the numeric KV/s where the row reports one."""
+        return {
+            "schema": "bench-trajectory/v1",
+            "experiment": experiment,
+            "title": self.title,
+            "commit": commit,
+            "timestamp": timestamp,
+            "rows": self.rows,
+        }
+
+
+def _kv_s_of(derived: str) -> float | None:
+    """Parse the conventional '<x>M-KV/s' marker out of a derived string."""
+    import re
+
+    m = re.search(r"([0-9.]+)M-KV/s", derived)
+    return float(m.group(1)) * 1e6 if m else None

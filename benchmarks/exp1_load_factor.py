@@ -113,6 +113,7 @@ def run(csv: Csv | None = None):
     }
     for name, table in tables.items():
         bench_table(csv, name, table, rng)
+    return csv
 
 
 if __name__ == "__main__":

@@ -107,6 +107,7 @@ def run(csv: Csv | None = None, backend: str = "jnp"):
     csv.row("find_ptr/cfgD(dim=64,hmem)/lf=1.0", tpd,
             f"{kv_per_s(BATCH, tpd)/1e6:.2f}M-KV/s,key-side-only"
             f"[paper:96% of pure-HBM]")
+    return csv
 
 
 if __name__ == "__main__":

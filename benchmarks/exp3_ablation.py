@@ -184,6 +184,7 @@ def run(csv: Csv | None = None):
                 f"{kv_per_s(n3f, t)/1e6:.2f}M-KV/s[{mode}]")
     agree = np.array_equal(results["jnp"][1], results["kernel"][1])
     csv.row("3f/upsert_backend/status_parity", None, f"bit_identical={agree}")
+    return csv
 
 
 if __name__ == "__main__":

@@ -120,6 +120,7 @@ def run(csv: Csv | None = None):
         csv.row(f"4/{tag}/insert_lf1.0", ti, f"{kv_per_s(BATCH, ti)/1e6:.2f}M-KV/s")
     csv.row("4/dual_vs_single/insert_ratio", None,
             f"{res['single'][1]/res['dual'][1]:.2f}x[paper:1.64x@lf1.0]")
+    return csv
 
 
 if __name__ == "__main__":

@@ -1,0 +1,123 @@
+"""Exp#5: the tier hierarchy (DESIGN.md §2.5) — hit rate and throughput
+vs hot-tier fraction under zipfian traffic.
+
+The claim under test (the tentpole's acceptance bar): a `TieredHKVTable`
+whose HOT capacity is smaller than the working set sustains a measurably
+higher hit rate than a single HKV table of the SAME hot capacity, because
+demotion parks the tail in the cold tier and miss-path promotion pulls
+re-accessed keys back up — while a flat table of that size can only evict
+the tail out of existence.  A flat table at the COLD capacity is also run
+as the "what if it all fit in HBM" reference line (the tiered tables hold
+hot+cold slots, so it is a comparison point, not a strict bound).
+
+Replay: a fixed zipfian key stream (`repro.data.zipf_keys`, hot keys
+scattered by fmix64) drives `find_or_insert` on every table; the hit rate
+is the `found` fraction over the second half of the replay (the first half
+warms the tiers).  Conservation is tracked from the tiered results'
+counters: pairs leave the hierarchy only at the cold tier's boundary and
+are counted in `dropped`.
+
+    PYTHONPATH=src python -m benchmarks.exp5_tiered            # full sweep
+    PYTHONPATH=src python -m benchmarks.exp5_tiered --smoke    # CI smoke
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, kv_per_s, time_fn
+from repro.core import HKVTable, TieredHKVTable, U64, u64
+from repro.data import zipf_keys
+
+DIM = 16
+ALPHA = 1.05           # zipfian skew: hot head + heavy tail
+FULL = dict(cold_capacity=32 * 128, batch=1024, steps=32, fracs=(0.125, 0.25, 0.5))
+SMOKE = dict(cold_capacity=8 * 128, batch=256, steps=10, fracs=(0.25,))
+
+
+def _replay(table, key_stream, batch, steps):
+    """Drive `find_or_insert` over the stream; returns (table, per-step hit
+    rates, total dropped) — dropped is 0 for tables without the counter."""
+    ins = jax.jit(
+        lambda t, kh, kl, v: _step(t, U64(kh, kl), v))
+    zeros = jnp.zeros((batch, DIM), jnp.float32)
+    hits, dropped = [], 0
+    for i in range(steps):
+        kb = u64.from_uint64(key_stream[i * batch : (i + 1) * batch])
+        table, found, drop = ins(table, kb.hi, kb.lo, zeros)
+        hits.append(float(np.asarray(found).mean()))
+        dropped += int(drop)
+    return table, hits, dropped
+
+
+def _step(t, k, v):
+    r = t.find_or_insert(k, v)
+    drop = getattr(r, "dropped", jnp.zeros((), jnp.int32))
+    return r.table, r.found, drop
+
+
+def run(csv: Csv | None = None, smoke: bool = False) -> Csv:
+    p = SMOKE if smoke else FULL
+    cold_cap, batch, steps = p["cold_capacity"], p["batch"], p["steps"]
+    tag = " [smoke]" if smoke else ""
+    csv = csv or Csv(f"Exp#5 tier hierarchy: hit rate & throughput vs "
+                     f"hot fraction (zipf α={ALPHA}){tag}")
+    rng = np.random.default_rng(42)
+    # working set ~2x the cold capacity: nothing fits entirely anywhere
+    stream = zipf_keys(rng, batch * steps, ALPHA, 2 * cold_cap)
+    half = steps // 2
+
+    def hit_rate(hits):
+        return float(np.mean(hits[half:]))
+
+    # flat reference at the COLD capacity — the "what if the whole cold
+    # tier fit in HBM" comparison point (the tiered tables below hold
+    # hot+cold slots, so this is a reference line, not a strict bound)
+    ref = HKVTable.create(capacity=cold_cap, dim=DIM)
+    ref, ref_hits, _ = _replay(ref, stream, batch, steps)
+    csv.row(f"single(cap={cold_cap})/hit_rate", None,
+            f"{hit_rate(ref_hits)*100:.1f}%,flat-reference-at-cold-capacity")
+
+    for frac in p["fracs"]:
+        hot_cap = max(128, int(cold_cap * frac) // 128 * 128)
+        tiered = TieredHKVTable.create(
+            hot_capacity=hot_cap, cold_capacity=cold_cap, dim=DIM)
+        single = HKVTable.create(capacity=hot_cap, dim=DIM)
+
+        tiered, t_hits, t_drop = _replay(tiered, stream, batch, steps)
+        single, s_hits, _ = _replay(single, stream, batch, steps)
+        thr, shr = hit_rate(t_hits), hit_rate(s_hits)
+        csv.row(f"tiered(hot={hot_cap},f={frac})/hit_rate", None,
+                f"{thr*100:.1f}%,dropped={t_drop}")
+        csv.row(f"single(cap={hot_cap})/hit_rate", None,
+                f"{shr*100:.1f}%,same-hot-capacity")
+        csv.row(f"tiered(f={frac})/hit_rate_uplift", None,
+                f"+{(thr-shr)*100:.1f}pp,vs-same-hot-capacity")
+
+        # residency + conservation view (exact accounting is pinned in
+        # tests/test_tiered.py; this row makes drops visible in the data)
+        csv.row(f"tiered(f={frac})/residency", None,
+                f"hot={int(tiered.hot.size())},cold={int(tiered.cold.size())},"
+                f"distinct={int(tiered.size())}")
+
+        # steady-state throughput of the training op on the warmed tables
+        kb = u64.from_uint64(stream[:batch])
+        zeros = jnp.zeros((batch, DIM), jnp.float32)
+        for name, tbl in (("tiered", tiered), ("single", single)):
+            fn = jax.jit(lambda t, kh, kl, v: _step(t, U64(kh, kl), v))
+            sec = time_fn(fn, tbl, kb.hi, kb.lo, zeros)
+            csv.row(f"{name}(f={frac})/find_or_insert", sec,
+                    f"{kv_per_s(batch, sec)/1e6:.2f}M-KV/s",
+                    kv_s=kv_per_s(batch, sec))
+    return csv
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for the CI artifact run")
+    run(smoke=ap.parse_args().smoke)

@@ -3,58 +3,117 @@
   PYTHONPATH=src python -m benchmarks.run                   # all experiments
   PYTHONPATH=src python -m benchmarks.run exp1 exp4         # subset
   PYTHONPATH=src python -m benchmarks.run exp2 --backend kernel
+  PYTHONPATH=src python -m benchmarks.run exp5 --smoke \
+      --json-out runs/bench --timestamp 2026-07-26T00:00:00Z
 
-Output: `name,us_per_call,derived` CSV blocks per experiment.  Roofline
-rows appear when dry-run artifacts exist under runs/dryrun/.  --backend
-selects the inserter-op implementation for exp2 (DESIGN.md §4).
+Output: `name,us_per_call,derived` CSV blocks per experiment on stdout.
+Roofline rows appear when dry-run artifacts exist under runs/dryrun/.
+--backend selects the inserter-op implementation for exp2 (DESIGN.md §4).
+
+Trajectory artifacts: with `--json-out DIR`, each experiment additionally
+writes `DIR/BENCH_<exp>.json` in the stable `bench-trajectory/v1` schema —
+{schema, experiment, title, commit, timestamp, rows[{name, us_per_call,
+derived, kv_per_s}]} — so successive CI runs accumulate a comparable perf
+trajectory.  The timestamp is PASSED IN (the driver owns the clock; runs
+are reproducible byte-for-byte given the same tree), and the commit is
+taken from $BENCH_COMMIT or `git rev-parse HEAD`.
 """
 
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import sys
+
+
+def _commit() -> str:
+    c = os.environ.get("BENCH_COMMIT")
+    if c:
+        return c
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            check=True,
+        ).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def _pop_flag(args: list, flag: str, *, takes_value: bool = True):
+    if flag not in args:
+        return None if takes_value else False
+    i = args.index(flag)
+    if not takes_value:
+        del args[i]
+        return True
+    if i + 1 >= len(args):
+        sys.exit(f"error: {flag} requires a value")
+    v = args[i + 1]
+    del args[i : i + 2]
+    return v
 
 
 def main() -> None:
     args = sys.argv[1:]
-    backend = "jnp"
-    if "--backend" in args:
-        i = args.index("--backend")
-        if i + 1 >= len(args) or args[i + 1] not in ("auto", "jnp", "kernel"):
-            sys.exit("error: --backend requires one of auto|jnp|kernel")
-        backend = args[i + 1]
-        del args[i : i + 2]
-    known = {"exp1", "exp2", "exp3", "exp4", "roofline"}
+    backend = _pop_flag(args, "--backend") or "jnp"
+    if backend not in ("auto", "jnp", "kernel"):
+        sys.exit("error: --backend requires one of auto|jnp|kernel")
+    json_out = _pop_flag(args, "--json-out")
+    timestamp = _pop_flag(args, "--timestamp")
+    smoke = _pop_flag(args, "--smoke", takes_value=False)
+    if json_out and not timestamp:
+        sys.exit("error: --json-out requires --timestamp (the driver passes "
+                 "the clock in; artifacts never read one)")
+    known = {"exp1", "exp2", "exp3", "exp4", "exp5", "roofline"}
     bad = [a for a in args if a not in known]
     if bad:
         sys.exit(f"error: unknown argument(s) {bad}; experiments: {sorted(known)}, "
-                 "options: --backend auto|jnp|kernel")
+                 "options: --backend auto|jnp|kernel --smoke "
+                 "--json-out DIR --timestamp TS")
     if backend != "jnp" and args and "exp2" not in args:
         sys.exit("error: --backend only applies to exp2; add exp2 to the "
                  "selection or drop the flag")
+    if smoke and args and "exp5" not in args:
+        sys.exit("error: --smoke only applies to exp5; add exp5 to the "
+                 "selection or drop the flag")
     sel = set(args)
+    commit = _commit() if json_out else ""
 
     def want(name):
         return not sel or name in sel
 
+    def emit(name, csv):
+        if not json_out or csv is None:
+            return
+        os.makedirs(json_out, exist_ok=True)
+        path = os.path.join(json_out, f"BENCH_{name}.json")
+        with open(path, "w") as f:
+            json.dump(csv.to_json(name, commit=commit, timestamp=timestamp),
+                      f, indent=1)
+        print(f"# wrote {path}")
+
     if want("exp1"):
         from benchmarks import exp1_load_factor
 
-        exp1_load_factor.run()
+        emit("exp1", exp1_load_factor.run())
     if want("exp2"):
         from benchmarks import exp2_throughput
 
-        exp2_throughput.run(backend=backend)
+        emit("exp2", exp2_throughput.run(backend=backend))
     if want("exp3"):
         from benchmarks import exp3_ablation
 
-        exp3_ablation.run()
+        emit("exp3", exp3_ablation.run())
     if want("exp4"):
         from benchmarks import exp4_dual_bucket
 
-        exp4_dual_bucket.run()
-    if want("roofline"):
-        import os
+        emit("exp4", exp4_dual_bucket.run())
+    if want("exp5"):
+        from benchmarks import exp5_tiered
 
+        emit("exp5", exp5_tiered.run(smoke=bool(smoke)))
+    if want("roofline"):
         from benchmarks import roofline
 
         if os.path.isdir("runs/dryrun/single"):

@@ -5,14 +5,15 @@
 Walks the paper's core semantics end to end on CPU through the public
 `HKVTable` handle: batched upsert with in-place eviction at load factor
 1.0, digest-accelerated lookup, scoring policies, admission control,
-dual-bucket retention, the updater role, and a fused op session.
+dual-bucket retention, the updater role, a fused op session, and the
+two-tier hierarchy (capacity beyond HBM, DESIGN.md §2.5).
 This file is the executable version of the README quickstart.
 """
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import HKVTable, U64
+from repro.core import HKVTable, TieredHKVTable, U64
 
 
 def main():
@@ -73,6 +74,28 @@ def main():
     )
     print(f"admission control: low-score burst -> "
           f"{int((np.asarray(low.status) == 4).sum())}/128 rejected (Table 9)")
+
+    # --- capacity beyond HBM: the two-tier hierarchy (§3.6 / DESIGN §2.5) ----
+    # A small HBM hot tier in front of a large host-capacity cold tier:
+    # hot-tier evictions DEMOTE (with their values) instead of vanishing,
+    # and re-accessed cold keys PROMOTE back up on the miss path.
+    tiered = TieredHKVTable.create(
+        hot_capacity=2 * 128, cold_capacity=32 * 128, dim=8)
+    early = np.arange(1, 257, dtype=np.uint64)
+    tiered = tiered.insert_or_assign(early, jnp.full((256, 8), 5.0)).table
+    # churn the hot tier with 4x its capacity of fresh keys
+    for i in range(4):
+        churn = np.arange(10_000 + 256 * i, 10_256 + 256 * i, dtype=np.uint64)
+        r = tiered.insert_or_assign(churn, jnp.zeros((256, 8)))
+        tiered = r.table
+    out = tiered.find(early)               # cold hits -> promoted on access
+    tiered = out.table                     # keep the successor handle
+    print(f"tiered: {int(out.found.sum())}/256 early keys survived a 4x "
+          f"hot-capacity churn (hot hits: {int(out.hot_hit.sum())}, "
+          f"promoted back: {int(out.promoted)}, demoted victims: "
+          f"{int(out.demoted)}, lost: {int(out.dropped)})")
+    assert bool(np.asarray(out.found).all())
+    assert bool(np.allclose(np.asarray(out.values), 5.0))
     print("ok.")
 
 

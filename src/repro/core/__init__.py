@@ -19,5 +19,14 @@ from repro.core.api import (  # noqa: F401
     dedupe_keys,
     normalize_keys,
 )
+from repro.core.merge import EvictionStream  # noqa: F401
 from repro.core.table import HKVConfig, HKVState  # noqa: F401
+from repro.core.tiered import (  # noqa: F401
+    TieredFind,
+    TieredFindOrInsert,
+    TieredHKVTable,
+    TieredState,
+    TieredUpsert,
+    translate_scores,
+)
 from repro.core.u64 import U64  # noqa: F401

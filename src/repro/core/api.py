@@ -140,12 +140,7 @@ class TableUpsert(NamedTuple):
 class TableInsertAndEvict(NamedTuple):
     table: "HKVTable"
     status: jax.Array
-    evicted_key_hi: jax.Array
-    evicted_key_lo: jax.Array
-    evicted_values: jax.Array
-    evicted_score_hi: jax.Array
-    evicted_score_lo: jax.Array
-    evicted_mask: jax.Array
+    evicted: "ops_mod.EvictionStream"   # the in-launch eviction hand-off
 
 
 class TableFindOrInsert(NamedTuple):
@@ -153,6 +148,7 @@ class TableFindOrInsert(NamedTuple):
     values: jax.Array
     found: jax.Array
     status: jax.Array
+    evicted: "ops_mod.EvictionStream"   # populated iff return_evicted
 
 
 # =============================================================================
@@ -329,18 +325,21 @@ class HKVTable:
             self.state, self.cfg, normalize_keys(keys), values,
             custom_scores=_opt_keys(custom_scores), backend=self.backend,
         )
-        return TableInsertAndEvict(self.with_state(res.state), *res[1:])
+        return TableInsertAndEvict(table=self.with_state(res.state),
+                                   status=res.status, evicted=res.evicted)
 
     def find_or_insert(self, keys: Any, init_values: jax.Array,
                        custom_scores: Optional[Any] = None,
+                       return_evicted: bool = False,
                        ) -> TableFindOrInsert:
         res = ops_mod.find_or_insert(
             self.state, self.cfg, normalize_keys(keys), init_values,
             custom_scores=_opt_keys(custom_scores), backend=self.backend,
+            return_evicted=return_evicted,
         )
         return TableFindOrInsert(table=self.with_state(res.state),
                                  values=res.values, found=res.found,
-                                 status=res.status)
+                                 status=res.status, evicted=res.evicted)
 
     def ingest(self, keys: Any, init_values: jax.Array,
                custom_scores: Optional[Any] = None) -> TableUpsert:

@@ -103,16 +103,70 @@ class UpsertStages(NamedTuple):
     scatter_values: object
 
 
+class EvictionStream(NamedTuple):
+    """Displaced `(key, value, score)` pairs of one structural op — the
+    paper's in-launch eviction hand-off (§3.6) as a first-class typed
+    result.  This is the transport contract the tier hierarchy rides on
+    (`core/tiered.py`): a hot-tier upsert's stream upserts into the cold
+    tier (demotion), a promotion's displaced victims cascade back down.
+
+    All arrays share the batch length N and align POSITIONALLY with the
+    op's input batch: lane i carries the pair displaced by input key i
+    (mask False = lane displaced nothing; its key/value/score lanes are
+    zeros, NOT the EMPTY sentinel — mask before reusing them as keys,
+    e.g. via `masked_keys()`)."""
+
+    key_hi: jax.Array    # uint32 [N]
+    key_lo: jax.Array    # uint32 [N]
+    values: jax.Array    # vdtype [N, Dtot] full-width rows (incl. aux cols)
+    score_hi: jax.Array  # uint32 [N]
+    score_lo: jax.Array  # uint32 [N]
+    mask: jax.Array      # bool [N] — lane carries a displaced pair
+
+    @property
+    def keys(self) -> U64:
+        return U64(self.key_hi, self.key_lo)
+
+    @property
+    def scores(self) -> U64:
+        return U64(self.score_hi, self.score_lo)
+
+    def masked_keys(self) -> U64:
+        """Keys with non-displacing lanes set to the EMPTY sentinel — the
+        form a downstream table op ingests directly (EMPTY lanes are
+        ignored by every op; raw zero lanes would be a VALID key 0)."""
+        return U64(
+            jnp.where(self.mask, self.key_hi, jnp.uint32(u64.EMPTY_HI)),
+            jnp.where(self.mask, self.key_lo, jnp.uint32(u64.EMPTY_LO)),
+        )
+
+    def count(self) -> jax.Array:
+        return jnp.sum(self.mask.astype(jnp.int32))
+
+    @classmethod
+    def zero(cls, n: int, vdim: int, vdtype) -> "EvictionStream":
+        """A stream of n lanes displacing nothing (n=0: the placeholder
+        returned when the caller did not request the eviction hand-off)."""
+        z = jnp.zeros((n,), jnp.uint32)
+        return cls(
+            key_hi=z, key_lo=z,
+            values=jnp.zeros((n, vdim), vdtype),
+            score_hi=z, score_lo=z,
+            mask=jnp.zeros((n,), bool),
+        )
+
+
 class MergeResult(NamedTuple):
     state: HKVState
     status: jax.Array            # int8 [N] in original batch order
-    # Populated iff return_evicted (else zero-shaped placeholders of same N):
-    evicted_key_hi: jax.Array    # uint32 [N]
-    evicted_key_lo: jax.Array    # uint32 [N]
-    evicted_values: jax.Array    # vdtype [N, D]
-    evicted_score_hi: jax.Array  # uint32 [N]
-    evicted_score_lo: jax.Array  # uint32 [N]
-    evicted_mask: jax.Array      # bool [N]
+    # The eviction hand-off: lanes populated iff return_evicted (else the
+    # zero-length EvictionStream placeholder).
+    evicted: EvictionStream
+    # Post-op key locations (batch order), produced as a byproduct of the
+    # closure so callers like find_or_insert need NO extra probe passes:
+    found: jax.Array             # bool [N] — key existed BEFORE this op
+    loc: find_mod.Locate         # where each key lives AFTER this op
+                                 # (loc.found = present now: hit or admitted)
 
 
 def _dedupe_sort(keys: U64):
@@ -283,6 +337,7 @@ def upsert(
     insert_values: Optional[jax.Array] = None,
     return_evicted: bool = False,
     stages: Optional[UpsertStages] = None,
+    loc: Optional[find_mod.Locate] = None,
 ) -> MergeResult:
     """The batch closure of insert_or_assign / find_or_insert / insert_and_evict.
 
@@ -290,6 +345,13 @@ def upsert(
                     and inserted on miss (unless insert_values overrides).
     insert_values : optional distinct rows for the insertion path
                     (find_or_insert: hits keep their value, misses get inits).
+    loc           : optional precomputed locate of `keys` (BATCH order)
+                    against this state's key planes — the PR-2 probe-sharing
+                    seam: when a caller just probed the same batch (e.g. the
+                    tier hierarchy's pre-pass), the closure permutes it into
+                    its sorted space instead of issuing its own locate.
+                    Locate output depends only on the key plane, so the
+                    substitution is exact.
     """
     n = keys.hi.shape[0]
     b, s = cfg.num_buckets, cfg.slots_per_bucket
@@ -315,7 +377,20 @@ def upsert(
 
     # ---- phase 1: hits (non-structural updater work) ------------------------
     probe_s = find_mod.probe_keys(cfg, keys_s)
-    loc = stages.locate(state, cfg, keys_s, probe_s)
+    if loc is None:
+        loc = stages.locate(state, cfg, keys_s, probe_s)
+    else:
+        # caller-provided batch-order locate -> sorted space.  EMPTY lanes
+        # are force-missed (a caller may pass a probe of the unmasked batch;
+        # every use of `loc` below is already rep_mask/valid-gated, but the
+        # mask keeps the permuted Locate self-consistent).
+        valid_s = ~u64.is_empty(keys_s)
+        loc = find_mod.Locate(
+            found=loc.found[idx_s] & valid_s,
+            bucket=loc.bucket[idx_s],
+            slot=loc.slot[idx_s],
+            row=loc.row[idx_s],
+        )
     hit = loc.found & rep_mask
 
     old_sc = U64(state.score_hi[loc.bucket, loc.slot], state.score_lo[loc.bucket, loc.slot])
@@ -406,30 +481,56 @@ def upsert(
     # map group status back to original batch order (duplicates share status)
     status = jnp.zeros((n,), jnp.int8).at[idx_s].set(status_g[gid])
 
+    # ---- post-op locations (batch order) ------------------------------------
+    # The closure already knows where every key ended up: hits stayed at
+    # their located (bucket, slot); admitted misses took their paired
+    # victim's slot in the target bucket.  Publishing this kills the
+    # pre/post re-probe passes in find_or_insert (one probe total).
+    # A group is either a hit or a miss, so the two scatters are disjoint.
+    #
+    # One subtlety: a HIT can lose its slot within the same batch — an
+    # admitted miss whose init score beats the hit's just-updated score
+    # (reachable under LFU-family/custom policies, never under monotone
+    # LRU clocks) claims it as a victim.  The published location must
+    # then report the key as GONE, exactly like the old post-insert
+    # re-probe did: check the final key plane at the hit's position.
+    pos_b = jnp.zeros((n,), jnp.int32)
+    pos_s = jnp.zeros((n,), jnp.int32)
+    pos_in = jnp.zeros((n,), bool)
+    hit_live = hit & (state.key_hi[loc.bucket, loc.slot] == keys_s.hi) & (
+        state.key_lo[loc.bucket, loc.slot] == keys_s.lo)
+    hg = jnp.where(hit_live, gid, n)
+    pos_b = pos_b.at[hg].set(loc.bucket, mode="drop")
+    pos_s = pos_s.at[hg].set(loc.slot, mode="drop")
+    pos_in = pos_in.at[hg].set(True, mode="drop")
+    ag = jnp.where(admitted, gid_m, n)
+    pos_b = pos_b.at[ag].set(bkt_m, mode="drop")
+    pos_s = pos_s.at[ag].set(victim_slot, mode="drop")
+    pos_in = pos_in.at[ag].set(True, mode="drop")
+    # sorted-space per-group results -> original batch order (dups share)
+    to_batch = lambda a: jnp.zeros((n,), a.dtype).at[idx_s].set(a[gid])
+    post_loc = find_mod.Locate(
+        found=to_batch(pos_in),
+        bucket=to_batch(pos_b),
+        slot=to_batch(pos_s),
+        row=to_batch(pos_b * s + pos_s),
+    )
+    pre_found = jnp.zeros((n,), bool).at[idx_s].set(loc.found)
+
     if return_evicted:
         zero32 = jnp.zeros((n,), jnp.uint32)
         oe = jnp.where(evicts, idx_m, n)  # original position of the evictor
-        ev = MergeResult(
-            state=state,
-            status=status,
-            evicted_key_hi=zero32.at[oe].set(victim_key.hi, mode="drop"),
-            evicted_key_lo=zero32.at[oe].set(victim_key.lo, mode="drop"),
-            evicted_values=jnp.zeros((n, vdim), state.values.dtype)
+        stream = EvictionStream(
+            key_hi=zero32.at[oe].set(victim_key.hi, mode="drop"),
+            key_lo=zero32.at[oe].set(victim_key.lo, mode="drop"),
+            values=jnp.zeros((n, vdim), state.values.dtype)
             .at[oe]
             .set(ev_values, mode="drop"),
-            evicted_score_hi=zero32.at[oe].set(victim_sc.hi, mode="drop"),
-            evicted_score_lo=zero32.at[oe].set(victim_sc.lo, mode="drop"),
-            evicted_mask=jnp.zeros((n,), bool).at[oe].set(evicts, mode="drop"),
+            score_hi=zero32.at[oe].set(victim_sc.hi, mode="drop"),
+            score_lo=zero32.at[oe].set(victim_sc.lo, mode="drop"),
+            mask=jnp.zeros((n,), bool).at[oe].set(evicts, mode="drop"),
         )
-        return ev
-    zero32 = jnp.zeros((0,), jnp.uint32)
-    return MergeResult(
-        state=state,
-        status=status,
-        evicted_key_hi=zero32,
-        evicted_key_lo=zero32,
-        evicted_values=jnp.zeros((0, vdim), state.values.dtype),
-        evicted_score_hi=zero32,
-        evicted_score_lo=zero32,
-        evicted_mask=jnp.zeros((0,), bool),
-    )
+    else:
+        stream = EvictionStream.zero(0, vdim, state.values.dtype)
+    return MergeResult(state=state, status=status, evicted=stream,
+                       found=pre_found, loc=post_loc)

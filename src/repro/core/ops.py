@@ -63,6 +63,7 @@ from repro.core.merge import (
     STATUS_INVALID,
     STATUS_REJECTED,
     STATUS_UPDATED,
+    EvictionStream,
     MergeResult,
 )
 from repro.core.table import HKVConfig, HKVState
@@ -116,6 +117,8 @@ class FindRowsResult(NamedTuple):
     rows: jax.Array     # [N, dim + aux] full-width table rows (zeros on miss)
     found: jax.Array    # bool [N]
     row: jax.Array      # int32 [N] value-plane row index (position addressing)
+    score_hi: jax.Array  # uint32 [N] entry scores (0 where not found) — the
+    score_lo: jax.Array  # tier hierarchy translates these on promotion
 
 
 def find_rows(state: HKVState, cfg: HKVConfig, keys: U64,
@@ -125,11 +128,16 @@ def find_rows(state: HKVState, cfg: HKVConfig, keys: U64,
     The sparse-optimizer path: gathers the entire stored row so slot state
     colocated with the embedding travels with it.  Missing keys return
     zero rows — callers must mask by `found` (the usual consumer, a
-    row-refresh via `assign`, drops misses anyway)."""
+    row-refresh via `assign`, drops misses anyway).  Scores ride along so
+    a promotion (`core/tiered.py`) can move an entry between tiers without
+    a second metadata probe."""
     if loc is None:
         loc = find_mod.locate(state, cfg, keys)
     rows = find_mod.gather_values(state, loc, None, cfg.value_tier)
-    return FindRowsResult(rows=rows, found=loc.found, row=loc.row)
+    shi = jnp.where(loc.found, state.score_hi[loc.bucket, loc.slot], 0)
+    slo = jnp.where(loc.found, state.score_lo[loc.bucket, loc.slot], 0)
+    return FindRowsResult(rows=rows, found=loc.found, row=loc.row,
+                          score_hi=shi, score_lo=slo)
 
 
 def size(state: HKVState) -> jax.Array:
@@ -341,12 +349,7 @@ def insert_or_assign(
 class InsertAndEvictResult(NamedTuple):
     state: HKVState
     status: jax.Array
-    evicted_key_hi: jax.Array
-    evicted_key_lo: jax.Array
-    evicted_values: jax.Array
-    evicted_score_hi: jax.Array
-    evicted_score_lo: jax.Array
-    evicted_mask: jax.Array
+    evicted: EvictionStream   # positionally aligned with the input batch
 
 
 def insert_and_evict(
@@ -357,10 +360,14 @@ def insert_and_evict(
     custom_scores: Optional[U64] = None,
     *,
     backend: str = "auto",
+    loc: Optional[find_mod.Locate] = None,
 ) -> InsertAndEvictResult:
     """Inserter. insert_or_assign that returns the displaced entries in the
-    same launch (the paper's single-kernel eviction hand-off — used to spill
-    evictions to a colder tier or a parameter server)."""
+    same launch as a typed `EvictionStream` (the paper's single-kernel
+    eviction hand-off — the transport the tier hierarchy's demotion cascade
+    rides on; see `core/tiered.py`).  `loc` is the probe-sharing seam: a
+    caller that just located the same batch passes it through to the
+    closure (see `merge.upsert`)."""
     res = merge_mod.upsert(
         state,
         cfg,
@@ -369,17 +376,10 @@ def insert_and_evict(
         custom_scores=custom_scores,
         return_evicted=True,
         stages=_upsert_stages(backend, cfg),
+        loc=loc,
     )
-    return InsertAndEvictResult(
-        state=res.state,
-        status=res.status,
-        evicted_key_hi=res.evicted_key_hi,
-        evicted_key_lo=res.evicted_key_lo,
-        evicted_values=res.evicted_values,
-        evicted_score_hi=res.evicted_score_hi,
-        evicted_score_lo=res.evicted_score_lo,
-        evicted_mask=res.evicted_mask,
-    )
+    return InsertAndEvictResult(state=res.state, status=res.status,
+                                evicted=res.evicted)
 
 
 class FindOrInsertResult(NamedTuple):
@@ -387,6 +387,10 @@ class FindOrInsertResult(NamedTuple):
     values: jax.Array   # [N, dim] — existing value on hit, init value on admit/reject
     found: jax.Array    # bool [N] — key existed before this call
     status: jax.Array
+    # Displaced pairs (lanes populated iff return_evicted; else the
+    # zero-length placeholder) — lets a cold-start admit double as the
+    # hot tier's demotion source in `core/tiered.py`.
+    evicted: EvictionStream
 
 
 def find_or_insert(
@@ -397,6 +401,8 @@ def find_or_insert(
     custom_scores: Optional[U64] = None,
     *,
     backend: str = "auto",
+    return_evicted: bool = False,
+    loc: Optional[find_mod.Locate] = None,
 ) -> FindOrInsertResult:
     """Inserter. Lookup; insert `init_values` for missing keys (cold-start).
 
@@ -405,17 +411,14 @@ def find_or_insert(
     now present; the caller's init row for keys whose admission was rejected
     (an *ephemeral* value — the paper returns the same from its workspace).
 
+    Probe cost: ONE probe pass (ZERO when the caller supplies `loc`).  The
+    closure publishes every key's post-op location (`MergeResult.loc`), so
+    the value readback is a position-addressed gather — no pre- or
+    post-locate (the seams that used to cost two extra passes; pinned by
+    tests/test_upsert_kernel.py).
+
     Consumer code: prefer `HKVTable.find_or_insert` (repro.core.api).
     """
-    if _resolve_backend(backend) == "kernel":
-        from repro.kernels import ops as kernel_ops
-
-        st, vals, found, status = kernel_ops.find_or_insert_kernel(
-            state, cfg, keys, _pad_aux(init_values, state),
-            custom_scores=custom_scores,
-        )
-        return FindOrInsertResult(state=st, values=vals, found=found, status=status)
-    pre = find_mod.locate(state, cfg, keys)
     res = merge_mod.upsert(
         state,
         cfg,
@@ -423,11 +426,27 @@ def find_or_insert(
         _pad_aux(init_values, state),
         custom_scores=custom_scores,
         write_hit_values=False,
+        return_evicted=return_evicted,
+        stages=_upsert_stages(backend, cfg),
+        loc=loc,
     )
-    post = find_mod.locate(res.state, cfg, keys)
-    vals = find_mod.gather_values(res.state, post, cfg.dim, cfg.value_tier)
-    vals = jnp.where(post.found[:, None], vals, init_values[:, : cfg.dim])
-    return FindOrInsertResult(state=res.state, values=vals, found=pre.found, status=res.status)
+    vals = _gather_post(res, cfg, init_values, backend)
+    return FindOrInsertResult(state=res.state, values=vals, found=res.found,
+                              status=res.status, evicted=res.evicted)
+
+
+def _gather_post(res: MergeResult, cfg: HKVConfig, init_values: jax.Array,
+                 backend: str) -> jax.Array:
+    """Value readback at the closure-published post-op locations; rejected
+    keys fall back to the caller's init row (ephemeral)."""
+    if _resolve_backend(backend) == "kernel" and cfg.value_tier == "hbm":
+        from repro.kernels import ops as kernel_ops
+
+        vals = kernel_ops.gather_rows_kernel(res.state, res.loc, cfg.dim)
+    else:
+        vals = find_mod.gather_values(res.state, res.loc, cfg.dim,
+                                      cfg.value_tier)
+    return jnp.where(res.loc.found[:, None], vals, init_values[:, : cfg.dim])
 
 
 def accum_or_assign(
@@ -518,10 +537,16 @@ def clear(state: HKVState, cfg: HKVConfig) -> HKVState:
 # =============================================================================
 
 
-def _pad_aux(values: jax.Array, state: HKVState) -> jax.Array:
-    """Zero-pad caller rows up to the table's value width (aux optimizer cols)."""
-    vdim = state.values.shape[1]
+def pad_rows(values: jax.Array, plane: jax.Array) -> jax.Array:
+    """Zero-pad caller rows up to the value plane's width (aux optimizer
+    cols) — the ONE padding/dtype point every row-writing path shares
+    (flat ops here, the tier hierarchy in `core/tiered.py`)."""
+    vdim = plane.shape[1]
     if values.shape[1] == vdim:
-        return values.astype(state.values.dtype)
-    pad = jnp.zeros((values.shape[0], vdim - values.shape[1]), state.values.dtype)
-    return jnp.concatenate([values.astype(state.values.dtype), pad], axis=1)
+        return values.astype(plane.dtype)
+    pad = jnp.zeros((values.shape[0], vdim - values.shape[1]), plane.dtype)
+    return jnp.concatenate([values.astype(plane.dtype), pad], axis=1)
+
+
+def _pad_aux(values: jax.Array, state: HKVState) -> jax.Array:
+    return pad_rows(values, state.values)

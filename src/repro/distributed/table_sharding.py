@@ -46,6 +46,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import u64
 from repro.core.api import HKVTable, dedupe_keys, normalize_keys
+from repro.core.tiered import TieredHKVTable
 from repro.core.u64 import U64
 from repro.distributed.sharding import shard_map
 from repro.embedding.dynamic import HKVEmbedding
@@ -60,9 +61,14 @@ class ShardedHKVEmbedding:
     capacity_factor: float = 2.0
 
     def local_embedding(self, n_shards: int) -> HKVEmbedding:
-        local_cap = self.emb.capacity // n_shards
-        local_cap = max(128, (local_cap // 128) * 128)
-        return dataclasses.replace(self.emb, capacity=local_cap)
+        def shard_cap(c):
+            return max(128, (c // n_shards // 128) * 128)
+
+        return dataclasses.replace(
+            self.emb, capacity=shard_cap(self.emb.capacity),
+            hot_capacity=(shard_cap(self.emb.hot_capacity)
+                          if self.emb.is_tiered else None),
+        )
 
     # -- routing helpers (shard-local code, used under shard_map) -----------
 
@@ -101,9 +107,13 @@ class ShardedHKVEmbedding:
 
     # -- shard-local bodies ---------------------------------------------------
 
-    def _lookup_body(self, n_shards, cap, train, state, khi, klo):
+    def _lookup_body(self, n_shards, cap, train, state, khi, klo,
+                     promote=True):
         """Executes per shard under shard_map: khi/klo are the LOCAL tokens'
-        unique keys (padded with EMPTY).  Returns (state, rows, found, ovf)."""
+        unique keys (padded with EMPTY).  Returns (state, rows, found, ovf).
+
+        `promote=False` makes the read a PURE READER on tiered shards
+        (no miss-path re-admission — the membership-query path)."""
         axis = self.axis_names
         local = self.local_embedding(n_shards)
         keys = U64(khi, klo)
@@ -113,17 +123,24 @@ class ShardedHKVEmbedding:
         recv_lo = jax.lax.all_to_all(send_lo, axis, 0, 0, tiled=True)
         rk = U64(recv_hi.reshape(-1), recv_lo.reshape(-1))
         init = local.default_rows(rk)
-        # owner-side table op through the handle; the inserter backend
-        # follows the embedding config ('auto' -> fused Pallas on TPU)
-        t = HKVTable.wrap(state, local.config(), backend=self.emb.backend)
+        # owner-side table op through the handle — flat or tiered, the
+        # embedding's wrap() picks; the inserter backend follows the
+        # embedding config ('auto' -> fused Pallas on TPU)
+        t = local.wrap(state)
         if train:
             res = t.find_or_insert(rk, init)
             state, rows = res.table.state, res.values
-            present = res.found  # pre-existing (HKVTable.find_or_insert contract)
+            present = res.found  # pre-existing (find_or_insert contract)
         else:
-            fr = t.find(rk)
+            if isinstance(t, TieredHKVTable):
+                fr = t.find(rk, promote=promote)
+            else:
+                fr = t.find(rk)
             rows = jnp.where(fr.found[:, None], fr.values, init[:, : local.dim])
             present = fr.found
+            succ = getattr(fr, "table", None)  # tiered find promotes:
+            if succ is not None:               # thread the successor state
+                state = succ.state
         # return rows to requesters with the presence flag as one extra
         # column (exact in float: the flag is 0.0 or 1.0)
         rows = jnp.concatenate(
@@ -161,7 +178,7 @@ class ShardedHKVEmbedding:
         d = dedupe_keys(rk)
         g_sum = jax.ops.segment_sum(recv_g[d.idx_sorted], d.gid, num_segments=n)[d.gid]
         # fused read-modify-write: optimizer gather + assign share one locate
-        t = HKVTable.wrap(state, local.config(), backend=self.emb.backend)
+        t = local.wrap(state)
         s = t.session()
         s.update_rows(d.unique,
                       lambda rows: local.optimizer.apply(rows, g_sum, local.dim))
@@ -186,7 +203,7 @@ class ShardedHKVEmbedding:
         recv_v = jax.lax.all_to_all(vbuf.reshape(n_shards, cap, -1), axis, 0, 0,
                                     tiled=True).reshape(n_shards * cap, -1)
         rk = U64(recv_hi.reshape(-1), recv_lo.reshape(-1))
-        t = HKVTable.wrap(state, local.config(), backend=self.emb.backend)
+        t = local.wrap(state)
         res = t.insert_or_assign(rk, recv_v)
         sbuf = res.status.astype(jnp.int32).reshape(n_shards, cap)
         back = jax.lax.all_to_all(sbuf, axis, 0, 0, tiled=True).reshape(-1)
@@ -211,15 +228,16 @@ class ShardedHKVEmbedding:
         )()
 
     def state_specs(self):
-        from repro.core.table import HKVState
-
         ax = self.axis_names
-        # clocks/epoch are scalars advanced in LOCKSTEP (every shard executes
-        # the same op sequence) — replicated under shard_map, not sharded
-        return HKVState(
-            key_hi=P(ax, None), key_lo=P(ax, None), digests=P(ax, None),
-            score_hi=P(ax, None), score_lo=P(ax, None), values=P(ax, None),
-            clock_hi=P(), clock_lo=P(), epoch=P(),
+        # Derived from the state's own tree (works for flat HKVState AND
+        # the tiered two-state pytree): array leaves shard their leading
+        # (bucket/row) axis; scalar clocks/epoch are advanced in LOCKSTEP
+        # (every shard executes the same op sequence) — replicated under
+        # shard_map, not sharded.
+        shape = jax.eval_shape(lambda: self.local_embedding(1).create().state)
+        return jax.tree.map(
+            lambda a: P(ax, *([None] * (a.ndim - 1))) if a.ndim >= 1 else P(),
+            shape,
         )
 
     def _uniq(self, tokens):
@@ -255,7 +273,8 @@ class ShardedHKVEmbedding:
         state, rows, ovf = out
         return state, rows.reshape(tokens.shape + (self.emb.dim,)), jnp.sum(ovf)
 
-    def find_keys(self, mesh, state, keys: U64, *, train: bool = False):
+    def find_keys(self, mesh, state, keys: U64, *, train: bool = False,
+                  promote: bool = True):
         """Key-level lookup: keys U64 [N] (N divisible by the dp world size).
 
         Returns (state, values [N, dim], found [N], overflow).  Misses
@@ -269,7 +288,8 @@ class ShardedHKVEmbedding:
         def body(state, khi, klo):
             d = dedupe_keys(U64(khi, klo))
             state, rows, found, ovf = self._lookup_body(
-                n_shards, cap, train, state, d.unique.hi, d.unique.lo
+                n_shards, cap, train, state, d.unique.hi, d.unique.lo,
+                promote=promote,
             )
             rows_o = rows[d.inverse]
             found_o = found[d.inverse] & ~u64.is_empty(U64(khi, klo))
@@ -350,6 +370,11 @@ class ShardedFind(NamedTuple):
     values: jax.Array   # [N, dim] (zeros where not found)
     found: jax.Array    # bool [N]
     overflow: jax.Array  # int — keys that missed their routing budget
+    # Successor handle: identical to the queried table for flat shards;
+    # carries the promotion's effects when the shards are tiered (cold
+    # hits re-admitted hot-side — DESIGN.md §2.5).  Callers that treat
+    # find as a pure reader may ignore it.
+    table: "ShardedHKVTable" = None
 
 
 class ShardedUpsert(NamedTuple):
@@ -415,8 +440,10 @@ class ShardedHKVTable:
 
     @property
     def capacity(self) -> int:
-        # realized capacity: per-shard rounding times shard count
-        return self.semb.local_embedding(self.n_shards).capacity * self.n_shards
+        # realized capacity: per-shard rounding times shard count (both
+        # tiers' slots when the local tables are tiered)
+        local = self.semb.local_embedding(self.n_shards)
+        return local.total_capacity * self.n_shards
 
     @property
     def dim(self) -> int:
@@ -424,11 +451,18 @@ class ShardedHKVTable:
 
     # -- KVTable protocol ------------------------------------------------------
 
-    def find(self, keys) -> ShardedFind:
-        _state, values, found, ovf = self.semb.find_keys(
-            self.mesh, self.state, normalize_keys(keys), train=False
+    def find(self, keys, *, promote: bool = True) -> ShardedFind:
+        """Lookup.  On tiered shards the default runs the miss-path
+        promotion (keep `.table` to retain its effects); pass
+        `promote=False` for the pure-reader form — serve-style callers
+        that discard the successor handle should, or every lookup pays
+        two structural upserts per shard that are then thrown away."""
+        state, values, found, ovf = self.semb.find_keys(
+            self.mesh, self.state, normalize_keys(keys), train=False,
+            promote=promote,
         )
-        return ShardedFind(values=values, found=found, overflow=ovf)
+        return ShardedFind(values=values, found=found, overflow=ovf,
+                           table=self.with_state(state))
 
     def insert_or_assign(self, keys, values) -> ShardedUpsert:
         state, status, ovf = self.semb.upsert_keys(
@@ -448,15 +482,23 @@ class ShardedHKVTable:
                                    found=found, overflow=ovf)
 
     def contains(self, keys) -> jax.Array:
-        return self.find(keys).found
+        # pure reader: no miss-path promotion on tiered shards (a
+        # membership probe must not pay — or cause — structural motion)
+        _state, _values, found, _ovf = self.semb.find_keys(
+            self.mesh, self.state, normalize_keys(keys), train=False,
+            promote=False,
+        )
+        return found
 
     def size(self) -> jax.Array:
         specs = self.semb.state_specs()
         ax = self.semb.axis_names
+        local = self.semb.local_embedding(self.n_shards)
 
         def body(state):
-            live = ~u64.is_empty(U64(state.key_hi, state.key_lo))
-            return jnp.sum(live.astype(jnp.int32)).reshape(1)
+            # through the handle so tiered shards dedupe their inclusive
+            # hot/cold copies exactly like a single-device tiered table
+            return local.wrap(state).size().astype(jnp.int32).reshape(1)
 
         per_shard = shard_map(
             body, mesh=self.mesh, in_specs=(specs,), out_specs=P(ax),

@@ -24,6 +24,7 @@ this module owns only token↔key derivation and the optimizer hookup.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +33,7 @@ import numpy as np
 from repro.core import u64
 from repro.core.api import HKVTable, dedupe_keys
 from repro.core.table import HKVConfig
+from repro.core.tiered import TieredHKVTable, TieredState
 from repro.core.u64 import U64
 from repro.embedding.sparse_opt import SparseOptimizer
 
@@ -46,10 +48,28 @@ class HKVEmbedding:
     value_dtype: jnp.dtype = jnp.float32
     value_tier: str = "hbm"
     backend: str = "auto"              # inserter backend: 'auto'|'jnp'|'kernel' (DESIGN.md §4)
+    # Tier hierarchy (DESIGN.md §2.5): when `hot_capacity` is set the
+    # embedding runs a TieredHKVTable — an HBM hot tier of `hot_capacity`
+    # slots in front of a `capacity`-slot cold tier whose value plane uses
+    # `cold_value_tier` placement.  The embedding contract is unchanged;
+    # the table requirement relaxes from "fits in HBM" to "hot set fits".
+    hot_capacity: Optional[int] = None
+    cold_score_policy: str = "custom"  # demoted pairs keep translated scores
+    cold_value_tier: str = "hmem"
+
+    @property
+    def is_tiered(self) -> bool:
+        return self.hot_capacity is not None
+
+    @property
+    def total_capacity(self) -> int:
+        return self.capacity + (self.hot_capacity or 0)
 
     def config(self) -> HKVConfig:
+        """The flat table's config — the HOT tier's when tiered (capacity
+        is the only field that differs between the two uses)."""
         return HKVConfig(
-            capacity=self.capacity,
+            capacity=self.hot_capacity if self.is_tiered else self.capacity,
             dim=self.dim,
             buckets_per_key=self.buckets_per_key,
             score_policy=self.score_policy,
@@ -58,8 +78,29 @@ class HKVEmbedding:
             aux_value_dim=self.optimizer.aux_dim(self.dim),
         )
 
-    def create(self) -> HKVTable:
+    def cold_config(self) -> HKVConfig:
+        return dataclasses.replace(
+            self.config(), capacity=self.capacity,
+            score_policy=self.cold_score_policy,
+            value_tier=self.cold_value_tier,
+        )
+
+    def create(self):
+        if self.is_tiered:
+            return TieredHKVTable.from_configs(
+                self.config(), self.cold_config(), backend=self.backend)
         return HKVTable.create(self.config(), backend=self.backend)
+
+    def wrap(self, state):
+        """Re-bind a (shard-local) state with the right handle type — the
+        one entry point shard_map bodies use, so the distributed layer is
+        agnostic to flat-vs-tiered."""
+        if self.is_tiered:
+            return TieredHKVTable.wrap(
+                TieredState(*state) if not isinstance(state, TieredState)
+                else state,
+                self.config(), self.cold_config(), backend=self.backend)
+        return HKVTable.wrap(state, self.config(), backend=self.backend)
 
     # -- key & init derivation -------------------------------------------------
 
@@ -93,10 +134,17 @@ class HKVEmbedding:
         emb = res.values.reshape(tokens.shape + (self.dim,))
         return res.table, emb
 
-    def lookup_serve(self, table: HKVTable, tokens: jax.Array) -> jax.Array:
-        """READER: find; misses fall back to the deterministic init row."""
+    def lookup_serve(self, table, tokens: jax.Array) -> jax.Array:
+        """READER: find; misses fall back to the deterministic init row.
+
+        On a tiered table this is the PURE-READER form (promote=False):
+        the serve path discards the successor handle, so promotion work
+        would be two structural upserts thrown away per lookup."""
         keys = self.keys_of(tokens)
-        res = table.find(keys)
+        if isinstance(table, TieredHKVTable):
+            res = table.find(keys, promote=False)
+        else:
+            res = table.find(keys)
         vals = jnp.where(res.found[:, None], res.values, self.default_rows(keys))
         return vals.reshape(tokens.shape + (self.dim,))
 

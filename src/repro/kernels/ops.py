@@ -335,6 +335,19 @@ def insert_and_evict_kernel(
     )
 
 
+def gather_rows_kernel(state: HKVState, loc: find_mod.Locate, dim: int,
+                       *, interpret: bool | None = None) -> jax.Array:
+    """Position-addressed value gather at `loc` via the row-pipeline kernel
+    (hbm tier only — tier crossings stay on the jnp `tier_gather` path).
+    Missing keys return zero rows, matching `find_mod.gather_values`."""
+    if interpret is None:
+        interpret = default_interpret()
+    rows = jnp.clip(loc.row, 0, state.values.shape[0] - 1)
+    return _ga.gather_rows(
+        state.values, rows, loc.found.astype(jnp.int32), interpret=interpret,
+    )[:, :dim]
+
+
 def find_or_insert_kernel(
     state: HKVState,
     cfg: HKVConfig,
@@ -344,8 +357,15 @@ def find_or_insert_kernel(
     custom_scores: Optional[U64] = None,
     interpret: bool | None = None,
 ):
-    """Kernel-backed find_or_insert: probe, admission-controlled insert of
-    misses, then a position-addressed gather of every now-present row.
+    """Kernel-backed find_or_insert: ONE fused probe pass.
+
+    The upsert closure publishes every key's post-op location
+    (`MergeResult.loc`), so neither the pre-locate nor the post-insert
+    re-locate this wrapper used to issue is needed: `found` comes from the
+    closure's own probe and the value readback is a position-addressed
+    `gather_rows` at the published rows.  Probe passes: the closure's
+    locate + target-selection stages only (pinned, with bit-parity against
+    the old three-pass sequence, in tests/test_upsert_kernel.py).
 
     Returns (state, values, found, status) with core.ops.find_or_insert
     semantics: hits keep their stored value, rejected keys get the caller's
@@ -353,22 +373,18 @@ def find_or_insert_kernel(
     """
     if interpret is None:
         interpret = default_interpret()
-    pre = locate_kernel(state, cfg, keys, interpret=interpret)
     res = upsert_kernel(
         state, cfg, keys, init_values, custom_scores=custom_scores,
         write_hit_values=False, interpret=interpret,
     )
-    post = locate_kernel(res.state, cfg, keys, interpret=interpret)
     if cfg.value_tier == "hbm":
-        rows = jnp.clip(post.row, 0, res.state.values.shape[0] - 1)
-        vals = _ga.gather_rows(
-            res.state.values, rows, post.found.astype(jnp.int32),
-            interpret=interpret,
-        )[:, : cfg.dim]
+        vals = gather_rows_kernel(res.state, res.loc, cfg.dim,
+                                  interpret=interpret)
     else:
-        vals = find_mod.gather_values(res.state, post, cfg.dim, cfg.value_tier)
-    vals = jnp.where(post.found[:, None], vals, init_values[:, : cfg.dim])
-    return res.state, vals, pre.found, res.status
+        vals = find_mod.gather_values(res.state, res.loc, cfg.dim,
+                                      cfg.value_tier)
+    vals = jnp.where(res.loc.found[:, None], vals, init_values[:, : cfg.dim])
+    return res.state, vals, res.found, res.status
 
 
 # Re-exported oracles for tests/benches

@@ -25,6 +25,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--backend", choices=("dense", "hkv"), default="dense")
+    ap.add_argument("--hkv-hot-capacity", type=int, default=None,
+                    help="run the HKV table as a two-tier hierarchy: this "
+                    "many HBM hot slots in front of the (host-capacity) "
+                    "cold table — DESIGN.md §2.5; requires --backend hkv")
     ap.add_argument("--optimizer", choices=("adamw", "adamw8bit", "adafactor", "sgdm"),
                     default="adamw")
     ap.add_argument("--ckpt-dir", default="runs/ckpt")
@@ -78,6 +82,9 @@ def main():
                 capacity=max(256, (2 * lm.vocab // 128) * 128),
                 dim=lm.d_model,
                 optimizer=SparseOptimizer("rowwise_adagrad", lr=0.05),
+                # two-tier hierarchy per shard: hot set in HBM, tail in
+                # the host-capacity cold tier (DESIGN.md §2.5)
+                hot_capacity=args.hkv_hot_capacity,
             ),
         )
         builder = StepBuilder(model, opt)

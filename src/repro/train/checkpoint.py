@@ -70,6 +70,60 @@ def wait_async():
         _pending.pop().join()
 
 
+def _table_manifest(table) -> dict:
+    """Structural fingerprint of a KVTable handle for restore validation.
+
+    For a `TieredHKVTable` this records BOTH tiers — the pair is saved in
+    one step directory behind one atomic rename, so a checkpoint can never
+    publish a hot tier without its cold tier (the hierarchy's pairs would
+    otherwise silently lose their demoted halves on restore)."""
+    from repro.core.tiered import TieredHKVTable
+
+    if isinstance(table, TieredHKVTable):
+        return {
+            "kind": "TieredHKVTable",
+            "hot": _table_manifest(table.hot),
+            "cold": _table_manifest(table.cold),
+        }
+    cfg = getattr(table, "cfg", None)
+    out = {"kind": type(table).__name__, "capacity": int(table.capacity),
+           "dim": int(table.dim)}
+    if cfg is not None:
+        out["score_policy"] = cfg.score_policy
+        out["value_tier"] = cfg.value_tier
+    return out
+
+
+def save_table(path: str, step: int, table, extra: Optional[dict] = None) -> str:
+    """Atomic checkpoint of a KVTable handle (flat `HKVTable` or tiered).
+
+    The handle is a pytree whose leaves are the state arrays (cfg rides in
+    the treedef), so both tiers of a `TieredHKVTable` land in ONE step_<N>/
+    directory and publish via ONE os.rename — save/restore of the hierarchy
+    is all-or-nothing.  The manifest records each tier's shape for
+    validation at restore time."""
+    extra = dict(extra or {})
+    extra["table"] = _table_manifest(table)
+    return save(path, step, table, extra=extra)
+
+
+def restore_table(path: str, step: int, table):
+    """Restore a table checkpoint onto `table`'s structure (its cfg/backend
+    come from the live handle; leaves come from disk).  Raises if the
+    checkpoint's recorded table structure does not match the target —
+    restoring a flat checkpoint into a tiered handle (or mismatched tier
+    capacities) would silently misassign value planes otherwise."""
+    restored, extra = restore(path, step, table)
+    want = extra.get("table")
+    got = _table_manifest(table)
+    if want is not None and want != got:
+        raise ValueError(
+            f"checkpoint table structure {want} does not match the restore "
+            f"target {got}"
+        )
+    return restored, extra
+
+
 def latest_step(path: str) -> Optional[int]:
     if not os.path.isdir(path):
         return None

@@ -1,0 +1,97 @@
+"""Property tests for ScorePolicy transitions (paper §3.3, Table 8).
+
+The epoch_lfu contract under test (hypothesis-randomized):
+
+  * update_score RESETS the frequency counter to the batch multiplicity
+    EXACTLY when the application epoch differs from the entry's stored
+    epoch (hi plane) — and only then;
+  * within an unchanged epoch the counter accumulates, so the uint64
+    total order (epoch << 32 | count) is preserved: scores never move
+    backwards, and two entries touched in the same epoch order by
+    accumulated frequency.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import u64  # noqa: E402
+from repro.core.scores import get_policy  # noqa: E402
+from repro.core.u64 import U64  # noqa: E402
+
+U32 = st.integers(0, 2**32 - 1)
+COUNT = st.integers(1, 2**10)
+POLICY = get_policy("epoch_lfu")
+
+
+def _update(old_hi, old_lo, epoch, count):
+    clock = U64(jnp.uint32(0), jnp.uint32(0))  # epoch_lfu ignores the clock
+    new = POLICY.update_score(
+        U64(jnp.asarray([old_hi], jnp.uint32), jnp.asarray([old_lo], jnp.uint32)),
+        clock,
+        jnp.uint32(epoch),
+        jnp.asarray([count], jnp.uint32),
+        None,
+    )
+    return int(np.asarray(new.hi)[0]), int(np.asarray(new.lo)[0])
+
+
+class TestEpochLfuRollover:
+    @settings(max_examples=60, deadline=None)
+    @given(old_epoch=U32, old_count=U32, epoch=U32, count=COUNT)
+    def test_reset_exactly_when_epoch_changes(self, old_epoch, old_count,
+                                              epoch, count):
+        hi, lo = _update(old_epoch, old_count, epoch, count)
+        assert hi == epoch                       # the new epoch is stamped
+        if epoch != old_epoch:
+            assert lo == count                   # rollover: counter RESET
+        else:
+            assert lo == (old_count + count) % 2**32  # accumulate (mod u32)
+
+    @settings(max_examples=60, deadline=None)
+    @given(epoch=U32, old_count=st.integers(0, 2**31), count=COUNT)
+    def test_same_epoch_update_is_monotone_u64(self, epoch, old_count, count):
+        """Within one epoch (no rollover, no u32 counter overflow) a touch
+        can only RAISE the score — eviction priority never regresses."""
+        hypothesis.assume(old_count + count < 2**32)
+        hi, lo = _update(epoch, old_count, epoch, count)
+        old_u = (epoch << 32) | old_count
+        new_u = (hi << 32) | lo
+        assert new_u > old_u
+
+    @settings(max_examples=60, deadline=None)
+    @given(epoch=U32, ca=st.integers(0, 2**31), cb=st.integers(0, 2**31),
+           count=COUNT)
+    def test_total_order_by_frequency_within_epoch(self, epoch, ca, cb, count):
+        """Two entries in the same epoch: updating both by the same batch
+        multiplicity preserves their relative u64 order (the bucket-min
+        eviction scan sees a stable ranking)."""
+        hypothesis.assume(ca + count < 2**32 and cb + count < 2**32)
+        ha, la = _update(epoch, ca, epoch, count)
+        hb, lb = _update(epoch, cb, epoch, count)
+        before = np.sign(ca - cb)
+        after = np.sign(((ha << 32) | la) - ((hb << 32) | lb))
+        assert before == after
+
+    @settings(max_examples=40, deadline=None)
+    @given(old_epoch=U32, old_count=U32, epoch=U32, count=COUNT)
+    def test_matches_u64_plane_semantics(self, old_epoch, old_count, epoch,
+                                         count):
+        """The (hi, lo) planes ARE the uint64: reconstructing through the
+        u64 helpers gives the same number the planes encode."""
+        hi, lo = _update(old_epoch, old_count, epoch, count)
+        packed = int(np.asarray(u64.to_uint64(
+            U64(jnp.asarray([hi], jnp.uint32), jnp.asarray([lo], jnp.uint32))
+        ))[0])
+        assert packed == (hi << 32) | lo
+
+    def test_init_score_counts_batch_multiplicity(self):
+        sc = POLICY.init_score(
+            U64(jnp.uint32(0), jnp.uint32(0)), jnp.uint32(5),
+            jnp.asarray([3], jnp.uint32), None, (1,),
+        )
+        assert int(np.asarray(sc.hi)[0]) == 5
+        assert int(np.asarray(sc.lo)[0]) == 3

@@ -1,0 +1,566 @@
+"""TieredHKVTable: the two-tier hierarchy's contract (DESIGN.md §2.5).
+
+Pinned here:
+  * demotion cascade — hot-tier displacements (evicted victims AND
+    hot-rejected incoming pairs) land in the cold tier with values intact;
+  * miss-path promotion — cold hits re-enter the hot tier on access and
+    their displaced victims cascade back down (inclusive-on-access);
+  * conservation — no pair leaves the hierarchy except at the cold tier's
+    boundary, and those losses are reported (`dropped`);
+  * hit-rate uplift — hot capacity < working set beats a same-hot-capacity
+    flat table under zipfian replay (the tentpole acceptance criterion);
+  * score translation across per-tier policies;
+  * KVTable protocol conformance (the same harness as test_api), the
+    embedding layer over a tiered table, session/update_rows, checkpoint
+    save/restore of both tiers, jit/scan/pytree behavior.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    HKVTable,
+    KVTable,
+    TieredHKVTable,
+    U64,
+    translate_scores,
+    u64,
+)
+from repro.core.scores import get_policy
+from repro.data import zipf_keys
+
+
+def _tiered(hot=2 * 128, cold=8 * 128, dim=4, **kw):
+    return TieredHKVTable.create(hot_capacity=hot, cold_capacity=cold,
+                                 dim=dim, **kw)
+
+
+def _keys(rng, n, lo=0, hi=2**50):
+    return rng.integers(lo, hi, size=n).astype(np.uint64)
+
+
+# =============================================================================
+# Demotion cascade
+# =============================================================================
+
+
+class TestDemotion:
+    def test_hot_evictions_land_in_cold_with_values(self):
+        """Fill hot past capacity; every displaced pair must be findable in
+        the cold tier with its exact value."""
+        t = _tiered(hot=128, cold=8 * 128, dim=2)
+        rng = np.random.default_rng(0)
+        seen = {}
+        for step in range(4):
+            kb = _keys(rng, 128)
+            vals = np.full((128, 2), float(step + 1), np.float32)
+            r = t.insert_or_assign(kb, jnp.asarray(vals))
+            t = r.table
+            for k in kb:
+                seen[int(k)] = float(step + 1)
+        assert int(t.hot.size()) == 128          # hot stayed at capacity
+        assert int(t.cold.size()) > 0            # the cascade happened
+        all_k = np.fromiter(seen, np.uint64)
+        f = t.find(all_k, promote=False)
+        assert bool(np.asarray(f.found).all())   # nothing was lost
+        got = np.asarray(f.values)[:, 0]
+        want = np.array([seen[int(k)] for k in all_k], np.float32)
+        np.testing.assert_array_equal(got, want)
+
+    def test_conservation_exact_when_cold_absorbs_everything(self):
+        """size() + dropped == distinct keys inserted, batch after batch."""
+        t = _tiered(hot=128, cold=16 * 128, dim=2)
+        rng = np.random.default_rng(1)
+        inserted, dropped = set(), 0
+        for _ in range(6):
+            kb = _keys(rng, 128)
+            r = t.insert_or_assign(kb, jnp.ones((128, 2)))
+            t = r.table
+            dropped += int(r.dropped)
+            inserted.update(int(k) for k in kb)
+        assert dropped == 0                      # cold tier had room
+        assert int(t.size()) == len(inserted)
+
+    def test_drops_only_at_cold_boundary_and_are_reported(self):
+        """With a tiny cold tier, pairs DO leave the hierarchy — exactly
+        size + dropped == inserted, so nothing vanishes silently."""
+        t = _tiered(hot=128, cold=128, dim=2)
+        rng = np.random.default_rng(2)
+        inserted, dropped = set(), 0
+        for _ in range(6):
+            kb = _keys(rng, 128)
+            r = t.insert_or_assign(kb, jnp.ones((128, 2)))
+            t = r.table
+            dropped += int(r.dropped)
+            inserted.update(int(k) for k in kb)
+        assert dropped > 0
+        # dropped counts pair EXITS; a key can re-enter on a later batch
+        # and exit again, so exits >= distinct keys no longer resident
+        assert dropped >= len(inserted) - int(t.size())
+        assert int(t.size()) + dropped >= len(inserted)
+
+    def test_hot_rejected_pairs_are_absorbed_by_cold(self):
+        """Admission control: under LFU, a one-touch burst cannot displace
+        high-count residents — the hot tier REJECTS it.  The hierarchy must
+        absorb those pairs cold-side instead of dropping them."""
+        t = _tiered(hot=128, cold=8 * 128, dim=2, score_policy="lfu")
+        resident = np.arange(1, 129, dtype=np.uint64)
+        for _ in range(5):  # count them up: hot residents become beatproof
+            t = t.insert_or_assign(resident, jnp.ones((128, 2))).table
+        burst = np.arange(10_000, 10_128, dtype=np.uint64)
+        r = t.insert_or_assign(burst, jnp.full((128, 2), 7.0))
+        status = np.asarray(r.status)
+        assert (status == 4).all()               # hot rejected the burst...
+        t = r.table
+        assert int(r.demoted) == 128             # ...cold absorbed it
+        f = t.find(burst, promote=False)
+        assert bool(np.asarray(f.found).all())
+        assert not bool(np.asarray(f.hot_hit).any())
+        np.testing.assert_allclose(np.asarray(f.values), 7.0)
+        assert bool(np.asarray(r.ok).all())      # placed SOMEWHERE
+
+    def test_insert_with_aux_columns_pads_like_flat_table(self):
+        """Regression: caller rows [N, dim] against aux-augmented value
+        planes must pad exactly like the flat handle (the sparse-optimizer
+        layout) — the demotion merge used to mix widths and crash."""
+        t = _tiered(hot=128, cold=4 * 128, dim=4, aux_value_dim=2)
+        rng = np.random.default_rng(10)
+        for _ in range(3):  # overflow hot so demotion actually runs
+            kb = _keys(rng, 128)
+            r = t.insert_or_assign(kb, jnp.ones((128, 4)))
+            t = r.table
+        assert int(t.cold.size()) > 0
+        f = t.find(kb, promote=False)
+        assert bool(np.asarray(f.found).all())
+        np.testing.assert_allclose(np.asarray(f.values), 1.0)
+
+    def test_ok_is_false_when_both_tiers_reject(self):
+        """`.ok` must report the cold tier's actual verdict: a pair
+        rejected by hot AND rejected by the cold tier is not resident
+        anywhere, so its lane reads False (duplicates included)."""
+        t = _tiered(hot=128, cold=128, dim=2, score_policy="lfu")
+        strong = np.arange(1, 129, dtype=np.uint64)
+        for _ in range(4):                       # hot residents: count 4
+            t = t.insert_or_assign(strong, jnp.ones((128, 2))).table
+        # fill cold with count-3 pairs: evict the hot set via a stronger
+        # burst, then re-establish it — twice to cycle scores up
+        burst = np.repeat(np.arange(1000, 1032, dtype=np.uint64), 4)
+        t = t.insert_or_assign(burst, jnp.ones((128, 2))).table
+        cold_full = int(t.cold.size())
+        # weak count-1 pairs: rejected by hot (min count >= 3 hot-side);
+        # cold has 128 - cold_full free slots, rest compete and lose
+        weak = np.repeat(np.arange(5000, 5064, dtype=np.uint64), 2)
+        r = t.insert_or_assign(weak, jnp.ones((128, 2)))
+        status = np.asarray(r.status)
+        ok = np.asarray(r.ok)
+        assert (status == 4).all()               # all hot-rejected
+        resident = np.asarray(r.table.contains(weak))
+        np.testing.assert_array_equal(ok, resident)  # ok == ground truth
+        if cold_full + 64 > 128:                 # some really were dropped
+            assert not ok.all()
+
+    def test_demotion_write_back_freshens_stale_cold_copy(self):
+        """Inclusive-cache coherence: promote a key, update its hot value,
+        then force it out of hot — the cold copy must carry the UPDATED
+        value (write-back on demotion), not the stale pre-promotion one."""
+        t = _tiered(hot=128, cold=8 * 128, dim=2)
+        key = np.array([42], np.uint64)
+        t = t.insert_or_assign(key, jnp.full((1, 2), 1.0)).table
+        # push it to cold, then promote it back via find
+        t = t.insert_or_assign(np.arange(100, 356, dtype=np.uint64),
+                               jnp.zeros((256, 2))).table
+        t = t.find(key).table
+        assert bool(np.asarray(t.find(key, promote=False).hot_hit).all())
+        # update the hot copy (the cold copy still holds 1.0)
+        t = t.assign(key, jnp.full((1, 2), 9.0))
+        # force the key out of hot again
+        t = t.insert_or_assign(np.arange(500, 756, dtype=np.uint64),
+                               jnp.zeros((256, 2))).table
+        f = t.find(key, promote=False)
+        assert bool(np.asarray(f.found).all())
+        np.testing.assert_allclose(np.asarray(f.values), 9.0)
+
+
+# =============================================================================
+# Miss-path promotion
+# =============================================================================
+
+
+class TestPromotion:
+    def _overflowed(self, rng, dim=2):
+        """A table whose hot tier was fully churned: early keys live cold."""
+        t = _tiered(hot=128, cold=8 * 128, dim=dim)
+        early = _keys(rng, 128, lo=1, hi=2**30)
+        t = t.insert_or_assign(early, jnp.full((128, dim), 3.0)).table
+        churn = _keys(rng, 256, lo=2**31, hi=2**32)
+        t = t.insert_or_assign(churn, jnp.zeros((256, dim))).table
+        cold_resident = ~np.asarray(t.find(early, promote=False).hot_hit)
+        return t, early[cold_resident]
+
+    def test_find_promotes_cold_hits_into_hot(self):
+        rng = np.random.default_rng(3)
+        t, cold_keys = self._overflowed(rng)
+        assert len(cold_keys) > 0
+        probe = cold_keys[:64]
+        r = t.find(probe)
+        assert bool(np.asarray(r.found).all())
+        np.testing.assert_allclose(np.asarray(r.values), 3.0)
+        assert int(r.promoted) == len(probe)
+        # the NEXT access is a hot hit (inclusive-on-access)
+        f2 = r.table.find(probe, promote=False)
+        assert bool(np.asarray(f2.hot_hit).all())
+        # inclusive: the cold copy survives promotion
+        assert bool(np.asarray(r.table.cold.contains(probe)).all())
+
+    def test_promotion_victims_cascade_down(self):
+        rng = np.random.default_rng(4)
+        t, cold_keys = self._overflowed(rng)
+        probe = cold_keys[:64]
+        pre = int(t.size())
+        r = t.find(probe)
+        # promotion displaced hot entries; they must now be cold-resident
+        assert int(r.demoted) > 0
+        assert int(r.table.size()) == pre        # promotion conserves keys
+        assert int(r.dropped) == 0               # roomy cold tier: no exits
+
+    def test_promote_false_is_a_pure_reader(self):
+        rng = np.random.default_rng(5)
+        t, cold_keys = self._overflowed(rng)
+        r = t.find(cold_keys[:32], promote=False)
+        for a, b in zip(jax.tree.leaves(r.table), jax.tree.leaves(t)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_find_or_insert_returns_cold_value_not_init(self):
+        """The miss path must PROMOTE the trained cold row, not shadow it
+        with a fresh init row."""
+        rng = np.random.default_rng(6)
+        t, cold_keys = self._overflowed(rng)
+        probe = cold_keys[:32]
+        r = t.find_or_insert(probe, jnp.full((32, 2), -5.0))
+        assert bool(np.asarray(r.found).all())   # found: it lived in cold
+        np.testing.assert_allclose(np.asarray(r.values), 3.0)  # cold value
+        assert int(r.promoted) == len(probe)
+        f2 = r.table.find(probe, promote=False)
+        assert bool(np.asarray(f2.hot_hit).all())
+        np.testing.assert_allclose(np.asarray(f2.values), 3.0)
+
+    def test_find_or_insert_fresh_misses_admit_init(self):
+        t = _tiered()
+        fresh = np.arange(1, 33, dtype=np.uint64)
+        r = t.find_or_insert(fresh, jnp.full((32, 4), 2.5))
+        assert not bool(np.asarray(r.found).any())
+        np.testing.assert_allclose(np.asarray(r.values), 2.5)
+        assert bool(np.asarray(r.table.contains(fresh)).all())
+
+    def test_rejected_cold_hit_keeps_its_cold_score(self):
+        """Regression: a cold-resident key whose promotion is REJECTED by
+        the hot tier must keep its accumulated cold score — re-demoting it
+        with a fresh count-1 init would make every rejected re-access
+        LOWER its eviction priority."""
+        t = _tiered(hot=128, cold=4 * 128, dim=2, score_policy="lfu")
+        strong = np.arange(1, 129, dtype=np.uint64)
+        for _ in range(5):                       # hot residents: count 5
+            t = t.insert_or_assign(strong, jnp.ones((128, 2))).table
+        # park X in cold with an accumulated count-3 score: count it up
+        # hot-side, then displace it with a stronger burst
+        x = np.repeat(np.array([777], np.uint64), 3)
+        t = t.insert_or_assign(x, jnp.ones((3, 2))).table  # count 3, evicts one
+        burst = np.repeat(np.arange(1000, 1016, dtype=np.uint64), 8)  # count 8
+        t = t.insert_or_assign(burst, jnp.ones((128, 2))).table
+        xk = np.array([777], np.uint64)
+        assert bool(np.asarray(t.cold.contains(xk)).all())
+        score_before = int(np.asarray(t.cold.find(xk).score_lo)[0])
+        # re-access via find_or_insert: hot rejects (count 1 < residents)
+        r = t.find_or_insert(xk, jnp.zeros((1, 2)))
+        assert int(np.asarray(r.status)[0]) == 4  # rejected by hot
+        assert bool(np.asarray(r.ok)[0])          # still resident (cold)
+        score_after = int(np.asarray(r.table.cold.find(xk).score_lo)[0])
+        assert score_after == score_before        # NOT downgraded to 1
+
+    def test_find_or_insert_single_hot_probe(self, monkeypatch):
+        """The pre-pass locate is shared with the upsert closure through
+        the loc= seam: one hot locate + cold reads, nothing re-probed."""
+        from repro.core import find as find_mod
+
+        t = _tiered(hot=128, cold=4 * 128, dim=2)
+        t = t.insert_or_assign(np.arange(1, 65, dtype=np.uint64),
+                               jnp.ones((64, 2))).table
+        calls = {"n": 0}
+        real = find_mod.locate
+
+        def counting(*a, **kw):
+            calls["n"] += 1
+            return real(*a, **kw)
+
+        monkeypatch.setattr(find_mod, "locate", counting)
+        t.find_or_insert(np.arange(1, 65, dtype=np.uint64),
+                         jnp.zeros((64, 2)))
+        # hot pre-pass (1) + cold find_rows (1) + demotion upsert's own
+        # locate on the cold tier (1); the hot closure reuses the pre-pass
+        assert calls["n"] == 3
+
+    def test_duplicate_keys_promote_once(self):
+        rng = np.random.default_rng(7)
+        t, cold_keys = self._overflowed(rng)
+        dup = np.repeat(cold_keys[:8], 4)        # 8 distinct keys, 32 lanes
+        r = t.find(dup)
+        assert bool(np.asarray(r.found).all())
+        assert int(r.promoted) == 8
+
+
+# =============================================================================
+# Hit-rate uplift (the tentpole acceptance criterion)
+# =============================================================================
+
+
+class TestHitRateUplift:
+    def test_tiered_beats_same_hot_capacity_single_under_zipf(self):
+        rng = np.random.default_rng(42)
+        hot_cap, cold_cap, batch, steps = 128, 8 * 128, 256, 12
+        stream = zipf_keys(rng, batch * steps, 1.05, 2 * cold_cap)
+        tiered = _tiered(hot=hot_cap, cold=cold_cap, dim=4)
+        single = HKVTable.create(capacity=hot_cap, dim=4)
+        init = jnp.zeros((batch, 4), jnp.float32)
+
+        def replay(table):
+            hits = []
+            for i in range(steps):
+                kb = stream[i * batch : (i + 1) * batch]
+                r = table.find_or_insert(kb, init)
+                table = r.table
+                hits.append(float(np.asarray(r.found).mean()))
+            return float(np.mean(hits[steps // 2:]))
+
+        hr_tiered, hr_single = replay(tiered), replay(single)
+        # "measurably higher": demand several points, not noise
+        assert hr_tiered > hr_single + 0.03, (hr_tiered, hr_single)
+
+
+# =============================================================================
+# Score translation
+# =============================================================================
+
+
+class TestScoreTranslation:
+    def test_custom_destination_passes_scores_through(self):
+        sc = U64(jnp.asarray([1, 2], jnp.uint32), jnp.asarray([3, 4], jnp.uint32))
+        out = translate_scores(get_policy("lru"), get_policy("custom"), sc)
+        assert out is sc
+
+    def test_non_custom_destination_restamps(self):
+        sc = U64(jnp.zeros(2, jnp.uint32), jnp.zeros(2, jnp.uint32))
+        for dst in ("lru", "lfu", "epoch_lru", "epoch_lfu"):
+            assert translate_scores(get_policy("custom"), get_policy(dst), sc) is None
+
+    def test_demoted_pairs_keep_relative_order_in_custom_cold(self):
+        """Default cold policy is 'custom': pairs demoted with LOW hot
+        scores must lose cold-tier admission races against pairs demoted
+        with HIGH hot scores."""
+        # lfu hot tier: score == touch count, easy to control
+        t = _tiered(hot=128, cold=128, dim=2, score_policy="lfu")
+        hot_keys = np.arange(1, 129, dtype=np.uint64)
+        for _ in range(3):                       # count=3 for the residents
+            t = t.insert_or_assign(hot_keys, jnp.ones((128, 2))).table
+        # displace all of them with a beating burst: count via duplicates is
+        # not needed — lfu inits at batch multiplicity; use 4 repeats
+        burst = np.repeat(np.arange(1000, 1032, dtype=np.uint64), 4)
+        t = t.insert_or_assign(burst, jnp.ones((128, 2))).table
+        # the displaced count-3 pairs now live in the 128-slot cold tier
+        cold_before = np.asarray(t.cold.contains(hot_keys))
+        assert cold_before.sum() > 0
+        # hot rejects the count-1 weak burst (residents have count >= 3);
+        # its pairs cascade to cold carrying translated score 1 — they may
+        # claim EMPTY cold slots but must NOT displace the score-3 pairs
+        weak = np.arange(5000, 5128, dtype=np.uint64)
+        r = t.insert_or_assign(weak, jnp.ones((128, 2)))
+        t2 = r.table
+        cold_after = np.asarray(t2.cold.contains(hot_keys))
+        np.testing.assert_array_equal(cold_after[cold_before],
+                                      np.ones(cold_before.sum(), bool))
+        # and with free slots exhausted, the surplus weak pairs were
+        # rejected at the cold boundary — reported, not silent
+        assert int(r.dropped) > 0
+
+
+# =============================================================================
+# Protocol conformance + handle behavior
+# =============================================================================
+
+
+class TestTieredProtocol:
+    def test_kvtable_protocol_roundtrip(self):
+        from tests.test_api import _protocol_roundtrip
+
+        _protocol_roundtrip(_tiered(dim=3))
+
+    def test_isinstance_kvtable(self):
+        assert isinstance(_tiered(), KVTable)
+
+    def test_pytree_roundtrip_preserves_statics(self):
+        t = _tiered(dim=2, score_policy="lfu")
+        leaves, treedef = jax.tree_util.tree_flatten(t)
+        t2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert isinstance(t2, TieredHKVTable)
+        assert t2.hot.cfg == t.hot.cfg and t2.cold.cfg == t.cold.cfg
+        assert t2.promote_on_find == t.promote_on_find
+
+    def test_jit_and_scan(self):
+        t = _tiered(dim=2)
+        keys = np.arange(1, 33, dtype=np.uint64)
+        k = u64.from_uint64(keys)
+
+        @jax.jit
+        def step(table, kh, kl):
+            r = table.find_or_insert(U64(kh, kl), jnp.ones((32, 2)))
+            return r.table, r.found
+
+        t2, found = step(t, k.hi, k.lo)
+        assert not bool(np.asarray(found).any())
+
+        def body(table, _):
+            r = table.find_or_insert(U64(k.hi, k.lo), jnp.ones((32, 2)))
+            return r.table, r.found
+        final, founds = jax.lax.scan(body, t2, jnp.arange(3))
+        assert bool(np.asarray(founds).all())    # present from step one
+
+    def test_erase_kills_both_copies(self):
+        rng = np.random.default_rng(8)
+        t = _tiered(hot=128, cold=8 * 128, dim=2)
+        keys = _keys(rng, 128, lo=1, hi=2**30)
+        t = t.insert_or_assign(keys, jnp.ones((128, 2))).table
+        t = t.insert_or_assign(_keys(rng, 128, lo=2**31, hi=2**32),
+                               jnp.zeros((128, 2))).table
+        t = t.find(keys[:16]).table              # some now live in BOTH tiers
+        t = t.erase(keys[:16])
+        assert not bool(np.asarray(t.contains(keys[:16])).any())
+        # no resurrection through a later miss-path probe
+        f = t.find(keys[:16])
+        assert not bool(np.asarray(f.found).any())
+
+    def test_geometry_mismatch_rejected(self):
+        from repro.core.table import HKVConfig
+
+        with pytest.raises(ValueError, match="geometry"):
+            TieredHKVTable.from_configs(
+                HKVConfig(capacity=128, dim=4),
+                HKVConfig(capacity=256, dim=8),
+            )
+
+    def test_session_update_rows_hits_hot_rows(self):
+        t = _tiered(dim=2)
+        keys = np.arange(1, 17, dtype=np.uint64)
+        t = t.insert_or_assign(keys, jnp.full((16, 2), 2.0)).table
+        s = t.session()
+        s.update_rows(keys, lambda rows: rows * 3.0)
+        t2 = s.commit()
+        assert isinstance(t2, TieredHKVTable)
+        np.testing.assert_allclose(
+            np.asarray(t2.find(keys, promote=False).values), 6.0)
+
+
+# =============================================================================
+# Embedding layer over a tiered table
+# =============================================================================
+
+
+class TestTieredEmbedding:
+    def _emb(self):
+        from repro.embedding.dynamic import HKVEmbedding
+        from repro.embedding.sparse_opt import SparseOptimizer
+
+        return HKVEmbedding(capacity=8 * 128, dim=8, hot_capacity=2 * 128,
+                            optimizer=SparseOptimizer("sgd", lr=1.0))
+
+    def test_train_serve_grads_cycle(self):
+        emb = self._emb()
+        t = emb.create()
+        assert isinstance(t, TieredHKVTable)
+        toks = jnp.asarray(np.random.default_rng(0).integers(
+            0, 4096, size=(2, 32)))
+        t, rows = emb.lookup_train(t, toks)
+        assert rows.shape == (2, 32, 8)
+        g = jnp.ones_like(rows)
+        t = emb.apply_grads(t, toks, g)
+        served = emb.lookup_serve(t, toks)
+        # sgd lr=1: served = init - 1.0 * summed grad (dup tokens sum)
+        assert served.shape == rows.shape
+        assert float(jnp.abs(served - rows).max()) > 0.5  # grads landed
+
+    def test_trained_value_survives_demotion_and_promotion(self):
+        """The capacity-beyond-HBM story end to end: train a row, churn it
+        out of the hot tier, access it again — the TRAINED value comes
+        back, not a re-init."""
+        emb = self._emb()
+        t = emb.create()
+        toks = jnp.arange(64).reshape(1, 64)
+        t, rows = emb.lookup_train(t, toks)
+        t = emb.apply_grads(t, toks, jnp.ones_like(rows))
+        trained = emb.lookup_serve(t, toks)
+        # churn the hot tier with 4x its capacity of fresh tokens
+        churn = jnp.arange(10_000, 10_000 + 1024).reshape(1, 1024)
+        t, _ = emb.lookup_train(t, churn)
+        assert not bool(np.asarray(
+            t.find(emb.keys_of(toks), promote=False).hot_hit).all())
+        t, rows2 = emb.lookup_train(t, toks)     # promotes back
+        np.testing.assert_allclose(np.asarray(rows2), np.asarray(trained),
+                                   rtol=1e-6)
+
+
+# =============================================================================
+# Checkpointing both tiers atomically
+# =============================================================================
+
+
+class TestTieredCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        from repro.train import checkpoint as ckpt
+
+        rng = np.random.default_rng(9)
+        t = _tiered(hot=128, cold=4 * 128, dim=3)
+        for _ in range(3):
+            t = t.insert_or_assign(_keys(rng, 128),
+                                   jnp.asarray(rng.normal(size=(128, 3)),
+                                               jnp.float32)).table
+        ckpt.save_table(str(tmp_path), 7, t)
+        restored, extra = ckpt.restore_table(str(tmp_path), 7, t)
+        assert extra["table"]["kind"] == "TieredHKVTable"
+        assert extra["table"]["hot"]["capacity"] == 128
+        for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(t)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_structure_mismatch_rejected(self, tmp_path):
+        from repro.train import checkpoint as ckpt
+
+        t = _tiered(hot=128, cold=4 * 128, dim=3)
+        ckpt.save_table(str(tmp_path), 1, t)
+        other = _tiered(hot=4 * 128, cold=128, dim=3)  # swapped tiers
+        with pytest.raises(ValueError, match="structure"):
+            ckpt.restore_table(str(tmp_path), 1, other)
+
+
+# =============================================================================
+# Sharded-over-tiered (the existing conformance harness, unchanged)
+# =============================================================================
+
+
+@pytest.mark.slow  # shard_map compiles per op: minutes on CPU
+def test_sharded_over_tiered_protocol_conformance():
+    from tests.test_api import _protocol_roundtrip
+
+    from repro.distributed.table_sharding import ShardedHKVTable
+    from repro.embedding.dynamic import HKVEmbedding
+    from repro.embedding.sparse_opt import SparseOptimizer
+
+    mesh = jax.make_mesh((1,), ("data",))
+    table = ShardedHKVTable.create(
+        mesh,
+        HKVEmbedding(capacity=4 * 128, dim=3, hot_capacity=128,
+                     optimizer=SparseOptimizer("sgd")),
+    )
+    table = _protocol_roundtrip(table)
+    r = table.find_or_insert(np.arange(1, 65, dtype=np.uint64))
+    assert bool(np.asarray(r.found).all())

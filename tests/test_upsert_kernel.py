@@ -79,14 +79,18 @@ def test_insert_and_evict_kernel_returns_identical_evictions():
         # the public kernel wrapper, exercised directly
         rk = kops.insert_and_evict_kernel(sk, cfg, k, vals, interpret=True)
         sj, sk = rj.state, rk.state
-        for f in ("status", "evicted_key_hi", "evicted_key_lo", "evicted_values",
-                  "evicted_score_hi", "evicted_score_lo", "evicted_mask"):
+        np.testing.assert_array_equal(
+            np.asarray(rj.status), np.asarray(rk.status),
+            err_msg=f"step {step}: status",
+        )
+        for f in ("key_hi", "key_lo", "values", "score_hi", "score_lo", "mask"):
             np.testing.assert_array_equal(
-                np.asarray(getattr(rj, f)), np.asarray(getattr(rk, f)),
-                err_msg=f"step {step}: {f}",
+                np.asarray(getattr(rj.evicted, f)),
+                np.asarray(getattr(rk.evicted, f)),
+                err_msg=f"step {step}: evicted.{f}",
             )
         _assert_states_equal(sj, sk, f"step {step}")
-    assert int(np.asarray(rj.evicted_mask).sum()) > 0
+    assert int(rj.evicted.count()) > 0
 
 
 def test_find_or_insert_kernel_matches_core():
@@ -108,6 +112,128 @@ def test_find_or_insert_kernel_matches_core():
             np.testing.assert_array_equal(np.asarray(rj.status), np.asarray(rk.status))
             np.testing.assert_array_equal(np.asarray(rj.values), np.asarray(rk.values))
             _assert_states_equal(sj, sk, f"dual={dual} step {step}")
+
+
+class TestFindOrInsertSinglePass:
+    """The perf fix: find_or_insert used to run three probe passes
+    (pre-locate, the upsert's internal locate, post-locate).  The closure
+    now publishes post-op locations (`MergeResult.loc`), so find_or_insert
+    issues NO probe beyond the upsert's own — pinned here, with bit-parity
+    against an explicit old-style three-pass reference."""
+
+    def _old_style(self, state, cfg, k, init):
+        """The pre-fix sequence, spelled out: pre-locate + upsert +
+        post-locate + gather (the parity reference)."""
+        from repro.core import find as find_mod
+
+        pre = find_mod.locate(state, cfg, k)
+        res = merge.upsert(state, cfg, k, init, write_hit_values=False)
+        post = find_mod.locate(res.state, cfg, k)
+        vals = find_mod.gather_values(res.state, post, cfg.dim, cfg.value_tier)
+        vals = jnp.where(post.found[:, None], vals, init[:, : cfg.dim])
+        return res.state, vals, pre.found, res.status
+
+    @pytest.mark.parametrize("policy", ["lru", "lfu"])
+    @pytest.mark.parametrize("dual", [False, True])
+    def test_parity_with_three_pass_reference(self, dual, policy):
+        rng = np.random.default_rng(29 + dual)
+        cfg = table.HKVConfig(capacity=2 * 128, dim=4,
+                              buckets_per_key=2 if dual else 1,
+                              score_policy=policy)
+        s_new = table.create(cfg)
+        s_old = table.create(cfg)
+        for step in range(6):  # drives past capacity: hits, evicts, rejects
+            keys = _random_batch(rng, 160, 2**16)
+            k = u64.from_uint64(keys)
+            init = jnp.asarray(rng.normal(size=(160, 4)), jnp.float32)
+            rn = ops.find_or_insert(s_new, cfg, k, init, backend="jnp")
+            so, vo, fo, sto = self._old_style(s_old, cfg, k, init)
+            s_new, s_old = rn.state, so
+            np.testing.assert_array_equal(np.asarray(rn.found), np.asarray(fo))
+            np.testing.assert_array_equal(np.asarray(rn.status), np.asarray(sto))
+            np.testing.assert_array_equal(np.asarray(rn.values), np.asarray(vo))
+            _assert_states_equal(s_new, s_old,
+                                 f"dual={dual} {policy} step {step}")
+
+    @pytest.mark.parametrize("backend", ["jnp", "kernel"])
+    def test_hit_evicted_within_same_batch_reports_gone(self, backend):
+        """The published post-op location must not be stale: under LFU a
+        batch can HIT key A (count -> 2) and in the same launch admit a
+        higher-count miss B that evicts A's slot.  find_or_insert must
+        then return A's ephemeral init row (as the old re-probe did), and
+        B's value must never leak into A's lane."""
+        cfg = table.HKVConfig(capacity=128, dim=2, score_policy="lfu")
+        state = table.create(cfg)
+        a = np.array([1], np.uint64)
+        others = np.arange(2, 129, dtype=np.uint64)    # fills the bucket
+        state = ops.insert_or_assign(
+            state, cfg, u64.from_uint64(a), jnp.full((1, 2), 50.0)).state
+        for _ in range(3):                             # others: count 3
+            state = ops.insert_or_assign(
+                state, cfg, u64.from_uint64(others),
+                jnp.zeros((127, 2))).state
+        # batch: A (hit, count 1 -> 2) + B x3 (miss, init count 3 beats 2)
+        batch = np.array([1, 999, 999, 999], np.uint64)
+        init = jnp.asarray([[-1.0, -1.0], [7.0, 7.0], [7.0, 7.0], [7.0, 7.0]],
+                           jnp.float32)
+        res = ops.find_or_insert(state, cfg, u64.from_uint64(batch), init,
+                                 backend=backend)
+        status = np.asarray(res.status)
+        assert status[0] == 1 and (status[1:] == 3).all()  # A updated, B evicts
+        vals = np.asarray(res.values)
+        np.testing.assert_array_equal(vals[0], [-1.0, -1.0])  # A: init, not B
+        np.testing.assert_array_equal(vals[1], [7.0, 7.0])
+        # A really is gone from the table
+        gone = ops.contains(res.state, cfg, u64.from_uint64(a))
+        assert not bool(np.asarray(gone)[0])
+
+    def test_jnp_path_issues_exactly_one_locate(self, monkeypatch):
+        from repro.core import find as find_mod
+
+        calls = {"n": 0}
+        real = find_mod.locate
+
+        def counting(*a, **kw):
+            calls["n"] += 1
+            return real(*a, **kw)
+
+        monkeypatch.setattr(find_mod, "locate", counting)
+        cfg = table.HKVConfig(capacity=2 * 128, dim=4)
+        state = table.create(cfg)
+        k = u64.from_uint64(np.arange(1, 65, dtype=np.uint64))
+        ops.find_or_insert(state, cfg, k, jnp.zeros((64, 4)), backend="jnp")
+        assert calls["n"] == 1  # the closure's own locate stage, nothing else
+
+    @pytest.mark.parametrize("dual", [False, True])
+    def test_kernel_path_probe_pass_budget(self, dual, monkeypatch):
+        """At most the closure's own passes: single-bucket = 1 locate_kernel,
+        dual = 2 fused upsert_probe passes (locate + target select).  The
+        pre-fix wrapper added 2 more locate passes on top."""
+        from repro.kernels import upsert_scan as _us
+
+        counts = {"locate": 0, "probe": 0}
+        real_lk, real_up = kops.locate_kernel, _us.upsert_probe
+
+        def clk(*a, **kw):
+            counts["locate"] += 1
+            return real_lk(*a, **kw)
+
+        def cup(*a, **kw):
+            counts["probe"] += 1
+            return real_up(*a, **kw)
+
+        monkeypatch.setattr(kops, "locate_kernel", clk)
+        monkeypatch.setattr(_us, "upsert_probe", cup)
+        cfg = table.HKVConfig(capacity=2 * 128, dim=4,
+                              buckets_per_key=2 if dual else 1)
+        state = table.create(cfg)
+        k = u64.from_uint64(np.arange(1, 65, dtype=np.uint64))
+        kops.find_or_insert_kernel(state, cfg, k, jnp.zeros((64, 4)),
+                                   interpret=True)
+        if dual:
+            assert (counts["locate"], counts["probe"]) == (0, 2)
+        else:
+            assert (counts["locate"], counts["probe"]) == (1, 0)
 
 
 def test_custom_scores_admission_parity():

@@ -31,7 +31,7 @@ def kv_per_s(batch: int, seconds: float) -> float:
     return batch / max(seconds, 1e-12)
 
 
-EMPTY_KEY = np.uint64(0xFFFFFFFFFFFFFFFF)
+from repro.core.u64 import EMPTY_KEY  # noqa: E402 — the one sentinel definition
 
 
 def make_insert_jit():

@@ -1,0 +1,120 @@
+"""Exp#6: continuous online serving — sustained throughput and hit rate
+under mixed trainer/server traffic (the paper's title scenario, Fig. 1).
+
+The `OnlineEmbeddingEngine` serves zipfian embedding lookups from a
+`TieredHKVTable` behind a `TablePublisher`, while an `OnlineTrainer`
+interleaves streaming find_or_insert + fused-session gradient updates and
+publishes whole handles — §3.5's reader/updater/inserter triple under
+real interleave, with eviction live at every structural op.
+
+Swept axes:
+  hot fraction       hot-tier capacity / cold capacity (as exp5);
+  update:read ratio  trainer steps per served wave (0.125 = one update
+                     per 8 waves; 0.5 = one per 2);
+  miss policy        'readonly' (find, promote=True — the best pure-read
+                     config) vs 'admit' (find_or_insert: served misses
+                     are admitted themselves).
+
+Reported per cell: steady-state hit rate (second half of the replay) and
+sustained KV/s through the engine (wave wall-clock, host timers).  The
+acceptance bar: the admit policy's hit rate >= the read-only policy's on
+the same zipfian replay — admission can only add residents the trainer
+alone would not have inserted.
+
+    PYTHONPATH=src python -m benchmarks.exp6_online            # full sweep
+    PYTHONPATH=src python -m benchmarks.exp6_online --smoke    # CI smoke
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv
+from repro.core import TieredHKVTable
+from repro.data import zipf_keys
+from repro.serving import (EmbeddingRequest, OnlineEmbeddingEngine,
+                           OnlineTrainer, TablePublisher)
+
+DIM = 16
+ALPHA = 1.05
+FULL = dict(cold_capacity=32 * 128, wave=1024, waves=32,
+            fracs=(0.125, 0.25), ratios=(0.125, 0.5))
+SMOKE = dict(cold_capacity=8 * 128, wave=256, waves=12,
+             fracs=(0.125, 0.25), ratios=(0.125, 0.5))
+
+
+def _drive(table, *, policy, ratio, wave, waves, serve_stream, train_stream):
+    """One engine+trainer replay; returns (hit_rate, hot_rate, kv_per_s,
+    published) with the rates over the second half of the replay (the
+    first half warms the tiers)."""
+    pub = TablePublisher(table)
+    trainer = OnlineTrainer(publisher=pub, publish_every=1, lr=0.1)
+    eng = OnlineEmbeddingEngine(
+        pub, wave_size=wave, miss_policy=policy,
+        promote=(policy == "readonly"),   # best pure-read config
+    )
+    grads = jnp.ones((wave, DIM), jnp.float32)
+    due = 0.0
+    for i in range(waves):
+        eng.submit(EmbeddingRequest(
+            rid=i, keys=serve_stream[i * wave:(i + 1) * wave]))
+        eng.step()
+        due += ratio
+        while due >= 1.0:    # update:read interleave
+            trainer.train_step(train_stream[i * wave:(i + 1) * wave], grads)
+            due -= 1.0
+    half = eng.reports[waves // 2:]
+    keys = sum(r.size for r in half)
+    hits = sum(r.hits for r in half)
+    hot = sum(r.hot_hits for r in half)
+    secs = sum(r.latency_s for r in half)
+    return (hits / max(keys, 1), hot / max(keys, 1),
+            keys / max(secs, 1e-12), pub.published)
+
+
+def run(csv: Csv | None = None, smoke: bool = False) -> Csv:
+    p = SMOKE if smoke else FULL
+    cold_cap, wave, waves = p["cold_capacity"], p["wave"], p["waves"]
+    tag = " [smoke]" if smoke else ""
+    csv = csv or Csv(
+        f"Exp#6 online serving: QPS & hit rate vs hot fraction × "
+        f"update:read ratio (zipf α={ALPHA}){tag}")
+    serve_rng = np.random.default_rng(7)
+    train_rng = np.random.default_rng(11)
+    # working set ~2x cold capacity: nothing fits anywhere (exp5 regime)
+    n = wave * waves
+    serve_stream = zipf_keys(serve_rng, n, ALPHA, 2 * cold_cap)
+    train_stream = zipf_keys(train_rng, n, ALPHA, 2 * cold_cap)
+
+    for frac in p["fracs"]:
+        hot_cap = max(128, int(cold_cap * frac) // 128 * 128)
+        for ratio in p["ratios"]:
+            cell = f"f={frac},u:r={ratio}"
+            rates = {}
+            for policy in ("readonly", "admit"):
+                table = TieredHKVTable.create(
+                    hot_capacity=hot_cap, cold_capacity=cold_cap, dim=DIM)
+                hr, hot_r, qps, published = _drive(
+                    table, policy=policy, ratio=ratio, wave=wave,
+                    waves=waves, serve_stream=serve_stream,
+                    train_stream=train_stream)
+                rates[policy] = hr
+                csv.row(f"tiered({cell})/{policy}_hit_rate", None,
+                        f"{hr*100:.1f}%,hot={hot_r*100:.1f}%,"
+                        f"published={published}")
+                csv.row(f"tiered({cell})/{policy}_qps", None,
+                        f"{qps/1e6:.2f}M-KV/s", kv_s=qps)
+            csv.row(f"tiered({cell})/admit_uplift", None,
+                    f"+{(rates['admit']-rates['readonly'])*100:.1f}pp,"
+                    "admit-vs-readonly")
+    return csv
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for the CI artifact run")
+    run(smoke=ap.parse_args().smoke)

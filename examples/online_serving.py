@@ -1,7 +1,15 @@
 """Online embedding serving under continuous ingestion — the paper's
-deployment scenario (Fig. 1): an inference path reading embeddings (reader
-role) interleaved with an online-training path ingesting new feature IDs
-(inserter role) against the SAME table at load factor 1.0.
+deployment scenario (Fig. 1), driven end-to-end through the serving
+stack: an `OnlineEmbeddingEngine` (reader role) serves zipfian lookups
+from a `TieredHKVTable` behind a `TablePublisher`, while an
+`OnlineTrainer` (updater + inserter roles) streams gradient updates
+against its private successor chain and publishes whole handles.
+Eviction runs live at every structural op; the engine's miss policy
+('admit') makes served misses admit themselves.
+
+The tail of the script shows the cross-process publication path: the
+served table is drained through `export_delta` and replayed into a fresh
+replica with `ingest_delta` — the multi-host publish seam.
 
     PYTHONPATH=src python examples/online_serving.py
 """
@@ -9,47 +17,66 @@ role) interleaved with an online-training path ingesting new feature IDs
 import numpy as np
 import jax.numpy as jnp
 
+from repro.core import HKVTable, TieredHKVTable
 from repro.data import zipf_keys
-from repro.embedding.dynamic import HKVEmbedding
-from repro.embedding.sparse_opt import SparseOptimizer
+from repro.serving import (EmbeddingRequest, OnlineEmbeddingEngine,
+                           OnlineTrainer, TablePublisher, export_delta,
+                           ingest_delta)
+
+DIM = 16
+WAVE = 512
+HOT, COLD = 8 * 128, 64 * 128
 
 
 def main():
-    emb = HKVEmbedding(
-        capacity=64 * 128, dim=16,
-        optimizer=SparseOptimizer("rowwise_adagrad", lr=0.1),
-        buckets_per_key=2, score_policy="lfu",  # LFU: best hit rate at α≈1 (Table 8)
+    table = TieredHKVTable.create(
+        hot_capacity=HOT, cold_capacity=COLD, dim=DIM,
+        score_policy="lfu",  # LFU: best hit rate at α≈1 (Table 8)
     )
-    table = emb.create()   # an HKVTable handle — the one surface for all roles
-    rng = np.random.default_rng(0)
+    pub = TablePublisher(table)
+    trainer = OnlineTrainer(publisher=pub, publish_every=2, lr=0.1)
+    eng = OnlineEmbeddingEngine(pub, wave_size=WAVE, miss_policy="admit")
+
     serve_rng = np.random.default_rng(1)
+    train_rng = np.random.default_rng(0)
+    key_space = 2 * COLD
+    grads = jnp.full((WAVE, DIM), 0.1, jnp.float32)
 
     hit_hist = []
-    for step in range(60):
-        # --- online training path: ingest a Zipfian batch (inserter) --------
-        train_keys = zipf_keys(rng, 1024, 0.99, 64 * emb.capacity)
-        toks = jnp.asarray(train_keys.astype(np.int64), jnp.int32)  # low bits
-        table, rows = emb.lookup_train(table, toks)
-        # one sparse-SGD step pulling embeddings toward a target
-        g = (rows - 1.0) * 0.1
-        table = emb.apply_grads(table, toks, g)
+    for step in range(40):
+        # --- online training path: zipfian batch (inserter + updater) -------
+        trainer.train_step(
+            zipf_keys(train_rng, WAVE, 1.05, key_space), grads)
 
-        # --- concurrent inference path: read-only lookups (reader) ----------
-        # (same low-32-bit token-id truncation as the training path)
-        serve_keys = zipf_keys(serve_rng, 2048, 0.99, 64 * emb.capacity)
-        hit = float(np.asarray(
-            table.contains(serve_keys.astype(np.uint32))
-        ).mean())
-        hit_hist.append(hit)
+        # --- concurrent serving path: wave-batched lookups (reader) ---------
+        eng.submit(EmbeddingRequest(
+            rid=step, keys=zipf_keys(serve_rng, WAVE, 1.05, key_space)))
+        r = eng.step()
+        hit_hist.append(r.hit_rate)
         if step % 10 == 9:
-            print(f"step {step:3d}: lf={float(table.load_factor()):.3f} "
-                  f"serve_hit_rate={100*np.mean(hit_hist[-10:]):.1f}%")
+            m = eng.metrics()
+            print(f"step {step:3d}: hit={100*np.mean(hit_hist[-10:]):5.1f}% "
+                  f"hot={100*m.hot_rate:5.1f}% kv/s={m.kv_per_s/1e3:6.1f}k "
+                  f"published=v{pub.version}")
 
-    lf = float(table.load_factor())
-    print(f"steady state: lf={lf:.3f}, hit-rate trend "
-          f"{100*np.mean(hit_hist[:10]):.1f}% -> {100*np.mean(hit_hist[-10:]):.1f}%")
-    assert lf > 0.99
+    m = eng.metrics()
+    print(f"steady state: hit-rate trend "
+          f"{100*np.mean(hit_hist[:10]):.1f}% -> "
+          f"{100*np.mean(hit_hist[-10:]):.1f}%, "
+          f"p99 wave latency {m.p99_latency_s*1e3:.1f} ms")
     assert np.mean(hit_hist[-10:]) > np.mean(hit_hist[:10])
+
+    # --- cross-process publish: export the hierarchy, replay into a replica --
+    delta = export_delta(pub.table)
+    replica = ingest_delta(HKVTable.create(capacity=HOT + COLD, dim=DIM),
+                           delta)
+    probe = zipf_keys(serve_rng, WAVE, 1.05, key_space)
+    src = pub.table.find(probe, promote=False)
+    dst = replica.find(probe)
+    agree = float(np.mean(np.asarray(src.found) == np.asarray(dst.found)))
+    print(f"delta publish: {delta.count} entries -> replica; "
+          f"probe membership agreement {100*agree:.1f}%")
+    assert agree > 0.95
     print("ok.")
 
 

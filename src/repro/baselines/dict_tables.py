@@ -16,8 +16,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import u64
-from repro.core.api import normalize_keys
+from repro.core.api import dedupe_keys, normalize_keys
+from repro.core.ops import ExportResult
 from repro.core.u64 import U64
+
+# Open-addressing DELETED marker (classic tombstone): not EMPTY — probe
+# chains continue past it — but claimable by inserts.  One uint64 point is
+# sacrificed from the key space, next to the EMPTY sentinel.
+TOMB_HI = np.uint32(0xFFFFFFFF)
+TOMB_LO = np.uint32(0xFFFFFFFE)
+
+
+def _is_tomb(keys: U64) -> jax.Array:
+    return (keys.hi == TOMB_HI) & (keys.lo == TOMB_LO)
 
 
 class InsertReport(NamedTuple):
@@ -71,50 +82,12 @@ class OpenAddressingTable:
             return ((h1 + d.astype(jnp.uint32)) & (c - np.uint32(1))).astype(jnp.int32)
         return ((h1 + d.astype(jnp.uint32)) % c).astype(jnp.int32)
 
-    def insert(self, state: OAState, keys: U64, values: jax.Array) -> InsertReport:
-        """Batched linear-probe insert, resolving intra-batch claims like the
-        CAS race it emulates: lowest batch index wins a contested slot."""
-        n = keys.hi.shape[0]
-        valid = ~u64.is_empty(keys)
+    def _probe(self, state: OAState, keys: U64):
+        """Scan each key's probe chain until the key or a true EMPTY slot.
 
-        def cond(carry):
-            state, placed, failed, d, probes = carry
-            return jnp.any(~placed & ~failed) & (d < self.max_probe)
-
-        def body(carry):
-            state, placed, failed, d, probes = carry
-            active = ~placed & ~failed
-            dist = jnp.where(active, d, 0)
-            slot = self._slot(keys, dist)
-            occ_hi, occ_lo = state.key_hi[slot], state.key_lo[slot]
-            occ_key = U64(occ_hi, occ_lo)
-            probes = probes + active.astype(jnp.int32)
-            is_self = u64.eq(occ_key, keys) & active      # update in place
-            is_empty = u64.is_empty(occ_key) & active
-            # claim resolution: among batch entries claiming the same empty
-            # slot this round, the lowest batch index wins (CAS emulation)
-            idx = jnp.arange(n, dtype=jnp.int32)
-            claim_slot = jnp.where(is_empty, slot, self.capacity)
-            winner = jnp.full((self.capacity + 1,), n, jnp.int32).at[claim_slot].min(idx)
-            won = is_empty & (winner[jnp.clip(claim_slot, 0, self.capacity)] == idx)
-            write = is_self | won
-            wslot = jnp.where(write, slot, self.capacity)
-            state = OAState(
-                key_hi=state.key_hi.at[wslot].set(keys.hi, mode="drop"),
-                key_lo=state.key_lo.at[wslot].set(keys.lo, mode="drop"),
-                values=state.values.at[wslot].set(values, mode="drop"),
-            )
-            placed = placed | write
-            d = d + 1
-            return state, placed, failed, d, probes
-
-        placed0 = ~valid
-        failed0 = jnp.zeros_like(placed0)
-        carry = (state, placed0, failed0, jnp.int32(0), jnp.zeros((n,), jnp.int32))
-        state, placed, failed, _, probes = jax.lax.while_loop(cond, body, carry)
-        return InsertReport(state=state, ok=placed, probes=probes)
-
-    def find(self, state: OAState, keys: U64) -> FindReport:
+        Tombstones (deleted slots) do NOT stop the scan — the key may live
+        beyond one — but remain claimable by `insert`.  Returns
+        (found, slot, probes)."""
         n = keys.hi.shape[0]
         valid = ~u64.is_empty(keys)
 
@@ -143,8 +116,85 @@ class OpenAddressingTable:
             jnp.zeros((n,), jnp.int32),
         )
         done, found, slot_at, _, probes = jax.lax.while_loop(cond, body, carry)
+        return found, slot_at, probes
+
+    def insert(self, state: OAState, keys: U64, values: jax.Array) -> InsertReport:
+        """Batched linear-probe insert, resolving intra-batch claims like the
+        CAS race it emulates: lowest batch index wins a contested slot.
+
+        Two phases, like a real tombstone-aware OA table: a full probe pass
+        first (so an existing key beyond a tombstone updates in place rather
+        than duplicating into the tombstone), then a claim loop over
+        empty-or-tombstone slots for the remaining misses.
+
+        Probe accounting: the structural cost is ONE chain scan per key —
+        a real implementation remembers the first free slot during that
+        scan — so only the phase-1 probes count; the claim loop re-walks
+        already-scanned slots and adds none (keeps `avg_probes`
+        comparable with the paper's single-scan metric, exp1)."""
+        n = keys.hi.shape[0]
+        valid = ~u64.is_empty(keys)
+        found, fslot, probes = self._probe(state, keys)
+        urow = jnp.where(found, fslot, self.capacity)
+        state = state._replace(
+            values=state.values.at[urow].set(values, mode="drop"))
+
+        def cond(carry):
+            state, placed, d = carry
+            return jnp.any(~placed) & (d < self.max_probe)
+
+        def body(carry):
+            state, placed, d = carry
+            active = ~placed
+            dist = jnp.where(active, d, 0)
+            slot = self._slot(keys, dist)
+            occ_key = U64(state.key_hi[slot], state.key_lo[slot])
+            is_self = u64.eq(occ_key, keys) & active      # a round-winner's write
+            free = (u64.is_empty(occ_key) | _is_tomb(occ_key)) & active
+            # claim resolution: among batch entries claiming the same free
+            # slot this round, the lowest batch index wins (CAS emulation)
+            idx = jnp.arange(n, dtype=jnp.int32)
+            claim_slot = jnp.where(free, slot, self.capacity)
+            winner = jnp.full((self.capacity + 1,), n, jnp.int32).at[claim_slot].min(idx)
+            won = free & (winner[jnp.clip(claim_slot, 0, self.capacity)] == idx)
+            write = is_self | won
+            wslot = jnp.where(write, slot, self.capacity)
+            state = OAState(
+                key_hi=state.key_hi.at[wslot].set(keys.hi, mode="drop"),
+                key_lo=state.key_lo.at[wslot].set(keys.lo, mode="drop"),
+                values=state.values.at[wslot].set(values, mode="drop"),
+            )
+            placed = placed | write
+            d = d + 1
+            return state, placed, d
+
+        carry = (state, ~valid | found, jnp.int32(0))
+        state, placed, _ = jax.lax.while_loop(cond, body, carry)
+        return InsertReport(state=state, ok=placed, probes=probes)
+
+    def find(self, state: OAState, keys: U64) -> FindReport:
+        found, slot_at, probes = self._probe(state, keys)
         vals = jnp.where(found[:, None], state.values[slot_at], 0.0)
         return FindReport(values=vals, found=found, probes=probes)
+
+    def assign(self, state: OAState, keys: U64, values: jax.Array) -> OAState:
+        """Write values of existing keys in place; misses are no-ops."""
+        found, slot, _probes = self._probe(state, keys)
+        row = jnp.where(found, slot, self.capacity)
+        return state._replace(
+            values=state.values.at[row].set(values, mode="drop"))
+
+    def erase(self, state: OAState, keys: U64) -> OAState:
+        """Tombstone found keys (probe chains through them stay intact)."""
+        found, slot, _probes = self._probe(state, keys)
+        row = jnp.where(found, slot, self.capacity)
+        n = keys.hi.shape[0]
+        return OAState(
+            key_hi=state.key_hi.at[row].set(jnp.full((n,), TOMB_HI), mode="drop"),
+            key_lo=state.key_lo.at[row].set(jnp.full((n,), TOMB_LO), mode="drop"),
+            values=state.values.at[row].set(
+                jnp.zeros((n, self.dim), state.values.dtype), mode="drop"),
+        )
 
 
 # =============================================================================
@@ -272,6 +322,48 @@ class BucketedP2CTable:
         vals = jnp.where(found[:, None], state.values[jnp.clip(row, 0, self.capacity - 1)], 0.0)
         return FindReport(values=vals, found=found, probes=probes)
 
+    def _locate(self, state: P2CState, keys: U64):
+        """(found, row) over both candidate buckets."""
+        valid = ~u64.is_empty(keys)
+        b1, b2 = self._buckets(keys)
+        h1, s1 = self._match(state, b1, keys)
+        h2, s2 = self._match(state, b2, keys)
+        found = (h1 | h2) & valid
+        row = jnp.where(h1, b1 * self.slots + s1, b2 * self.slots + s2)
+        return found, row
+
+    def assign(self, state: P2CState, keys: U64, values: jax.Array) -> P2CState:
+        """Write values of existing keys in place; misses are no-ops."""
+        found, row = self._locate(state, keys)
+        return state._replace(values=state.values.at[
+            jnp.where(found, row, self.capacity)
+        ].set(values, mode="drop"))
+
+    def erase(self, state: P2CState, keys: U64) -> P2CState:
+        """Remove found keys, then re-pack every bucket densely: `insert`
+        places new entries at slot index == occupancy count, so freed slots
+        must compact toward slot 0 (the invariant a sequential CAS table
+        keeps by swapping with the last live slot)."""
+        found, row = self._locate(state, keys)
+        w = jnp.where(found, row, self.capacity)
+        b, s = self.num_buckets, self.slots
+        key_hi = state.key_hi.reshape(-1).at[w].set(u64.EMPTY_HI, mode="drop")
+        key_lo = state.key_lo.reshape(-1).at[w].set(u64.EMPTY_LO, mode="drop")
+        values = state.values.at[w].set(
+            jnp.zeros((keys.hi.shape[0], self.dim), state.values.dtype),
+            mode="drop")
+        key_hi, key_lo = key_hi.reshape(b, s), key_lo.reshape(b, s)
+        # stable per-bucket compaction: live slots first, order preserved
+        order = jnp.argsort(u64.is_empty(U64(key_hi, key_lo)),
+                            axis=1, stable=True)
+        rows = (jnp.arange(b, dtype=jnp.int32)[:, None] * s
+                + order.astype(jnp.int32)).reshape(-1)
+        return P2CState(
+            key_hi=jnp.take_along_axis(key_hi, order, axis=1),
+            key_lo=jnp.take_along_axis(key_lo, order, axis=1),
+            values=values[rows],
+        )
+
 
 # =============================================================================
 # KVTable-protocol handle over either baseline (repro.core.api.KVTable)
@@ -281,6 +373,14 @@ class BucketedP2CTable:
 class DictUpsert(NamedTuple):
     table: "DictKVTable"
     ok: jax.Array       # bool [N] — placement success (dictionary semantics)
+    probes: jax.Array   # int32 [N]
+
+
+class DictFindOrInsert(NamedTuple):
+    table: "DictKVTable"
+    values: jax.Array   # [N, dim] — stored row on hit, init row otherwise
+    found: jax.Array    # bool [N] — key existed before the op
+    ok: jax.Array       # bool [N] — key present after the op
     probes: jax.Array   # int32 [N]
 
 
@@ -335,9 +435,53 @@ class DictKVTable:
         return self.impl.find(self.state, normalize_keys(keys))
 
     def insert_or_assign(self, keys, values) -> DictUpsert:
-        rep = self.impl.insert(self.state, normalize_keys(keys), values)
-        return DictUpsert(table=self.with_state(rep.state), ok=rep.ok,
-                          probes=rep.probes)
+        # handle-level dedupe (last writer wins), matching the HKV closure's
+        # batch contract: the batched claim emulations below would otherwise
+        # place within-batch duplicates twice
+        k = normalize_keys(keys)
+        d = dedupe_keys(k)
+        rep = self.impl.insert(self.state, d.unique, values[d.last_index])
+        return DictUpsert(table=self.with_state(rep.state),
+                          ok=rep.ok[d.inverse] & ~u64.is_empty(k),
+                          probes=rep.probes[d.inverse])
+
+    def find_or_insert(self, keys, init_values) -> DictFindOrInsert:
+        """Lookup; insert `init_values` for missing keys (no admission
+        control: dictionary semantics — a full table FAILS the insert and
+        `ok` is False where the key is absent afterwards)."""
+        k = normalize_keys(keys)
+        d = dedupe_keys(k)
+        f = self.impl.find(self.state, d.unique)
+        init_u = init_values[d.last_index]
+        miss = ~f.found & ~u64.is_empty(d.unique)
+        mk = U64(jnp.where(miss, d.unique.hi, jnp.uint32(u64.EMPTY_HI)),
+                 jnp.where(miss, d.unique.lo, jnp.uint32(u64.EMPTY_LO)))
+        rep = self.impl.insert(self.state, mk, init_u)
+        vals_u = jnp.where(f.found[:, None], f.values, init_u)
+        valid = ~u64.is_empty(k)
+        return DictFindOrInsert(
+            table=self.with_state(rep.state),
+            values=vals_u[d.inverse],
+            found=f.found[d.inverse] & valid,
+            ok=(f.found | rep.ok)[d.inverse] & valid,
+            # one chain scan per key (the insert's internal probe pass
+            # re-walks the slots this find already scanned)
+            probes=f.probes[d.inverse],
+        )
+
+    def assign(self, keys, values) -> "DictKVTable":
+        """Updater: write values of existing keys; misses are no-ops."""
+        k = normalize_keys(keys)
+        d = dedupe_keys(k)
+        return self.with_state(
+            self.impl.assign(self.state, d.unique, values[d.last_index]))
+
+    def erase(self, keys) -> "DictKVTable":
+        return self.with_state(
+            self.impl.erase(self.state, normalize_keys(keys)))
+
+    def clear(self) -> "DictKVTable":
+        return self.with_state(self.impl.create())
 
     def contains(self, keys) -> jax.Array:
         return self.find(keys).found
@@ -345,8 +489,44 @@ class DictKVTable:
     def size(self) -> jax.Array:
         khi = self.state.key_hi
         klo = self.state.key_lo
-        live = ~u64.is_empty(U64(khi, klo))
+        k = U64(khi, klo)
+        live = ~u64.is_empty(k) & ~_is_tomb(k)
         return jnp.sum(live.astype(jnp.int32))
 
     def load_factor(self) -> jax.Array:
         return self.size().astype(jnp.float32) / float(self.capacity)
+
+    # -- export (checkpoint/publisher path) ------------------------------------
+
+    @property
+    def num_buckets(self) -> int:
+        """Export-view bucket count (OA: 128-slot chunks of the flat array;
+        P2C: its native 16-slot buckets)."""
+        if isinstance(self.impl, BucketedP2CTable):
+            return self.impl.num_buckets
+        return -(-self.capacity // _OA_EXPORT_SLOTS)
+
+    def export_batch(self, bucket_start: int, bucket_count: int) -> ExportResult:
+        """Stream a contiguous bucket range (dictionary tables carry no
+        scores — the score planes export as zeros)."""
+        if isinstance(self.impl, BucketedP2CTable):
+            s = self.impl.slots
+            sl = slice(bucket_start, bucket_start + bucket_count)
+            khi = self.state.key_hi[sl].reshape(-1)
+            klo = self.state.key_lo[sl].reshape(-1)
+            rows = self.state.values[bucket_start * s:
+                                     (bucket_start + bucket_count) * s]
+        else:
+            sl = slice(bucket_start * _OA_EXPORT_SLOTS,
+                       (bucket_start + bucket_count) * _OA_EXPORT_SLOTS)
+            khi = self.state.key_hi[sl]
+            klo = self.state.key_lo[sl]
+            rows = self.state.values[sl]
+        k = U64(khi, klo)
+        zeros = jnp.zeros(khi.shape, jnp.uint32)
+        return ExportResult(key_hi=khi, key_lo=klo, values=rows,
+                            score_hi=zeros, score_lo=zeros,
+                            mask=~u64.is_empty(k) & ~_is_tomb(k))
+
+
+_OA_EXPORT_SLOTS = 128

@@ -250,6 +250,11 @@ class HKVTable:
     def dim(self) -> int:
         return self.cfg.dim
 
+    @property
+    def num_buckets(self) -> int:
+        """Export-space bucket count (the `export_batch` iteration bound)."""
+        return self.cfg.num_buckets
+
     def keys(self, keys: Any) -> U64:
         """Expose the normalization point (useful for pre-normalizing once)."""
         return normalize_keys(keys)

@@ -471,7 +471,10 @@ def accum_or_assign(
     # phase 2: structural insert of the remaining misses with the summed value
     cs = None
     if custom_scores is not None:
-        cs = U64(custom_scores.hi[d.idx_sorted], custom_scores.lo[d.idx_sorted])
+        # last-writer-wins on duplicate lanes' customs, matching the
+        # insert_or_assign convention: each sorted slot takes its group's
+        # LAST original occurrence (idx_sorted would take the first)
+        cs = U64(custom_scores.hi[d.last_index], custom_scores.lo[d.last_index])
     res = merge_mod.upsert(
         state2, cfg, d.unique, v_sum, custom_scores=cs, write_hit_values=False
     )

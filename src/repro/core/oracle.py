@@ -21,9 +21,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.u64 import hash_pair_np
-
-EMPTY = np.uint64(0xFFFFFFFFFFFFFFFF)
+from repro.core.u64 import EMPTY_KEY as EMPTY, hash_pair_np
 
 
 @dataclasses.dataclass
@@ -182,6 +180,65 @@ class OracleTable:
                 vals.append(np.array(init_values[i]))
         return st, np.stack(vals) if vals else np.zeros((0, self.dim))
 
+    def accum_or_assign(self, keys, values, customs=None):
+        """Mirrors `ops.accum_or_assign` (the one-shot gradient upsert):
+        within-batch duplicates of a key are pre-SUMMED; one += applies on
+        hit — with the score updated at count=1, because the engine's
+        phase-2 upsert sees the deduped batch — and misses insert the sum,
+        admission-controlled in canonical order."""
+        self.clock += 1
+        sums: Dict[int, list] = {}
+        for i, k in enumerate(keys):
+            k = int(k)
+            if k == int(EMPTY):
+                continue
+            if k not in sums:
+                sums[k] = [np.zeros_like(np.asarray(values[i], np.float64)), None]
+            sums[k][0] = sums[k][0] + np.asarray(values[i], np.float64)
+            sums[k][1] = None if customs is None else int(customs[i])
+        status = {}
+        misses = []
+        for k, (vsum, cust) in sums.items():
+            b = self.locate(k)
+            if b is not None:
+                e = self.buckets[b][k]
+                e.value = (np.asarray(e.value, np.float64) + vsum).astype(
+                    np.asarray(e.value).dtype)
+                e.score = self.update_score(e.score, 1, cust)
+                status[k] = 1
+            else:
+                misses.append((k, vsum, cust))
+        scored = []
+        for k, vsum, cust in misses:
+            b1, b2 = self.route(k)
+            s = self.init_score(1, cust)
+            if self.dual:
+                o1, o2 = len(self.buckets[b1]), len(self.buckets[b2])
+                if o1 < self.slots or o2 < self.slots:
+                    tb = b2 if o2 < o1 else b1
+                else:
+                    m1 = min(e.score for e in self.buckets[b1].values())
+                    m2 = min(e.score for e in self.buckets[b2].values())
+                    tb = b2 if m2 < m1 else b1
+            else:
+                tb = b1
+            scored.append((tb, s, k, vsum))
+        scored.sort(key=lambda t: (t[0], -t[1], t[2]))
+        for tb, s, k, vsum in scored:
+            bucket = self.buckets[tb]
+            if len(bucket) < self.slots:
+                bucket[k] = OracleEntry(k, s, vsum.astype(np.float32))
+                status[k] = 2
+                continue
+            victim = min(bucket.values(), key=lambda e: (e.score, e.key))
+            if s > victim.score:
+                del bucket[victim.key]
+                bucket[k] = OracleEntry(k, s, vsum.astype(np.float32))
+                status[k] = 3
+            else:
+                status[k] = 4
+        return [status.get(int(k), 0) for k in keys]
+
     def find(self, keys):
         found, vals = [], []
         for k in keys:
@@ -200,11 +257,18 @@ class OracleTable:
             if b is not None:
                 self.buckets[b][int(k)].value = np.array(values[i])
 
+    def contains(self, keys):
+        return np.array([self.locate(int(k)) is not None for k in keys])
+
     def erase(self, keys):
         for k in keys:
             b = self.locate(int(k))
             if b is not None:
                 del self.buckets[b][int(k)]
+
+    def clear(self):
+        """Drop every entry; the clock/epoch survive (the table contract)."""
+        self.buckets = [dict() for _ in range(self.num_buckets)]
 
     def size(self) -> int:
         return sum(len(b) for b in self.buckets)

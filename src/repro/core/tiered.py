@@ -284,6 +284,41 @@ class TieredHKVTable:
     def load_factor(self) -> jax.Array:
         return self.size().astype(jnp.float32) / float(self.capacity)
 
+    @property
+    def num_buckets(self) -> int:
+        """Export-space bucket count: hot buckets first, then cold —
+        `export_batch` iterates one concatenated bucket index space."""
+        return self.hot.num_buckets + self.cold.num_buckets
+
+    def export_batch(self, bucket_start: int,
+                     bucket_count: int) -> ops_mod.ExportResult:
+        """Stream a contiguous range of the CONCATENATED bucket space
+        (hot buckets [0, H), cold buckets [H, H+C)) — the checkpoint /
+        publisher-delta read path.
+
+        Inclusive-on-access duplicates are resolved in the hot tier's
+        favor: a cold entry whose key is hot-resident is masked out, since
+        its cold copy may be stale (write-back only freshens it on
+        demotion, DESIGN.md §2.5).  The extra hot membership probe is a
+        checkpoint-path cost, not a hot-path one."""
+        hot_b = self.hot.num_buckets
+        end = bucket_start + bucket_count
+        parts = []
+        if bucket_start < hot_b:
+            parts.append(self.hot.export_batch(
+                bucket_start, min(end, hot_b) - bucket_start))
+        if end > hot_b:
+            c0 = max(bucket_start - hot_b, 0)
+            c = self.cold.export_batch(c0, end - hot_b - c0)
+            dup = self.hot.contains(U64(c.key_hi, c.key_lo))
+            parts.append(c._replace(mask=c.mask & ~dup))
+        if len(parts) == 1:
+            return parts[0]
+        h, c = parts
+        return ops_mod.ExportResult(*[
+            jnp.concatenate([a, b]) for a, b in zip(h, c)
+        ])
+
     # -- the demotion cascade ------------------------------------------------
 
     def _demote(self, cold: HKVTable, keys: U64, values: jax.Array,
@@ -343,9 +378,15 @@ class TieredHKVTable:
         )
 
     def find_or_insert(self, keys: Any, init_values: jax.Array,
+                       custom_scores: Optional[Any] = None,
                        ) -> TieredFindOrInsert:
         """The training-path op: lookup across the hierarchy, admit
         misses, promote cold hits.
+
+        `custom_scores` feeds the HOT tier's admission (meaningful under
+        its 'custom' policy — the delta-ingest path; other policies stamp
+        their own).  Caller scores apply to every lane, including
+        promoted cold hits.
 
         Per key: hot hit -> stored hot row (scores touched).  Hot miss
         but cold hit -> the cold row is re-admitted into the hot tier
@@ -357,6 +398,7 @@ class TieredHKVTable:
         conservation counters).
         """
         k = normalize_keys(keys)
+        cs = _opt_keys(custom_scores)
         # ONE hot probe: shared with the upsert closure through the PR-2
         # loc= seam (locate output depends only on the key plane, which
         # the cold reads below never touch)
@@ -369,7 +411,7 @@ class TieredHKVTable:
         init_full = ops_mod.pad_rows(init_values, self.hot.state.values)
         admit_rows = jnp.where(cold_hit[:, None], cold_rows.rows, init_full)
         res = ops_mod.find_or_insert(
-            self.hot.state, self.hot.cfg, k, admit_rows,
+            self.hot.state, self.hot.cfg, k, admit_rows, custom_scores=cs,
             backend=self.hot.backend, return_evicted=True, loc=pre,
         )
         hot = self.hot.with_state(res.state)
@@ -378,7 +420,8 @@ class TieredHKVTable:
         # cold tier, and re-demoting it would overwrite its accumulated
         # cold score with a fresh count-1 init (each rejected re-access
         # would make the key MORE evictable — exactly backwards)
-        dk, dv, ds, dm = self._displaced(k, admit_rows, res, first=first,
+        dk, dv, ds, dm = self._displaced(k, admit_rows, res, rej_custom=cs,
+                                         first=first,
                                          already_cold=cold_hit)
         dem = self._demote(self.cold, dk, dv, ds, dm)
         return TieredFindOrInsert(
@@ -441,14 +484,16 @@ class TieredHKVTable:
                      jnp.where(st.mask, st.score_lo, rej_sc.lo))
         return keys, vals, scores, st.mask | rej
 
-    def ingest(self, keys: Any, init_values: jax.Array) -> TieredUpsert:
+    def ingest(self, keys: Any, init_values: jax.Array,
+               custom_scores: Optional[Any] = None) -> TieredUpsert:
         """Deferred-structural admit (the overlapped-ingest schedule):
         find_or_insert without the value readback.  Runs the FULL
         hierarchy motion — a cold-resident key must be PROMOTED, not
         shadowed by a fresh init row in hot (which would hide its trained
         value from every later read).  The readback is dead code XLA
         eliminates under jit."""
-        r = self.find_or_insert(keys, init_values)
+        r = self.find_or_insert(keys, init_values,
+                                custom_scores=custom_scores)
         return TieredUpsert(table=r.table, status=r.status,
                             demoted=r.demoted, dropped=r.dropped, ok=r.ok)
 

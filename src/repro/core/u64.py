@@ -26,6 +26,9 @@ UINT32_MASK = np.uint64(0xFFFFFFFF)
 # EMPTY and LOCKED sentinels; the batch-synchronous TPU design needs no LOCKED).
 EMPTY_HI = np.uint32(0xFFFFFFFF)
 EMPTY_LO = np.uint32(0xFFFFFFFF)
+# The same sentinel as one host-side uint64 (the padding value callers put
+# in raw numpy key arrays) — the ONE definition every layer imports.
+EMPTY_KEY = np.uint64(0xFFFFFFFFFFFFFFFF)
 # Digest stored in empty slots. Any value is *correct* (key compare resolves
 # false positives); 0xFF is reserved-looking and aids debugging.
 EMPTY_DIGEST = np.uint8(0xFF)

@@ -212,6 +212,34 @@ class ShardedHKVEmbedding:
         ovf = jnp.sum((key_slot < 0) & ~u64.is_empty(d.unique))
         return res.table.state, status, ovf
 
+    def _assign_body(self, n_shards, cap, state, khi, klo, values):
+        """Updater: route caller values to owners; owner-side assign (write
+        existing keys only — misses are no-ops, the flat-table contract)."""
+        axis = self.axis_names
+        local = self.local_embedding(n_shards)
+        d = dedupe_keys(U64(khi, klo))
+        send_hi, send_lo, key_slot = self._route(d.unique, n_shards, cap)
+        v_u = values[d.last_index]
+        vbuf = jnp.zeros((n_shards * cap, values.shape[1]), values.dtype).at[
+            jnp.where(key_slot >= 0, key_slot, n_shards * cap)
+        ].set(v_u, mode="drop")
+        recv_hi = jax.lax.all_to_all(send_hi, axis, 0, 0, tiled=True)
+        recv_lo = jax.lax.all_to_all(send_lo, axis, 0, 0, tiled=True)
+        recv_v = jax.lax.all_to_all(vbuf.reshape(n_shards, cap, -1), axis, 0, 0,
+                                    tiled=True).reshape(n_shards * cap, -1)
+        rk = U64(recv_hi.reshape(-1), recv_lo.reshape(-1))
+        return local.wrap(state).assign(rk, recv_v).state
+
+    def _erase_body(self, n_shards, cap, state, khi, klo):
+        """Structural: route keys to owners; owner-side erase."""
+        axis = self.axis_names
+        local = self.local_embedding(n_shards)
+        send_hi, send_lo, _slot = self._route(U64(khi, klo), n_shards, cap)
+        recv_hi = jax.lax.all_to_all(send_hi, axis, 0, 0, tiled=True)
+        recv_lo = jax.lax.all_to_all(send_lo, axis, 0, 0, tiled=True)
+        rk = U64(recv_hi.reshape(-1), recv_lo.reshape(-1))
+        return local.wrap(state).erase(rk).state
+
     # -- public API (call under `with mesh:` inside jit) ---------------------
 
     def create_sharded(self, mesh):
@@ -329,6 +357,42 @@ class ShardedHKVEmbedding:
             check_vma=False,
         )(state, keys.hi, keys.lo, values)
         return state, status, jnp.sum(ovf)
+
+    def assign_keys(self, mesh, state, keys: U64, values):
+        """Key-level updater: values routed to owner shards; misses no-op."""
+        n_shards = int(np.prod([mesh.shape[a] for a in self.axis_names]))
+        dp = self._dp_axes(mesh)
+        per_shard = max(keys.hi.shape[0] // max(np.prod([mesh.shape[a] for a in dp]), 1), 1)
+        cap = self._cap(per_shard, n_shards)
+
+        def body(state, khi, klo, v):
+            return self._assign_body(n_shards, cap, state, khi, klo, v)
+
+        specs = self.state_specs()
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(specs, P(dp), P(dp), P(dp, None)),
+            out_specs=specs,
+            check_vma=False,
+        )(state, keys.hi, keys.lo, values)
+
+    def erase_keys(self, mesh, state, keys: U64):
+        """Key-level structural erase routed to owner shards."""
+        n_shards = int(np.prod([mesh.shape[a] for a in self.axis_names]))
+        dp = self._dp_axes(mesh)
+        per_shard = max(keys.hi.shape[0] // max(np.prod([mesh.shape[a] for a in dp]), 1), 1)
+        cap = self._cap(per_shard, n_shards)
+
+        def body(state, khi, klo):
+            return self._erase_body(n_shards, cap, state, khi, klo)
+
+        specs = self.state_specs()
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(specs, P(dp), P(dp)),
+            out_specs=specs,
+            check_vma=False,
+        )(state, keys.hi, keys.lo)
 
     def apply_grads(self, mesh, state, tokens, grads):
         n_shards = int(np.prod([mesh.shape[a] for a in self.axis_names]))
@@ -480,6 +544,30 @@ class ShardedHKVTable:
         )
         return ShardedFindOrInsert(table=self.with_state(state), values=values,
                                    found=found, overflow=ovf)
+
+    def assign(self, keys, values) -> "ShardedHKVTable":
+        """Updater: write values of existing keys (misses no-op).  Keys
+        beyond the per-destination routing budget are dropped (same
+        overflow contract as every routed op; they surface in the next
+        op's `overflow` metric rather than here)."""
+        return self.with_state(self.semb.assign_keys(
+            self.mesh, self.state, normalize_keys(keys), values))
+
+    def erase(self, keys) -> "ShardedHKVTable":
+        return self.with_state(self.semb.erase_keys(
+            self.mesh, self.state, normalize_keys(keys)))
+
+    def clear(self) -> "ShardedHKVTable":
+        local = self.semb.local_embedding(self.n_shards)
+        specs = self.semb.state_specs()
+
+        def body(state):
+            return local.wrap(state).clear().state
+
+        return self.with_state(shard_map(
+            body, mesh=self.mesh, in_specs=(specs,), out_specs=specs,
+            check_vma=False,
+        )(self.state))
 
     def contains(self, keys) -> jax.Array:
         # pure reader: no miss-path promotion on tiered shards (a

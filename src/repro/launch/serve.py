@@ -1,7 +1,17 @@
-"""Serving launcher: batched prefill + decode loop over a small model.
+"""Serving launcher.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
-      --batch 4 --prompt-len 32 --decode-steps 16
+Default mode drives the paper's title scenario: an `OnlineEmbeddingEngine`
+serving zipfian embedding lookups from a `TieredHKVTable` behind a
+`TablePublisher`, with an `OnlineTrainer` interleaving streaming updates
+(the §3.5 reader/updater/inserter triple under live eviction):
+
+  PYTHONPATH=src python -m repro.launch.serve --smoke \
+      --waves 16 --wave-size 256 --miss-policy admit
+
+`--mode lm` keeps the LM prefill+decode loop over a small model:
+
+  PYTHONPATH=src python -m repro.launch.serve --mode lm --arch qwen2-0.5b \
+      --smoke --batch 4 --prompt-len 32 --decode-steps 16
 """
 
 from __future__ import annotations
@@ -12,14 +22,88 @@ import time
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--mode", choices=("embedding", "lm"), default="embedding")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    # embedding mode
+    ap.add_argument("--hot-capacity", type=int, default=16 * 128)
+    ap.add_argument("--cold-capacity", type=int, default=128 * 128)
+    ap.add_argument("--dim", type=int, default=16)
+    ap.add_argument("--wave-size", type=int, default=1024)
+    ap.add_argument("--waves", type=int, default=64)
+    ap.add_argument("--miss-policy", choices=("readonly", "admit"),
+                    default="admit")
+    ap.add_argument("--no-promote", action="store_true",
+                    help="readonly waves stay pure readers (no tiered "
+                         "miss-path promotion)")
+    ap.add_argument("--zipf-alpha", type=float, default=1.05)
+    ap.add_argument("--update-read-ratio", type=float, default=0.25,
+                    help="trainer steps per served wave")
+    # lm mode
+    ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode-steps", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.mode == "lm":
+        return _lm_main(args)
+    return _embedding_main(args)
 
+
+def _embedding_main(args):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import TieredHKVTable
+    from repro.data import zipf_keys
+    from repro.serving import (EmbeddingRequest, OnlineEmbeddingEngine,
+                               OnlineTrainer, TablePublisher)
+
+    if args.smoke:
+        args.hot_capacity = min(args.hot_capacity, 4 * 128)
+        args.cold_capacity = min(args.cold_capacity, 16 * 128)
+        args.wave_size = min(args.wave_size, 256)
+        args.waves = min(args.waves, 12)
+
+    table = TieredHKVTable.create(
+        hot_capacity=args.hot_capacity, cold_capacity=args.cold_capacity,
+        dim=args.dim)
+    pub = TablePublisher(table)
+    trainer = OnlineTrainer(publisher=pub, publish_every=1)
+    eng = OnlineEmbeddingEngine(
+        pub, wave_size=args.wave_size, miss_policy=args.miss_policy,
+        promote=not args.no_promote)
+
+    serve_rng = np.random.default_rng(args.seed)
+    train_rng = np.random.default_rng(args.seed + 1)
+    key_space = 2 * args.cold_capacity
+    grads = jnp.ones((args.wave_size, args.dim), jnp.float32)
+
+    due = 0.0
+    for i in range(args.waves):
+        eng.submit(EmbeddingRequest(
+            rid=i,
+            keys=zipf_keys(serve_rng, args.wave_size, args.zipf_alpha,
+                           key_space)))
+        r = eng.step()
+        due += args.update_read_ratio
+        while due >= 1.0:
+            trainer.train_step(
+                zipf_keys(train_rng, args.wave_size, args.zipf_alpha,
+                          key_space), grads)
+            due -= 1.0
+        if (i + 1) % max(args.waves // 4, 1) == 0:
+            print(f"[serve] wave {i+1:4d}: hit={r.hit_rate*100:5.1f}% "
+                  f"kv/s={r.kv_per_s/1e3:.1f}k v{r.table_version}")
+    m = eng.metrics()
+    print(f"[serve] {m.waves} waves, {m.keys} keys: hit={m.hit_rate*100:.1f}% "
+          f"hot={m.hot_rate*100:.1f}% kv/s={m.kv_per_s/1e3:.1f}k "
+          f"p50={m.p50_latency_s*1e3:.1f}ms p99={m.p99_latency_s*1e3:.1f}ms "
+          f"published={pub.published} offered={pub.offered}")
+    return m
+
+
+def _lm_main(args):
     import jax
     import jax.numpy as jnp
     import numpy as np

@@ -1,1 +1,23 @@
+"""Serving layer: the LM wave engine and the online embedding engine.
+
+`OnlineEmbeddingEngine` (+ the publisher's `TablePublisher` /
+`OnlineTrainer` / delta helpers) is the paper's continuous-online-storage
+read path; `ServingEngine` is the LM decode wave engine.
+"""
+
 from repro.serving.engine import ServingEngine  # noqa: F401
+from repro.serving.embedding_engine import (  # noqa: F401
+    EmbeddingRequest,
+    EngineMetrics,
+    OnlineEmbeddingEngine,
+    WaveReport,
+)
+from repro.serving.publisher import (  # noqa: F401
+    OnlineTrainer,
+    StaticSource,
+    TableDelta,
+    TablePublisher,
+    TableSource,
+    export_delta,
+    ingest_delta,
+)

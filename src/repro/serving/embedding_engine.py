@@ -1,0 +1,299 @@
+"""OnlineEmbeddingEngine — the paper's title scenario as a serving loop.
+
+Continuous online embedding storage (§1, Fig. 1) means a table that is
+read under heavy traffic WHILE an online trainer keeps ingesting and
+updating — the read-heavy regime the abstract's headline numbers describe
+(3.9 B-KV/s `find`, stable across load factors).  This engine is that
+read path, built over ANY `KVTable` handle:
+
+  * `HKVTable` (jnp or kernel backend) — the flat cache-semantic table;
+  * `TieredHKVTable` — hot-HBM/cold-hmem hierarchy (DESIGN.md §2.5);
+  * `ShardedHKVTable` — the same contract over a device mesh;
+  * `DictKVTable` — the dictionary-semantic baselines, for A/B runs.
+
+Wave-batched admission: requests (batches of feature ids) queue and are
+packed into fixed-size WAVES of `wave_size` key lanes (EMPTY-padded), so
+every wave hits one jit cache entry; a request larger than a wave spans
+several.  One wave = one device launch = one host-timed latency sample.
+
+Miss policy (the §3.5 role the read path plays):
+
+  'readonly'  the wave runs `find` — READER role.  Misses return the
+              engine's default row (zeros or a caller hook).  On tiered /
+              sharded-tiered tables the `promote` flag threads through to
+              `find(promote=...)`: promotion re-admits cold hits into the
+              hot tier (structural motion on the read path — the
+              inclusive-on-access cache), while `promote=False` keeps the
+              wave a pure reader.
+  'admit'     the wave runs `find_or_insert` — INSERTER role: misses are
+              admitted (with the default row as init), so a re-accessed
+              key is a hit from its second wave on.  This is the serving
+              half of continuous ingestion; at λ=1.0 admission evicts
+              low-score entries in place.
+
+Tables are drawn from a `TableSource` (see `repro.serving.publisher`) at
+WAVE granularity: each wave reads the source once and — when the policy
+mutated the table (admission / promotion) — publishes the successor back.
+A snapshot-consistent trainer publishes whole handles; a wave therefore
+never observes a half-published table (the consistency model documented
+at DESIGN.md §Serving).
+
+Metrics: per-wave hit rate, keys/s, and host-timer latency; `metrics()`
+aggregates totals plus p50/p99 wave latency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import u64
+from repro.core.tiered import TieredHKVTable
+from repro.core.u64 import U64
+from repro.serving.publisher import StaticSource, TableSource
+
+MISS_POLICIES = ("readonly", "admit")
+
+
+# =============================================================================
+# Requests and metrics
+# =============================================================================
+
+
+@dataclasses.dataclass
+class EmbeddingRequest:
+    """One lookup request: a batch of feature ids awaiting embedding rows."""
+
+    rid: int
+    keys: np.ndarray                    # uint64 [n] feature ids
+    values: Optional[np.ndarray] = None  # float32 [n, dim] — filled on completion
+    found: Optional[np.ndarray] = None   # bool [n]
+    done: bool = False
+
+
+class WaveReport(NamedTuple):
+    size: int           # live key lanes served (padding excluded)
+    hits: int
+    latency_s: float    # host-timed wall clock of the wave launch
+    table_version: int  # publisher version the wave was served from
+    hot_hits: int = 0   # lanes served from the HOT tier (tiered readonly
+                        # waves; == hits elsewhere)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.size, 1)
+
+    @property
+    def kv_per_s(self) -> float:
+        return self.size / max(self.latency_s, 1e-12)
+
+
+class EngineMetrics(NamedTuple):
+    waves: int
+    keys: int
+    hits: int
+    hit_rate: float
+    hot_rate: float     # hot-tier serve fraction (== hit_rate off-tier)
+    kv_per_s: float     # total keys / total wave wall-clock
+    p50_latency_s: float
+    p99_latency_s: float
+
+
+# =============================================================================
+# The engine
+# =============================================================================
+
+
+class OnlineEmbeddingEngine:
+    """Wave-batched embedding lookups over any `KVTable` handle.
+
+        table = TieredHKVTable.create(hot_capacity=8*128,
+                                      cold_capacity=64*128, dim=16)
+        eng = OnlineEmbeddingEngine(table, wave_size=512,
+                                    miss_policy="admit")
+        eng.submit(EmbeddingRequest(rid=0, keys=ids))
+        eng.run_until_drained()
+        print(eng.metrics())
+
+    `table=` may instead be a `TableSource` (e.g. `TablePublisher`), in
+    which case every wave serves from the source's latest published
+    handle — the train→serve coupling.  `default_row(keys_u64) -> [n,dim]`
+    overrides the zero miss-fallback and the admit policy's init rows —
+    except on SHARDED tables, whose admit path recomputes init rows
+    owner-side from the key (caller rows are not routed); there the hook
+    covers only the readonly fallback.
+    """
+
+    def __init__(self, table: Any, *, wave_size: int,
+                 miss_policy: str = "readonly",
+                 promote: Optional[bool] = None,
+                 default_row: Optional[Callable[[U64], jax.Array]] = None):
+        if miss_policy not in MISS_POLICIES:
+            raise ValueError(
+                f"miss_policy {miss_policy!r}; one of {MISS_POLICIES}")
+        self.source: TableSource = (
+            table if isinstance(table, TableSource) else StaticSource(table))
+        self.wave_size = wave_size
+        self.miss_policy = miss_policy
+        self.promote = promote
+        self._default_row = default_row
+        self._queue: deque = deque()      # (request, key offset)
+        self._wave_fn = None              # jitted per engine (one cache entry)
+        self._mutates = False             # resolved with the wave fn
+        self.completed: list = []
+        self.reports: list[WaveReport] = []
+
+    # -- admission -------------------------------------------------------------
+
+    def submit(self, req: EmbeddingRequest):
+        req.values = None
+        req.found = None
+        req.done = False
+        self._queue.append((req, 0))
+
+    def _admit_wave(self):
+        """Pack queued requests into one EMPTY-padded wave of `wave_size`
+        lanes.  Returns (keys uint64 [wave_size], segments) where segments
+        maps lane ranges back to (request, offset)."""
+        lanes = np.full(self.wave_size, _EMPTY_KEY, np.uint64)
+        segments = []
+        used = 0
+        while self._queue and used < self.wave_size:
+            req, off = self._queue.popleft()
+            take = min(len(req.keys) - off, self.wave_size - used)
+            lanes[used:used + take] = req.keys[off:off + take]
+            segments.append((req, off, used, take))
+            used += take
+            if off + take < len(req.keys):   # request spans into the next wave
+                self._queue.appendleft((req, off + take))
+        return lanes, segments, used
+
+    # -- the wave step ---------------------------------------------------------
+
+    def _build_wave_fn(self, table):
+        policy, promote = self.miss_policy, self.promote
+        is_tiered = isinstance(table, TieredHKVTable)
+        # late import: serving must not pull the distributed layer in for
+        # single-device tables
+        try:
+            from repro.distributed.table_sharding import ShardedHKVTable
+            is_sharded = isinstance(table, ShardedHKVTable)
+        except Exception:  # pragma: no cover - distributed layer unavailable
+            is_sharded = False
+        default_row = self._default_row or (
+            lambda k: jnp.zeros((k.hi.shape[0], table.dim), jnp.float32))
+        # Does this policy mutate the table?  Static: admission always
+        # does; a readonly wave only via tiered/sharded promotion.  (An
+        # identity check on the jit output would not work — jit rebuilds
+        # the handle object even when the state is unchanged.)
+        self._mutates = (policy == "admit"
+                         or (bool(promote) and (is_tiered or is_sharded)))
+
+        def wave(table, kh, kl):
+            k = U64(kh, kl)
+            init = default_row(k)
+            if policy == "admit":
+                if is_sharded:
+                    # owner shards recompute init rows from the key (the
+                    # routed protocol: caller init is not shipped), so the
+                    # returned rows ARE the stored rows — `default_row`
+                    # applies only to the readonly fallback here
+                    r = table.find_or_insert(k)
+                    vals = r.values
+                else:
+                    r = table.find_or_insert(k, init)
+                    vals = r.values
+                return r.table, vals, r.found, r.found
+            # readonly: READER role — default-row fallback on miss
+            if is_tiered or is_sharded:
+                r = table.find(k, promote=bool(promote))
+                succ = r.table if promote else table
+            else:
+                r = table.find(k)
+                succ = table
+            vals = jnp.where(r.found[:, None], r.values[:, : table.dim], init)
+            return succ, vals, r.found, getattr(r, "hot_hit", r.found)
+
+        if is_sharded:
+            return wave   # shard_map ops jit internally; outer jit is per-mesh
+        return jax.jit(wave)
+
+    def step(self) -> Optional[WaveReport]:
+        """Serve one wave; returns its report (None when the queue is idle)."""
+        if not self._queue:
+            return None
+        lanes, segments, used = self._admit_wave()
+        version, table = self.source.snapshot()   # ONE read: wave-consistent
+        if self._wave_fn is None:
+            self._wave_fn = self._build_wave_fn(table)
+        k = u64.from_uint64(lanes)
+        t0 = time.perf_counter()
+        succ, vals, found, hot = self._wave_fn(table, k.hi, k.lo)
+        vals, found, hot = jax.block_until_ready((vals, found, hot))
+        dt = time.perf_counter() - t0
+        if self._mutates:         # admission / promotion built a successor
+            self.source.offer(version, succ)
+        vals = np.asarray(vals)
+        found = np.asarray(found)
+        hot = np.asarray(hot)
+        for req, off, lane0, take in segments:
+            if req.values is None:
+                req.values = np.zeros((len(req.keys), vals.shape[1]),
+                                      vals.dtype)
+                req.found = np.zeros(len(req.keys), bool)
+            req.values[off:off + take] = vals[lane0:lane0 + take]
+            req.found[off:off + take] = found[lane0:lane0 + take]
+            if off + take == len(req.keys):
+                req.done = True
+                self.completed.append(req)
+        live = ~_is_empty_np(lanes[:used])
+        report = WaveReport(size=int(live.sum()),
+                            hits=int(found[:used][live].sum()),
+                            latency_s=dt, table_version=version,
+                            hot_hits=int(hot[:used][live].sum()))
+        self.reports.append(report)
+        return report
+
+    def run_until_drained(self, max_waves: int = 100_000) -> list:
+        for _ in range(max_waves):
+            if self.step() is None:
+                break
+        return self.completed
+
+    # -- metrics ---------------------------------------------------------------
+
+    def metrics(self, *, skip_warmup: bool = True) -> EngineMetrics:
+        """Aggregate wave reports.  Counts (waves/keys/hits and the rates)
+        cover EVERY wave; the timing aggregates (kv_per_s, p50/p99) skip
+        the first wave by default — it pays the jit compile and would
+        otherwise dominate the percentiles (`skip_warmup=False` keeps it;
+        per-wave numbers incl. the compile wave stay in `self.reports`)."""
+        if not self.reports:
+            return EngineMetrics(0, 0, 0, 0.0, 0.0, 0.0, 0.0, 0.0)
+        keys = sum(r.size for r in self.reports)
+        hits = sum(r.hits for r in self.reports)
+        timed = (self.reports[1:] if skip_warmup and len(self.reports) > 1
+                 else self.reports)
+        lat = np.array([r.latency_s for r in timed])
+        tkeys = sum(r.size for r in timed)
+        return EngineMetrics(
+            waves=len(self.reports), keys=keys, hits=hits,
+            hit_rate=hits / max(keys, 1),
+            hot_rate=sum(r.hot_hits for r in self.reports) / max(keys, 1),
+            kv_per_s=tkeys / max(float(lat.sum()), 1e-12),
+            p50_latency_s=float(np.percentile(lat, 50)),
+            p99_latency_s=float(np.percentile(lat, 99)),
+        )
+
+
+_EMPTY_KEY = u64.EMPTY_KEY
+
+
+def _is_empty_np(keys: np.ndarray) -> np.ndarray:
+    return keys == _EMPTY_KEY

@@ -1,0 +1,262 @@
+"""Train→serve publication: snapshot-consistent table hand-off.
+
+The §3.5 triple-group taxonomy under REAL interleave: an online trainer
+(updater + inserter roles) keeps mutating its working table while the
+serving engine (reader role, `repro.serving.embedding_engine`) reads.
+Handles are immutable pytrees, so publication is trivially atomic — a
+single Python reference swap of a `(version, table)` tuple.  A reader
+that snapshots once per wave can never observe a half-published table:
+either it gets the pre-publish handle (whole) or the post-publish handle
+(whole).  There is no state in between to observe.
+
+Two publication paths:
+
+  handle swap   same-process: `publish(table)` swaps the snapshot tuple.
+                The engine's miss-path admissions flow back through
+                `offer(version, table)` — a compare-and-swap that the
+                trainer's own publication beats (admission effects on the
+                read path are advisory; the trainer republishes promptly
+                and re-admission costs one miss).
+  delta export  cross-process: `export_delta(table)` drains the table
+                through `export_batch` into a picklable numpy
+                `TableDelta`; `ingest_delta(table, delta)` replays it via
+                `ingest` (admission-controlled, scores carried as custom
+                where the destination policy accepts them).  This is the
+                multi-host publish seam — the transport (files, RPC) is
+                the caller's.
+
+`OnlineTrainer` is the reference updater: find_or_insert admission (the
+step's single structural op) + a fused read-modify-write session
+(`update_rows`, ONE shared locate) per gradient batch, publishing every
+`publish_every` steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, NamedTuple, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import u64
+from repro.core.u64 import U64
+
+
+# =============================================================================
+# Table sources — what the engine reads from
+# =============================================================================
+
+
+@runtime_checkable
+class TableSource(Protocol):
+    """Wave-granular table supply: `snapshot()` returns `(version, table)`
+    atomically; `offer(version, table)` hands a read-path successor back
+    (admission/promotion effects), applied only if `version` is still
+    current."""
+
+    def snapshot(self) -> tuple: ...
+
+    def offer(self, version: int, table: Any) -> bool: ...
+
+
+class StaticSource:
+    """Single-writer source: the engine owns the table (no trainer).
+    Offers always apply — there is nobody to race with."""
+
+    def __init__(self, table: Any):
+        self._snap = (0, table)
+
+    def snapshot(self) -> tuple:
+        return self._snap
+
+    def offer(self, version: int, table: Any) -> bool:
+        self._snap = (version + 1, table)
+        return True
+
+    @property
+    def table(self) -> Any:
+        return self._snap[1]
+
+
+class TablePublisher:
+    """The train→serve hand-off point.
+
+    The trainer calls `publish(table)`; the engine calls `snapshot()` once
+    per wave and `offer(...)` when its own policy mutated the table.  The
+    snapshot tuple is swapped under a lock (offers need compare-and-swap);
+    readers are lock-free — tuple read is atomic under the GIL and the
+    tuple itself is immutable.
+    """
+
+    def __init__(self, table: Any):
+        self._snap = (0, table)
+        self._lock = threading.Lock()
+        self.published = 0           # trainer publications
+        self.offered = 0             # engine offers accepted
+        self.rejected_offers = 0     # engine offers beaten by a publish
+
+    def snapshot(self) -> tuple:
+        return self._snap
+
+    @property
+    def version(self) -> int:
+        return self._snap[0]
+
+    @property
+    def table(self) -> Any:
+        return self._snap[1]
+
+    def publish(self, table: Any) -> int:
+        """Unconditional swap (the trainer wins races); returns the new
+        version."""
+        with self._lock:
+            v = self._snap[0] + 1
+            self._snap = (v, table)
+            self.published += 1
+            return v
+
+    def offer(self, version: int, table: Any) -> bool:
+        """Compare-and-swap from the read path: applies only if the reader's
+        snapshot is still current (a concurrent `publish` supersedes the
+        offered admission effects — they are advisory; see module doc)."""
+        with self._lock:
+            if self._snap[0] != version:
+                self.rejected_offers += 1
+                return False
+            self._snap = (version + 1, table)
+            self.offered += 1
+            return True
+
+
+# =============================================================================
+# The delta path — export_batch → ingest, cross-process publishable
+# =============================================================================
+
+
+class TableDelta(NamedTuple):
+    """Host-side (numpy, picklable) live-entry dump of a table."""
+
+    keys: np.ndarray     # uint64 [n]
+    values: np.ndarray   # float32 [n, total_value_dim]
+    scores: np.ndarray   # uint64 [n]
+
+    @property
+    def count(self) -> int:
+        return int(self.keys.shape[0])
+
+
+def export_delta(table: Any, *, chunk_buckets: int = 64) -> TableDelta:
+    """Drain a table's live entries through `export_batch` in
+    `chunk_buckets`-bucket chunks (any handle exposing
+    `num_buckets`/`export_batch`: flat, tiered — whose concatenated bucket
+    space dedupes inclusive copies — or the dict baselines)."""
+    ks, vs, ss = [], [], []
+    nb = table.num_buckets
+    for start in range(0, nb, chunk_buckets):
+        exp = table.export_batch(start, min(chunk_buckets, nb - start))
+        mask = np.asarray(exp.mask)
+        if not mask.any():
+            continue
+        hi = np.asarray(exp.key_hi, np.uint64)[mask]
+        lo = np.asarray(exp.key_lo, np.uint64)[mask]
+        shi = np.asarray(exp.score_hi, np.uint64)[mask]
+        slo = np.asarray(exp.score_lo, np.uint64)[mask]
+        ks.append((hi << np.uint64(32)) | lo)
+        ss.append((shi << np.uint64(32)) | slo)
+        vs.append(np.asarray(exp.values)[mask])
+    if not ks:
+        width = getattr(table, "dim", 0)
+        return TableDelta(keys=np.zeros(0, np.uint64),
+                          values=np.zeros((0, width), np.float32),
+                          scores=np.zeros(0, np.uint64))
+    return TableDelta(keys=np.concatenate(ks),
+                      values=np.concatenate(vs).astype(np.float32),
+                      scores=np.concatenate(ss))
+
+
+def ingest_delta(table: Any, delta: TableDelta, *, batch: int = 1024,
+                 carry_scores: bool = False) -> Any:
+    """Replay a delta into any inserter-capable handle via `ingest`
+    (admission-controlled: the destination's cache semantics decide what
+    sticks — the cross-process analogue of the demotion cascade's
+    boundary).  `carry_scores=True` forwards the exported scores as custom
+    scores; only meaningful when the destination runs the 'custom' policy
+    (other policies stamp their own, `translate_scores` semantics)."""
+    dim = delta.values.shape[1] if delta.values.ndim == 2 else 0
+    for start in range(0, delta.count, batch):
+        kb = delta.keys[start:start + batch]
+        vb = delta.values[start:start + batch]
+        sb = delta.scores[start:start + batch]
+        if len(kb) < batch:   # constant shapes: one jit entry per delta
+            pad = batch - len(kb)
+            kb = np.concatenate([kb, np.full(pad, _EMPTY_KEY, np.uint64)])
+            vb = np.concatenate([vb, np.zeros((pad, dim), vb.dtype)])
+            sb = np.concatenate([sb, np.zeros(pad, np.uint64)])
+        kw = {}
+        if carry_scores:
+            kw["custom_scores"] = u64.from_uint64(sb)
+        res = table.ingest(u64.from_uint64(kb), jnp.asarray(vb), **kw)
+        table = res.table
+    return table
+
+
+# =============================================================================
+# OnlineTrainer — the reference updater/inserter loop
+# =============================================================================
+
+
+@dataclasses.dataclass
+class OnlineTrainer:
+    """Streaming trainer against a private successor chain, publishing
+    whole handles.
+
+    One `train_step(keys, grads)`:
+      1. `find_or_insert` admits the step's keys (INSERTER — the single
+         structural op; on a tiered table this also promotes cold hits);
+      2. a session `update_rows` applies `update_fn(rows, grads)` over the
+         same key batch (UPDATER — fused gather+write-back, one locate);
+      3. every `publish_every` steps the successor handle is published.
+
+    `update_fn(rows, grads) -> rows` sees full-width rows [n, dim+aux];
+    the default is plain SGD on the embedding columns.
+    """
+
+    publisher: TablePublisher
+    publish_every: int = 1
+    lr: float = 0.1
+    update_fn: Optional[Callable] = None
+    steps: int = 0
+
+    def __post_init__(self):
+        self._table = self.publisher.table
+
+    @property
+    def table(self) -> Any:
+        return self._table
+
+    def train_step(self, keys: Any, grads: jax.Array) -> Any:
+        t = self._table
+        dim = grads.shape[1]
+        init = jnp.zeros((grads.shape[0], dim), jnp.float32)
+        res = t.find_or_insert(keys, init)
+        t = res.table
+        fn = self.update_fn or (
+            lambda rows, g: rows.at[:, :dim].add(-self.lr * g))
+        s = t.session()
+        s.update_rows(keys, lambda rows: fn(rows, grads))
+        t = s.commit()
+        self._table = t
+        self.steps += 1
+        if self.steps % self.publish_every == 0:
+            self.publish()
+        return t
+
+    def publish(self) -> int:
+        """Swap the trainer's current successor in as the served table."""
+        return self.publisher.publish(self._table)
+
+
+_EMPTY_KEY = u64.EMPTY_KEY

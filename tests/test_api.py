@@ -1,6 +1,7 @@
 """HKVTable handle API: pytree/jit compatibility, key normalization,
-op-session fusion parity, KVTable protocol conformance, and the satellite
-regressions (accum_or_assign status order, tier-aware export)."""
+op-session fusion parity, and the satellite regressions (accum_or_assign
+status order, tier-aware export).  KVTable protocol conformance lives in
+the parametrized suite, tests/test_kvtable_conformance.py."""
 
 import dataclasses
 
@@ -9,10 +10,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.baselines import DictKVTable
 from repro.core import (
     HKVTable,
-    KVTable,
     U64,
     dedupe_keys,
     normalize_keys,
@@ -395,55 +394,5 @@ class TestDedupeKeys:
         assert int(np.asarray(d.last_index)[inv[0]]) == 2
 
 
-# =============================================================================
-# KVTable protocol conformance — one harness, three implementations
-# =============================================================================
-
-
-def _protocol_roundtrip(table):
-    """The single code path the benchmarks use, over any KVTable."""
-    assert isinstance(table, KVTable)
-    keys = np.arange(1, 65, dtype=np.uint64)
-    vals = jnp.broadcast_to(jnp.arange(64, dtype=jnp.float32)[:, None],
-                            (64, table.dim)) + 1.0
-    rep = table.insert_or_assign(keys, vals)
-    assert bool(np.asarray(rep.ok).all())
-    table = rep.table
-    assert int(table.size()) == 64
-    assert 0.0 < float(table.load_factor()) <= 1.0
-    f = table.find(keys)
-    assert bool(np.asarray(f.found).all())
-    np.testing.assert_allclose(np.asarray(f.values), np.asarray(vals))
-    miss = table.find(np.arange(1000, 1010, dtype=np.uint64))
-    assert not bool(np.asarray(miss.found).any())
-    np.testing.assert_array_equal(np.asarray(miss.values), 0.0)
-    assert bool(np.asarray(table.contains(keys)).all())
-    return table
-
-
-class TestKVTableProtocol:
-    def test_hkv(self):
-        _protocol_roundtrip(HKVTable.create(capacity=4 * 128, dim=3))
-
-    def test_open_addressing(self):
-        _protocol_roundtrip(DictKVTable.open_addressing(512, 3))
-
-    def test_bucketed_p2c(self):
-        _protocol_roundtrip(DictKVTable.bucketed_p2c(512, 3))
-
-    @pytest.mark.slow  # shard_map compiles per op: ~2 min on CPU
-    def test_sharded(self):
-        from repro.distributed.table_sharding import ShardedHKVTable
-        from repro.embedding.dynamic import HKVEmbedding
-        from repro.embedding.sparse_opt import SparseOptimizer
-
-        mesh = jax.make_mesh((1,), ("data",))
-        table = ShardedHKVTable.create(
-            mesh,
-            HKVEmbedding(capacity=4 * 128, dim=3,
-                         optimizer=SparseOptimizer("sgd")),
-        )
-        table = _protocol_roundtrip(table)
-        # the sharded extras: admission-controlled find_or_insert
-        r = table.find_or_insert(np.arange(1, 65, dtype=np.uint64))
-        assert bool(np.asarray(r.found).all())  # all present from the insert
+# KVTable protocol conformance now lives in ONE parametrized suite over
+# every implementation: tests/test_kvtable_conformance.py.

@@ -1,0 +1,313 @@
+"""Stateful differential fuzz: random op sequences vs the sequential oracle.
+
+Random mixed op sequences — insert_or_assign / find / find_or_insert /
+assign / accum_or_assign / erase / clear, with duplicate keys, EMPTY
+padding, wide (high-plane) keys, and mixed caller key FORMS (numpy
+uint64, signed int64 with negative-as-padding, python int lists) — replay
+against `core.oracle.OracleTable` on BOTH inserter backends (pure jnp and
+the fused Pallas path in interpret mode).
+
+After every op the full table state is drained and compared: key set,
+values, AND scores must match the oracle exactly — any divergence is a
+bug in the table code (the oracle is the spec; fixes land in the engine,
+never by weakening the oracle).
+
+Two drivers over ONE harness:
+  * a hypothesis `RuleBasedStateMachine` (the fuzzer proper; skipped
+    cleanly where hypothesis is absent, like the other property tests);
+  * a seeded deterministic replay that always runs, so the differential
+    harness itself is exercised in every environment.
+
+Key forms go through `normalize_keys` (the production entry point); the
+normalized planes then feed module-level jitted op wrappers so each
+(op, backend) pair compiles once across all examples.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ops
+from repro.core.api import HKVTable, normalize_keys
+from repro.core.oracle import OracleTable
+from repro.core.u64 import U64
+
+try:
+    from hypothesis import settings
+    from hypothesis import strategies as st
+    from hypothesis.stateful import RuleBasedStateMachine, invariant, rule
+
+    HAVE_HYPOTHESIS = True
+except ImportError:       # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+CAP = 2 * 128
+DIM = 4
+LANES = 16                      # fixed batch width: one jit entry per op
+EMPTY = np.uint64(0xFFFFFFFFFFFFFFFF)
+POLICY = "lru"
+DUAL = 2
+
+
+# -- jitted op wrappers (state flows; cfg/backend ride the handle aux) --------
+
+
+@jax.jit
+def _upsert(t, kh, kl, v):
+    r = t.insert_or_assign(U64(kh, kl), v)
+    return r.table, r.status
+
+
+@jax.jit
+def _foi(t, kh, kl, init):
+    r = t.find_or_insert(U64(kh, kl), init)
+    return r.table, r.values, r.found, r.status
+
+
+@jax.jit
+def _find(t, kh, kl):
+    r = t.find(U64(kh, kl))
+    return r.values, r.found
+
+
+@jax.jit
+def _assign(t, kh, kl, v):
+    return t.assign(U64(kh, kl), v)
+
+
+@jax.jit
+def _accum(t, kh, kl, v):
+    r = t.accum_or_assign(U64(kh, kl), v)
+    return r.table, r.status
+
+
+@jax.jit
+def _erase(t, kh, kl):
+    return t.erase(U64(kh, kl))
+
+
+@jax.jit
+def _clear(t):
+    return t.clear()
+
+
+@jax.jit
+def _export(t):
+    return t.export_batch(0, CAP // 128)
+
+
+# =============================================================================
+# The differential harness (hypothesis-free)
+# =============================================================================
+
+
+class DifferentialHarness:
+    """One table+oracle pair; each op asserts result parity, and
+    `check_state()` asserts full-contents parity (keys, values, scores)."""
+
+    def __init__(self, backend: str):
+        self.table = HKVTable.create(
+            capacity=CAP, dim=DIM, buckets_per_key=DUAL,
+            score_policy=POLICY, backend=backend)
+        self.oracle = OracleTable(CAP, DIM, buckets_per_key=DUAL,
+                                  policy=POLICY)
+
+    @staticmethod
+    def _planes(caller):
+        k = normalize_keys(caller)               # the production entry point
+        return k.hi, k.lo
+
+    def upsert(self, canonical, caller, v):
+        self.table, status = _upsert(self.table, *self._planes(caller),
+                                     jnp.asarray(v))
+        want = self.oracle.insert_or_assign(canonical, v)
+        assert np.array_equal(np.asarray(status), np.asarray(want, np.int8))
+
+    def find_or_insert(self, canonical, caller, v):
+        self.table, vals, found, status = _foi(
+            self.table, *self._planes(caller), jnp.asarray(v))
+        want_st, want_vals = self.oracle.find_or_insert(canonical, v)
+        assert np.array_equal(np.asarray(status), np.asarray(want_st, np.int8))
+        assert np.array_equal(np.asarray(found),
+                              np.asarray(want_st, np.int8) == 1)
+        assert np.array_equal(np.asarray(vals), want_vals.astype(np.float32))
+
+    def find(self, canonical, caller):
+        vals, found = _find(self.table, *self._planes(caller))
+        want_found, want_vals = self.oracle.find(canonical)
+        assert np.array_equal(np.asarray(found), want_found)
+        assert np.array_equal(np.asarray(vals), want_vals.astype(np.float32))
+
+    def assign(self, canonical, caller, v):
+        self.table = _assign(self.table, *self._planes(caller), jnp.asarray(v))
+        self.oracle.assign(canonical, v)
+
+    def accum(self, canonical, caller, v):
+        self.table, status = _accum(self.table, *self._planes(caller),
+                                    jnp.asarray(v))
+        want = self.oracle.accum_or_assign(canonical, v)
+        assert np.array_equal(np.asarray(status), np.asarray(want, np.int8))
+
+    def erase(self, canonical, caller):
+        self.table = _erase(self.table, *self._planes(caller))
+        self.oracle.erase(canonical)
+
+    def clear(self):
+        self.table = _clear(self.table)
+        self.oracle.clear()
+
+    def check_state(self):
+        exp = _export(self.table)
+        mask = np.asarray(exp.mask)
+        keys = ((np.asarray(exp.key_hi, np.uint64) << np.uint64(32))
+                | np.asarray(exp.key_lo, np.uint64))
+        scores = ((np.asarray(exp.score_hi, np.uint64) << np.uint64(32))
+                  | np.asarray(exp.score_lo, np.uint64))
+        vals = np.asarray(exp.values)
+        got = {int(k): (int(s), vals[i, :DIM])
+               for i, (k, s, m) in enumerate(zip(keys, scores, mask)) if m}
+        want = {k: (int(e.score), np.asarray(e.value, np.float32)[:DIM])
+                for k, e in self.oracle.items()}
+        assert set(got) == set(want), (
+            f"key sets diverge: extra={sorted(set(got) - set(want))[:8]} "
+            f"missing={sorted(set(want) - set(got))[:8]}")
+        for k, (s, v) in got.items():
+            ws, wv = want[k]
+            assert s == ws, f"score diverges at key {k}: {s} != {ws}"
+            assert np.array_equal(v, wv.astype(np.float32)), \
+                f"value diverges at key {k}: {v} != {wv}"
+        assert int(ops.size(self.table.state)) == self.oracle.size()
+
+
+def to_caller_form(ids, form: str):
+    """ids: python ints, negative = padding lane.  Returns (canonical
+    uint64 [LANES], the caller-form key argument)."""
+    ids = list(ids) + [-1] * (LANES - len(ids))
+    canonical = np.array([EMPTY if i < 0 else np.uint64(i) for i in ids],
+                         np.uint64)
+    if form == "uint64":
+        return canonical, canonical.copy()
+    if form == "signed":
+        return canonical, np.array(ids, np.int64)
+    return canonical, list(ids)
+
+
+OPS = ("upsert", "find_or_insert", "find", "assign", "accum", "erase",
+       "clear")
+FORMS = ("uint64", "signed", "list")
+
+
+# =============================================================================
+# Driver 1: seeded deterministic replay (always runs)
+# =============================================================================
+
+
+@pytest.mark.parametrize("backend", ["jnp", "kernel"])
+def test_seeded_differential_replay(backend):
+    rng = np.random.default_rng(2026)
+    h = DifferentialHarness(backend)
+    for step in range(60):
+        op = OPS[rng.integers(0, len(OPS))] if step % 17 == 16 else \
+            OPS[rng.integers(0, len(OPS) - 1)]   # clear is rare
+        n = int(rng.integers(1, LANES + 1))
+        ids = [int(x) for x in rng.integers(-2, 61, size=n)]
+        if rng.random() < 0.2:   # wide keys: the high plane
+            ids[0] = int(rng.integers(2**32, 2**32 + 5))
+        canonical, caller = to_caller_form(
+            ids, FORMS[rng.integers(0, len(FORMS))])
+        v = (rng.integers(0, 6, size=(LANES, 1)).astype(np.float32)
+             * np.ones((1, DIM), np.float32))
+        if op == "upsert":
+            h.upsert(canonical, caller, v)
+        elif op == "find_or_insert":
+            h.find_or_insert(canonical, caller, v)
+        elif op == "find":
+            h.find(canonical, caller)
+        elif op == "assign":
+            h.assign(canonical, caller, v)
+        elif op == "accum":
+            h.accum(canonical, caller, v)
+        elif op == "erase":
+            h.erase(canonical, caller)
+        else:
+            h.clear()
+        h.check_state()
+
+
+# =============================================================================
+# Driver 2: hypothesis stateful machine (the fuzzer proper)
+# =============================================================================
+
+if HAVE_HYPOTHESIS:
+    _SMALL = st.integers(0, 60)                  # collision-heavy pool
+    _WIDE = st.integers(2**32, 2**32 + 4)        # exercises the high plane
+    _PAD = st.just(-1)                           # padding lane
+
+    @st.composite
+    def key_batch(draw):
+        n = draw(st.integers(1, LANES))
+        ids = draw(st.lists(st.one_of(_SMALL, _WIDE, _PAD),
+                            min_size=n, max_size=n))
+        return to_caller_form(ids, draw(st.sampled_from(FORMS)))
+
+    @st.composite
+    def value_batch(draw):
+        vals = draw(st.lists(st.integers(0, 5),
+                             min_size=LANES, max_size=LANES))
+        return (np.array(vals, np.float32)[:, None]
+                * np.ones((1, DIM), np.float32))
+
+    class DifferentialMachine(RuleBasedStateMachine):
+        backend = "jnp"
+
+        def __init__(self):
+            super().__init__()
+            self.h = DifferentialHarness(self.backend)
+
+        @rule(kb=key_batch(), v=value_batch())
+        def upsert(self, kb, v):
+            self.h.upsert(kb[0], kb[1], v)
+
+        @rule(kb=key_batch(), v=value_batch())
+        def find_or_insert(self, kb, v):
+            self.h.find_or_insert(kb[0], kb[1], v)
+
+        @rule(kb=key_batch())
+        def find(self, kb):
+            self.h.find(kb[0], kb[1])
+
+        @rule(kb=key_batch(), v=value_batch())
+        def assign(self, kb, v):
+            self.h.assign(kb[0], kb[1], v)
+
+        @rule(kb=key_batch(), v=value_batch())
+        def accum(self, kb, v):
+            self.h.accum(kb[0], kb[1], v)
+
+        @rule(kb=key_batch())
+        def erase(self, kb):
+            self.h.erase(kb[0], kb[1])
+
+        @rule()
+        def clear(self):
+            self.h.clear()
+
+        @invariant()
+        def table_matches_oracle(self):
+            self.h.check_state()
+
+    class JnpDifferential(DifferentialMachine):
+        backend = "jnp"
+
+    class KernelDifferential(DifferentialMachine):
+        backend = "kernel"
+
+    # >= 25 examples total in the default (non-slow) suite
+    _SETTINGS = settings(max_examples=15, stateful_step_count=10,
+                         deadline=None, print_blob=True)
+
+    TestJnpDifferential = JnpDifferential.TestCase
+    TestJnpDifferential.settings = _SETTINGS
+    TestKernelDifferential = KernelDifferential.TestCase
+    TestKernelDifferential.settings = _SETTINGS

@@ -1,0 +1,295 @@
+"""OnlineEmbeddingEngine + publisher: miss-policy matrix, swap atomicity,
+metrics sanity against the oracle, and the delta publication path."""
+
+import threading
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import HKVTable, TieredHKVTable
+from repro.core.oracle import OracleTable
+from repro.serving import (EmbeddingRequest, OnlineEmbeddingEngine,
+                           OnlineTrainer, StaticSource, TablePublisher,
+                           export_delta, ingest_delta)
+
+DIM = 4
+EMPTY = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def _tiered_with_cold_resident(keys_cold):
+    """A tiered table where `keys_cold` live ONLY in the cold tier (forced
+    there by demotion from a tiny hot tier, then hot cleared via erase of
+    a disjoint filler set is fragile — instead upsert into cold directly
+    through the tier handles)."""
+    t = TieredHKVTable.create(hot_capacity=128, cold_capacity=2 * 128,
+                              dim=DIM)
+    r = t.cold.insert_or_assign(
+        keys_cold, jnp.ones((len(keys_cold), DIM)),
+        custom_scores=np.arange(1, len(keys_cold) + 1, dtype=np.uint64))
+    return t.with_tiers(t.hot, r.table)
+
+
+class TestMissPolicyMatrix:
+    KEYS = np.arange(1, 17, dtype=np.uint64)
+
+    def _serve_once(self, table, policy, promote):
+        eng = OnlineEmbeddingEngine(table, wave_size=32, miss_policy=policy,
+                                    promote=promote)
+        eng.submit(EmbeddingRequest(rid=0, keys=self.KEYS.copy()))
+        eng.run_until_drained()
+        return eng, eng.completed[0]
+
+    def test_readonly_pure_reader_leaves_table_untouched(self):
+        t = _tiered_with_cold_resident(self.KEYS)
+        eng, req = self._serve_once(t, "readonly", promote=False)
+        assert req.found.all()                   # served from the cold tier
+        src = eng.source.table
+        assert src is t                          # no successor was installed
+        assert not bool(np.asarray(t.hot.contains(self.KEYS)).any())
+
+    def test_readonly_promote_reinstalls_cold_hits_hot(self):
+        t = _tiered_with_cold_resident(self.KEYS)
+        eng, req = self._serve_once(t, "readonly", promote=True)
+        assert req.found.all()
+        succ = eng.source.table
+        assert succ is not t
+        assert bool(np.asarray(succ.hot.contains(self.KEYS)).all())
+
+    def test_readonly_misses_get_default_rows_and_stay_out(self):
+        t = TieredHKVTable.create(hot_capacity=128, cold_capacity=2 * 128,
+                                  dim=DIM)
+        eng, req = self._serve_once(t, "readonly", promote=True)
+        assert not req.found.any()
+        assert np.allclose(req.values, 0.0)      # default vector fallback
+        # reject policy: misses were NOT admitted
+        eng2, req2 = self._serve_once(eng.source.table, "readonly",
+                                      promote=True)
+        assert not req2.found.any()
+
+    def test_admit_installs_misses_for_the_next_wave(self):
+        t = TieredHKVTable.create(hot_capacity=128, cold_capacity=2 * 128,
+                                  dim=DIM)
+        eng, req = self._serve_once(t, "admit", promote=False)
+        assert not req.found.any()               # first sight: all misses
+        eng2, req2 = self._serve_once(eng.source.table, "admit",
+                                      promote=False)
+        assert req2.found.all()                  # admitted by wave 1
+        # stored rows are the admit-time init rows
+        assert np.allclose(req2.values, req.values)
+
+    def test_custom_default_row_feeds_miss_values_and_admission(self):
+        t = HKVTable.create(capacity=2 * 128, dim=DIM)
+        eng = OnlineEmbeddingEngine(
+            t, wave_size=32, miss_policy="admit",
+            default_row=lambda k: jnp.full((k.hi.shape[0], DIM), 2.5))
+        eng.submit(EmbeddingRequest(rid=0, keys=self.KEYS.copy()))
+        eng.run_until_drained()
+        assert np.allclose(eng.completed[0].values, 2.5)
+        f = eng.source.table.find(self.KEYS)
+        assert np.allclose(np.asarray(f.values), 2.5)
+
+
+class TestWavePacking:
+    def test_large_request_spans_waves_and_small_ones_pack(self):
+        t = HKVTable.create(capacity=4 * 128, dim=DIM)
+        keys = np.arange(1, 101, dtype=np.uint64)
+        t = t.insert_or_assign(keys, jnp.asarray(
+            np.tile(keys.astype(np.float32)[:, None], (1, DIM)))).table
+        eng = OnlineEmbeddingEngine(t, wave_size=32, miss_policy="readonly")
+        big = EmbeddingRequest(rid=0, keys=keys)          # 100 keys: 4 waves
+        small = [EmbeddingRequest(rid=i + 1,
+                                  keys=np.array([i + 1], np.uint64))
+                 for i in range(3)]
+        eng.submit(big)
+        for r in small:
+            eng.submit(r)
+        done = eng.run_until_drained()
+        assert {r.rid for r in done} == {0, 1, 2, 3}
+        assert big.done and big.found.all()
+        for j in range(DIM):
+            assert np.array_equal(big.values[:, j],
+                                  keys.astype(np.float32))
+        m = eng.metrics()
+        assert m.keys == 103 and m.hits == 103
+        assert m.waves == 4                       # 100 + 3 packed into 4*32
+        assert m.kv_per_s > 0 and m.p99_latency_s >= m.p50_latency_s
+
+
+class TestPublisherAtomicity:
+    def test_reader_never_observes_a_half_published_table(self):
+        """Stamped tables: version i's table holds value-stamp i in every
+        row.  A racing reader must always see ONE stamp across its whole
+        find — a torn publish would mix stamps."""
+        keys = np.arange(1, 33, dtype=np.uint64)
+        base = HKVTable.create(capacity=2 * 128, dim=DIM)
+        base = base.insert_or_assign(
+            keys, jnp.zeros((len(keys), DIM))).table
+        stamped = [base]
+        for i in range(1, 12):
+            stamped.append(
+                base.assign(keys, jnp.full((len(keys), DIM), float(i))))
+        pub = TablePublisher(stamped[0])
+        stop = threading.Event()
+        torn = []
+
+        def reader():
+            while not stop.is_set():
+                version, t = pub.snapshot()
+                vals = np.asarray(t.find(keys).values)
+                uniq = np.unique(vals)
+                if len(uniq) != 1:
+                    torn.append(("mixed-stamps", version, uniq))
+                elif int(uniq[0]) != version:
+                    torn.append(("stamp-version-mismatch", version, uniq))
+
+        threads = [threading.Thread(target=reader) for _ in range(2)]
+        for th in threads:
+            th.start()
+        for i in range(1, 12):
+            assert pub.publish(stamped[i]) == i
+        stop.set()
+        for th in threads:
+            th.join()
+        assert not torn, torn[:3]
+        assert pub.version == 11
+
+    def test_offer_is_beaten_by_a_concurrent_publish(self):
+        t0 = HKVTable.create(capacity=2 * 128, dim=DIM)
+        pub = TablePublisher(t0)
+        v, t = pub.snapshot()
+        t1 = pub.publish(
+            t0.insert_or_assign(np.arange(4, dtype=np.uint64),
+                                jnp.ones((4, DIM))).table)
+        # the engine's offer from the stale snapshot must be rejected
+        stale_succ = t0.insert_or_assign(
+            np.arange(10, 14, dtype=np.uint64), jnp.ones((4, DIM))).table
+        assert not pub.offer(v, stale_succ)
+        assert pub.rejected_offers == 1
+        assert bool(np.asarray(pub.table.contains(
+            np.arange(4, dtype=np.uint64))).all())
+        # a fresh-snapshot offer applies
+        v2, t2 = pub.snapshot()
+        assert pub.offer(v2, stale_succ)
+        assert pub.version == v2 + 1
+
+    def test_engine_waves_never_mix_versions(self):
+        """Each wave records the version it served from; the stamp of the
+        rows it returned must match that version exactly."""
+        keys = np.arange(1, 17, dtype=np.uint64)
+        base = HKVTable.create(capacity=2 * 128, dim=DIM)
+        base = base.insert_or_assign(keys, jnp.zeros((len(keys), DIM))).table
+        pub = TablePublisher(base)
+        eng = OnlineEmbeddingEngine(pub, wave_size=16,
+                                    miss_policy="readonly")
+        for i in range(5):
+            eng.submit(EmbeddingRequest(rid=i, keys=keys.copy()))
+            eng.step()
+            pub.publish(base.assign(keys,
+                                    jnp.full((len(keys), DIM), float(i + 1))))
+        for i, (req, rep) in enumerate(zip(eng.completed, eng.reports)):
+            stamps = np.unique(req.values)
+            assert len(stamps) == 1
+            assert int(stamps[0]) == rep.table_version == i
+
+
+class TestMetricsMatchOracle:
+    def test_hit_rate_matches_oracle_replay(self):
+        """Admit-policy waves over a flat table vs OracleTable replaying
+        the same batches: per-wave hit counts must agree exactly."""
+        rng = np.random.default_rng(5)
+        cap, wave = 2 * 128, 32
+        t = HKVTable.create(capacity=cap, dim=DIM, buckets_per_key=2)
+        orc = OracleTable(cap, DIM, buckets_per_key=2, policy="lru")
+        eng = OnlineEmbeddingEngine(t, wave_size=wave, miss_policy="admit")
+        zeros = np.zeros((wave, DIM), np.float32)
+        for i in range(12):
+            keys = rng.integers(0, 3 * cap, size=wave).astype(np.uint64)
+            eng.submit(EmbeddingRequest(rid=i, keys=keys))
+            rep = eng.step()
+            st, _ = orc.find_or_insert(keys, zeros)
+            want_hits = int(np.sum(np.asarray(st) == 1))
+            assert rep.hits == want_hits, f"wave {i}"
+            assert rep.size == wave
+        m = eng.metrics()
+        assert m.waves == 12 and m.keys == 12 * wave
+        assert m.hits == sum(r.hits for r in eng.reports)
+        assert 0.0 < m.hit_rate < 1.0
+
+
+class TestTrainerAndDelta:
+    def test_trainer_session_updates_are_visible_to_the_engine(self):
+        pub = TablePublisher(HKVTable.create(capacity=2 * 128, dim=DIM))
+        tr = OnlineTrainer(publisher=pub, publish_every=1, lr=0.5)
+        keys = np.arange(1, 9, dtype=np.uint64)
+        for _ in range(3):
+            tr.train_step(keys, jnp.ones((len(keys), DIM)))
+        eng = OnlineEmbeddingEngine(pub, wave_size=16,
+                                    miss_policy="readonly")
+        eng.submit(EmbeddingRequest(rid=0, keys=keys))
+        eng.run_until_drained()
+        req = eng.completed[0]
+        assert req.found.all()
+        assert np.allclose(req.values, -1.5)      # 3 steps * lr .5 * grad 1
+
+    @pytest.mark.parametrize("src", ["flat", "tiered"])
+    def test_export_ingest_delta_roundtrip(self, src):
+        keys = np.arange(1, 151, dtype=np.uint64)
+        vals = jnp.asarray(np.tile(keys.astype(np.float32)[:, None],
+                                   (1, DIM)))
+        if src == "flat":
+            t = HKVTable.create(capacity=2 * 128, dim=DIM).insert_or_assign(
+                keys, vals).table
+        else:
+            t = TieredHKVTable.create(hot_capacity=128,
+                                      cold_capacity=2 * 128,
+                                      dim=DIM).insert_or_assign(
+                keys, vals).table
+        delta = export_delta(t, chunk_buckets=1)
+        assert delta.count == 150
+        dst = ingest_delta(HKVTable.create(capacity=4 * 128, dim=DIM), delta,
+                           batch=64)
+        f = dst.find(keys)
+        assert bool(np.asarray(f.found).all())
+        assert np.allclose(np.asarray(f.values), np.asarray(vals))
+
+    def test_delta_carry_scores_into_custom_policy(self):
+        keys = np.arange(1, 17, dtype=np.uint64)
+        scores = keys * np.uint64(10)
+        t = HKVTable.create(capacity=2 * 128, dim=DIM,
+                            score_policy="custom")
+        t = t.insert_or_assign(keys, jnp.ones((len(keys), DIM)),
+                               custom_scores=scores).table
+        delta = export_delta(t)
+        assert np.array_equal(np.sort(delta.scores),
+                              np.sort(scores.astype(np.uint64)))
+        dst = ingest_delta(
+            HKVTable.create(capacity=2 * 128, dim=DIM,
+                            score_policy="custom"),
+            delta, carry_scores=True)
+        exp = export_delta(dst)
+        assert np.array_equal(
+            np.sort(exp.scores), np.sort(scores.astype(np.uint64)))
+        # the documented tiered destination (custom-policy hot tier)
+        tiered_dst = ingest_delta(
+            TieredHKVTable.create(hot_capacity=2 * 128,
+                                  cold_capacity=4 * 128, dim=DIM,
+                                  score_policy="custom"),
+            delta, carry_scores=True)
+        texp = export_delta(tiered_dst)
+        assert np.array_equal(
+            np.sort(texp.scores), np.sort(scores.astype(np.uint64)))
+        assert bool(np.asarray(
+            tiered_dst.contains(keys)).all())
+
+
+class TestStaticSource:
+    def test_static_source_accepts_every_offer(self):
+        t = HKVTable.create(capacity=2 * 128, dim=DIM)
+        s = StaticSource(t)
+        v, tt = s.snapshot()
+        assert v == 0 and tt is t
+        t2 = t.insert_or_assign(np.arange(4, dtype=np.uint64),
+                                jnp.ones((4, DIM))).table
+        assert s.offer(v, t2)
+        assert s.table is t2

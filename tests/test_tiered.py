@@ -392,10 +392,8 @@ class TestScoreTranslation:
 
 
 class TestTieredProtocol:
-    def test_kvtable_protocol_roundtrip(self):
-        from tests.test_api import _protocol_roundtrip
-
-        _protocol_roundtrip(_tiered(dim=3))
+    # (the tiered per-op contract now runs in the parametrized suite,
+    # tests/test_kvtable_conformance.py)
 
     def test_isinstance_kvtable(self):
         assert isinstance(_tiered(), KVTable)
@@ -549,7 +547,8 @@ class TestTieredCheckpoint:
 
 @pytest.mark.slow  # shard_map compiles per op: minutes on CPU
 def test_sharded_over_tiered_protocol_conformance():
-    from tests.test_api import _protocol_roundtrip
+    from tests.test_kvtable_conformance import protocol_roundtrip as \
+        _protocol_roundtrip
 
     from repro.distributed.table_sharding import ShardedHKVTable
     from repro.embedding.dynamic import HKVEmbedding

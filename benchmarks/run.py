@@ -3,8 +3,8 @@
   PYTHONPATH=src python -m benchmarks.run                   # all experiments
   PYTHONPATH=src python -m benchmarks.run exp1 exp4         # subset
   PYTHONPATH=src python -m benchmarks.run exp2 --backend kernel
-  PYTHONPATH=src python -m benchmarks.run exp5 exp6_online --smoke \
-      --json-out runs/bench --timestamp 2026-07-26T00:00:00Z
+  PYTHONPATH=src python -m benchmarks.run exp5 exp6_online exp7_maintenance \
+      --smoke --json-out runs/bench --timestamp 2026-07-26T00:00:00Z
 
 Output: `name,us_per_call,derived` CSV blocks per experiment on stdout.
 Roofline rows appear when dry-run artifacts exist under runs/dryrun/.
@@ -65,7 +65,8 @@ def main() -> None:
     if json_out and not timestamp:
         sys.exit("error: --json-out requires --timestamp (the driver passes "
                  "the clock in; artifacts never read one)")
-    known = {"exp1", "exp2", "exp3", "exp4", "exp5", "exp6_online", "roofline"}
+    known = {"exp1", "exp2", "exp3", "exp4", "exp5", "exp6_online",
+             "exp7_maintenance", "roofline"}
     bad = [a for a in args if a not in known]
     if bad:
         sys.exit(f"error: unknown argument(s) {bad}; experiments: {sorted(known)}, "
@@ -74,9 +75,10 @@ def main() -> None:
     if backend != "jnp" and args and "exp2" not in args:
         sys.exit("error: --backend only applies to exp2; add exp2 to the "
                  "selection or drop the flag")
-    if smoke and args and not ({"exp5", "exp6_online"} & set(args)):
-        sys.exit("error: --smoke only applies to exp5/exp6_online; add one "
-                 "to the selection or drop the flag")
+    if smoke and args and not ({"exp5", "exp6_online",
+                                "exp7_maintenance"} & set(args)):
+        sys.exit("error: --smoke only applies to exp5/exp6_online/"
+                 "exp7_maintenance; add one to the selection or drop the flag")
     sel = set(args)
     commit = _commit() if json_out else ""
 
@@ -117,6 +119,10 @@ def main() -> None:
         from benchmarks import exp6_online
 
         emit("exp6_online", exp6_online.run(smoke=bool(smoke)))
+    if want("exp7_maintenance"):
+        from benchmarks import exp7_maintenance
+
+        emit("exp7_maintenance", exp7_maintenance.run(smoke=bool(smoke)))
     if want("roofline"):
         from benchmarks import roofline
 

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core import u64
 from repro.core.api import dedupe_keys, normalize_keys
+from repro.core.merge import EvictionStream
 from repro.core.ops import ExportResult
 from repro.core.u64 import U64
 
@@ -25,6 +26,19 @@ from repro.core.u64 import U64
 # sacrificed from the key space, next to the EMPTY sentinel.
 TOMB_HI = np.uint32(0xFFFFFFFF)
 TOMB_LO = np.uint32(0xFFFFFFFE)
+
+
+def _rank_rows_flat(key_hi, key_lo, mask, budget: int):
+    """First `budget` masked slots of a FLAT key plane in the
+    dictionary tables' deterministic sweep order (no score metadata ->
+    ascending key).  Returns (rows int32 [budget], lane bool [budget]) —
+    the one rank implementation both baselines share."""
+    c = key_hi.shape[0]
+    iota = jnp.arange(c, dtype=jnp.int32)
+    nc, _kh, _kl, rows = jax.lax.sort(
+        ((~mask).astype(jnp.uint32), key_hi, key_lo, iota),
+        num_keys=3, is_stable=False)
+    return rows[:budget], nc[:budget] == 0
 
 
 def _is_tomb(keys: U64) -> jax.Array:
@@ -196,6 +210,27 @@ class OpenAddressingTable:
                 jnp.zeros((n, self.dim), state.values.dtype), mode="drop"),
         )
 
+    # -- maintenance sweeps (predicate over keys; no score metadata) -----------
+
+    def sweep_mask(self, state: OAState, pred) -> jax.Array:
+        """bool [C] — live (non-tomb) slots matching `pred`.  Dictionary
+        tables carry no scores; the predicate sees zero score planes."""
+        k = U64(state.key_hi, state.key_lo)
+        z = jnp.zeros_like(state.key_hi)
+        live = ~u64.is_empty(k) & ~_is_tomb(k)
+        return pred.matches(k, U64(z, z)) & live
+
+    def erase_mask(self, state: OAState, mask: jax.Array) -> OAState:
+        """Tombstone every slot where mask (bulk form of `erase`)."""
+        return OAState(
+            key_hi=jnp.where(mask, TOMB_HI, state.key_hi),
+            key_lo=jnp.where(mask, TOMB_LO, state.key_lo),
+            values=jnp.where(mask[:, None], 0.0, state.values),
+        )
+
+    def rank_rows(self, state: OAState, mask: jax.Array, budget: int):
+        return _rank_rows_flat(state.key_hi, state.key_lo, mask, budget)
+
 
 # =============================================================================
 # Bucketed power-of-two-choices (BGHT / BP2HT family, 16-slot buckets)
@@ -339,21 +374,11 @@ class BucketedP2CTable:
             jnp.where(found, row, self.capacity)
         ].set(values, mode="drop"))
 
-    def erase(self, state: P2CState, keys: U64) -> P2CState:
-        """Remove found keys, then re-pack every bucket densely: `insert`
-        places new entries at slot index == occupancy count, so freed slots
-        must compact toward slot 0 (the invariant a sequential CAS table
-        keeps by swapping with the last live slot)."""
-        found, row = self._locate(state, keys)
-        w = jnp.where(found, row, self.capacity)
+    def _compact(self, key_hi, key_lo, values) -> P2CState:
+        """Stable per-bucket compaction: live slots first, order preserved
+        — restores the invariant `insert` relies on (new entries land at
+        slot index == occupancy count)."""
         b, s = self.num_buckets, self.slots
-        key_hi = state.key_hi.reshape(-1).at[w].set(u64.EMPTY_HI, mode="drop")
-        key_lo = state.key_lo.reshape(-1).at[w].set(u64.EMPTY_LO, mode="drop")
-        values = state.values.at[w].set(
-            jnp.zeros((keys.hi.shape[0], self.dim), state.values.dtype),
-            mode="drop")
-        key_hi, key_lo = key_hi.reshape(b, s), key_lo.reshape(b, s)
-        # stable per-bucket compaction: live slots first, order preserved
         order = jnp.argsort(u64.is_empty(U64(key_hi, key_lo)),
                             axis=1, stable=True)
         rows = (jnp.arange(b, dtype=jnp.int32)[:, None] * s
@@ -363,6 +388,41 @@ class BucketedP2CTable:
             key_lo=jnp.take_along_axis(key_lo, order, axis=1),
             values=values[rows],
         )
+
+    def erase(self, state: P2CState, keys: U64) -> P2CState:
+        """Remove found keys, then re-pack every bucket densely (see
+        `_compact` — the invariant a sequential CAS table keeps by
+        swapping with the last live slot)."""
+        found, row = self._locate(state, keys)
+        w = jnp.where(found, row, self.capacity)
+        b, s = self.num_buckets, self.slots
+        key_hi = state.key_hi.reshape(-1).at[w].set(u64.EMPTY_HI, mode="drop")
+        key_lo = state.key_lo.reshape(-1).at[w].set(u64.EMPTY_LO, mode="drop")
+        values = state.values.at[w].set(
+            jnp.zeros((keys.hi.shape[0], self.dim), state.values.dtype),
+            mode="drop")
+        return self._compact(key_hi.reshape(b, s), key_lo.reshape(b, s),
+                             values)
+
+    # -- maintenance sweeps (predicate over keys; no score metadata) -----------
+
+    def sweep_mask(self, state: P2CState, pred) -> jax.Array:
+        """bool [B, S] — live slots matching `pred` (zero score planes)."""
+        k = U64(state.key_hi, state.key_lo)
+        z = jnp.zeros_like(state.key_hi)
+        return pred.matches(k, U64(z, z)) & ~u64.is_empty(k)
+
+    def erase_mask(self, state: P2CState, mask: jax.Array) -> P2CState:
+        """Bulk erase by [B, S] mask, then re-pack every bucket."""
+        key_hi = jnp.where(mask, jnp.uint32(u64.EMPTY_HI), state.key_hi)
+        key_lo = jnp.where(mask, jnp.uint32(u64.EMPTY_LO), state.key_lo)
+        values = jnp.where(mask.reshape(-1)[:, None], 0.0, state.values)
+        return self._compact(key_hi, key_lo, values)
+
+    def rank_rows(self, state: P2CState, mask: jax.Array, budget: int):
+        return _rank_rows_flat(state.key_hi.reshape(-1),
+                               state.key_lo.reshape(-1),
+                               mask.reshape(-1), budget)
 
 
 # =============================================================================
@@ -382,6 +442,17 @@ class DictFindOrInsert(NamedTuple):
     found: jax.Array    # bool [N] — key existed before the op
     ok: jax.Array       # bool [N] — key present after the op
     probes: jax.Array   # int32 [N]
+
+
+class DictSweep(NamedTuple):
+    table: "DictKVTable"
+    swept: jax.Array    # int32 [] — entries removed by the sweep
+
+
+class DictEvictIf(NamedTuple):
+    table: "DictKVTable"
+    evicted: EvictionStream   # rank-aligned; scores zero (no metadata)
+    count: jax.Array    # int32 []
 
 
 @jax.tree_util.register_pytree_node_class
@@ -485,6 +556,64 @@ class DictKVTable:
 
     def contains(self, keys) -> jax.Array:
         return self.find(keys).found
+
+    # -- maintenance (KVTable sweep surface; DESIGN.md §Maintenance) -----------
+    #
+    # Dictionary tables carry no score metadata: predicates evaluate
+    # against zero score planes (key predicates work unchanged; score
+    # predicates are the caller's lookout — see the conformance capability
+    # table), and evict_if's "coldest first" order degenerates to
+    # ascending key.
+
+    def erase_if(self, pred) -> DictSweep:
+        m = self.impl.sweep_mask(self.state, pred)
+        return DictSweep(
+            table=self.with_state(self.impl.erase_mask(self.state, m)),
+            swept=jnp.sum(m.astype(jnp.int32)))
+
+    def evict_if(self, pred, budget: int) -> DictEvictIf:
+        c = self.capacity
+        if budget < 1:
+            raise ValueError(f"budget must be >= 1; got {budget}")
+        budget = min(budget, c)
+        m = self.impl.sweep_mask(self.state, pred)
+        rows, lane = self.impl.rank_rows(self.state, m, budget)
+        khi = self.state.key_hi.reshape(-1)
+        klo = self.state.key_lo.reshape(-1)
+        vals = self.state.values[jnp.where(lane, rows, 0)]
+        z = jnp.zeros((budget,), jnp.uint32)
+        stream = EvictionStream(
+            key_hi=jnp.where(lane, khi[rows], 0),
+            key_lo=jnp.where(lane, klo[rows], 0),
+            values=jnp.where(lane[:, None], vals, jnp.zeros_like(vals)),
+            score_hi=z, score_lo=z, mask=lane,
+        )
+        em = jnp.zeros((c,), bool).at[
+            jnp.where(lane, rows, c)].set(True, mode="drop")
+        t2 = self.with_state(
+            self.impl.erase_mask(self.state, em.reshape(m.shape)))
+        return DictEvictIf(table=t2, evicted=stream,
+                           count=jnp.sum(lane.astype(jnp.int32)))
+
+    def stats(self):
+        """`TableStats` over the export-view bucket space (scores absent —
+        quantiles report zero)."""
+        from repro.maintenance import stats as stats_mod  # deferred: layering
+
+        khi = self.state.key_hi.reshape(-1)
+        klo = self.state.key_lo.reshape(-1)
+        if isinstance(self.impl, BucketedP2CTable):
+            w = self.impl.slots
+        else:
+            w = _OA_EXPORT_SLOTS
+        pad = (-len(khi)) % w
+        if pad:
+            khi = jnp.concatenate([khi, jnp.full((pad,), u64.EMPTY_HI, jnp.uint32)])
+            klo = jnp.concatenate([klo, jnp.full((pad,), u64.EMPTY_LO, jnp.uint32)])
+        kh2, kl2 = khi.reshape(-1, w), klo.reshape(-1, w)
+        k = U64(kh2, kl2)
+        return stats_mod.stats_from_planes(
+            kh2, kl2, live=~u64.is_empty(k) & ~_is_tomb(k))
 
     def size(self) -> jax.Array:
         khi = self.state.key_hi

@@ -13,19 +13,25 @@ from repro.core.api import (  # noqa: F401
     HKVTable,
     KVTable,
     OpSession,
+    TableEvictIf,
     TableFindOrInsert,
     TableInsertAndEvict,
+    TableSweep,
     TableUpsert,
     dedupe_keys,
     normalize_keys,
 )
 from repro.core.merge import EvictionStream  # noqa: F401
+from repro.core.predicates import SweepPredicate  # noqa: F401
 from repro.core.table import HKVConfig, HKVState  # noqa: F401
 from repro.core.tiered import (  # noqa: F401
+    TieredDemote,
+    TieredEvictIf,
     TieredFind,
     TieredFindOrInsert,
     TieredHKVTable,
     TieredState,
+    TieredSweep,
     TieredUpsert,
     translate_scores,
 )

@@ -35,6 +35,7 @@ from repro.core import find as find_mod
 from repro.core import ops as ops_mod
 from repro.core import table as table_mod
 from repro.core import u64
+from repro.core.predicates import SweepPredicate
 from repro.core.table import HKVConfig, HKVState
 from repro.core.u64 import U64
 
@@ -151,6 +152,17 @@ class TableFindOrInsert(NamedTuple):
     evicted: "ops_mod.EvictionStream"   # populated iff return_evicted
 
 
+class TableSweep(NamedTuple):
+    table: "HKVTable"
+    swept: jax.Array     # int32 [] — entries removed by the sweep
+
+
+class TableEvictIf(NamedTuple):
+    table: "HKVTable"
+    evicted: "ops_mod.EvictionStream"   # rank-aligned: lane i = i-th coldest
+    count: jax.Array     # int32 [] — live lanes in the stream
+
+
 # =============================================================================
 # The KVTable protocol — the one benchmark/consumer-facing contract
 # =============================================================================
@@ -180,6 +192,15 @@ class KVTable(Protocol):
     def size(self) -> jax.Array: ...
 
     def load_factor(self) -> jax.Array: ...
+
+    # maintenance surface (DESIGN.md §Maintenance): predicated sweeps +
+    # whole-table observability.  Results expose `.table`/`.swept` for
+    # erase_if and `.table`/`.evicted`/`.count` for evict_if.
+    def erase_if(self, pred: SweepPredicate) -> Any: ...
+
+    def evict_if(self, pred: SweepPredicate, budget: int) -> Any: ...
+
+    def stats(self) -> Any: ...
 
 
 # =============================================================================
@@ -368,6 +389,44 @@ class HKVTable:
 
     def clear(self) -> "HKVTable":
         return self.with_state(ops_mod.clear(self.state, self.cfg))
+
+    # -- maintenance (predicated sweeps + observability; DESIGN.md
+    # §Maintenance) --------------------------------------------------------
+
+    def erase_if(self, pred: SweepPredicate) -> TableSweep:
+        """Inserter (structural). Remove every live entry matching `pred`
+        (TTL expiry: `SweepPredicate.expire_before(epoch)`)."""
+        res = ops_mod.erase_if(self.state, self.cfg, pred,
+                               backend=self.backend)
+        return TableSweep(table=self.with_state(res.state), swept=res.swept)
+
+    def evict_if(self, pred: SweepPredicate, budget: int,
+                 limit: Optional[jax.Array] = None) -> TableEvictIf:
+        """Inserter (structural). Remove up to `budget` matching entries,
+        coldest first, returning them as an `EvictionStream` (the
+        maintenance primitive tier rebalancing demotes through)."""
+        res = ops_mod.evict_if(self.state, self.cfg, pred, budget,
+                               limit=limit, backend=self.backend)
+        return TableEvictIf(table=self.with_state(res.state),
+                            evicted=res.evicted, count=res.count)
+
+    def stats(self) -> Any:
+        """Whole-table `TableStats` (occupancy histogram, score quantiles,
+        load factor — repro.maintenance.stats)."""
+        from repro.maintenance import stats as stats_mod  # deferred: layering
+
+        s = self.state
+        return stats_mod.stats_from_planes(s.key_hi, s.key_lo,
+                                           s.score_hi, s.score_lo)
+
+    @property
+    def epoch(self) -> jax.Array:
+        """The application epoch (the epoch_* policies' TTL clock)."""
+        return self.state.epoch
+
+    def set_epoch(self, epoch: Any) -> "HKVTable":
+        """Stamp a new application epoch (uint32; the TTL window clock)."""
+        return self.with_state(table_mod.set_epoch(self.state, epoch))
 
     # -- sessions --------------------------------------------------------------
 

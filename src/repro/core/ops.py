@@ -536,6 +536,156 @@ def clear(state: HKVState, cfg: HKVConfig) -> HKVState:
 
 
 # =============================================================================
+# Predicated sweeps (the maintenance subsystem's bulk ops — DESIGN.md
+# §Maintenance).  These run BETWEEN serving waves, not inside upserts:
+# whole-table passes over the metadata planes, driven by a declarative
+# `SweepPredicate` (core/predicates.py) so they compile under jit and
+# evaluate identically on both backends (the kernel path accelerates the
+# mask stage; everything downstream is shared orchestration, the
+# UpsertStages pattern).
+# =============================================================================
+
+
+class SweepResult(NamedTuple):
+    state: HKVState
+    swept: jax.Array     # int32 [] — entries removed by this sweep
+
+
+class EvictIfResult(NamedTuple):
+    state: HKVState
+    # Rank-aligned (NOT batch-aligned) stream: lane i carries the i-th
+    # coldest matching entry (score asc, then key asc — a total order),
+    # mask False beyond the matched/limit count.  Same transport type as
+    # the upsert eviction hand-off, so the tier hierarchy demotes it
+    # through the identical cascade (`TieredHKVTable.demote`).
+    evicted: EvictionStream
+    count: jax.Array     # int32 [] — live lanes in the stream
+
+
+def _sweep_mask(state: HKVState, cfg: HKVConfig, pred,
+                backend: str) -> jax.Array:
+    """bool [B, S] — live entries matching `pred` (the one stage the
+    Pallas sweep kernel replaces; both backends evaluate the same
+    `match_planes` formula, so the masks are bit-identical)."""
+    if _resolve_backend(backend) == "kernel":
+        from repro.kernels import ops as kernel_ops  # deferred: kernels import core
+
+        return kernel_ops.sweep_mask_kernel(state, cfg, pred)
+    return pred.matches(state.keys, state.scores) & state.occupied_mask()
+
+
+def _erase_slots(state: HKVState, cfg: HKVConfig, mask: jax.Array) -> HKVState:
+    """Clear every slot where mask [B, S] is True: keys/digests to the
+    EMPTY sentinels, scores to 0, value rows zeroed (via the tier-aware
+    masked row clear, honoring the §3.6 crossing contract)."""
+    return state._replace(
+        key_hi=jnp.where(mask, jnp.uint32(u64.EMPTY_HI), state.key_hi),
+        key_lo=jnp.where(mask, jnp.uint32(u64.EMPTY_LO), state.key_lo),
+        digests=jnp.where(mask, jnp.uint8(u64.EMPTY_DIGEST), state.digests),
+        score_hi=jnp.where(mask, jnp.uint32(0), state.score_hi),
+        score_lo=jnp.where(mask, jnp.uint32(0), state.score_lo),
+        values=table_mod.tier_mask_rows(cfg.value_tier, state.values,
+                                        ~mask.reshape(-1)),
+    )
+
+
+def erase_if(state: HKVState, cfg: HKVConfig, pred, *,
+             backend: str = "auto") -> SweepResult:
+    """Inserter (structural). Remove EVERY live entry matching `pred` —
+    the paper-family `erase_if` bulk op (TTL/epoch expiry rides on this
+    with the `expire_before` canned predicate).
+
+    Consumer code: prefer `HKVTable.erase_if` (repro.core.api).
+    """
+    mask = _sweep_mask(state, cfg, pred, backend)
+    return SweepResult(state=_erase_slots(state, cfg, mask),
+                       swept=jnp.sum(mask.astype(jnp.int32)))
+
+
+def evict_if(state: HKVState, cfg: HKVConfig, pred, budget: int, *,
+             limit: Optional[jax.Array] = None,
+             backend: str = "auto") -> EvictIfResult:
+    """Inserter (structural). Remove up to `budget` matching entries,
+    COLDEST FIRST (ascending score, ties by ascending key — deterministic
+    and backend-independent), and hand them back as an `EvictionStream`.
+
+    This is the maintenance primitive behind proactive tier rebalancing:
+    the hierarchy evicts the coldest hot-tier entries here and demotes
+    the returned stream into the cold tier, so the serving path's
+    reactive upsert evictions become rare (DESIGN.md §Maintenance).
+
+    `budget` is static (the stream's lane count, clamped to the table's
+    capacity — so the protocol surface accepts whole-hierarchy budgets
+    uniformly across impls); `limit` is an optional DYNAMIC cap <=
+    budget — lanes at rank >= limit stay resident (the watermark
+    rebalancer computes the needed move count at trace time).
+    """
+    b, s = cfg.num_buckets, cfg.slots_per_bucket
+    c = b * s
+    if budget < 1:
+        raise ValueError(f"budget must be >= 1; got {budget}")
+    budget = min(budget, c)
+    mask = _sweep_mask(state, cfg, pred, backend)
+    flat = mask.reshape(-1)
+    iota = jnp.arange(c, dtype=jnp.int32)
+    # candidates first, ordered coldest-first: sort by (non-candidate,
+    # score, key); keys are unique table-wide, so the order is total
+    nc, _sh, _sl, _kh, _kl, row = jax.lax.sort(
+        (
+            (~flat).astype(jnp.uint32),
+            state.score_hi.reshape(-1),
+            state.score_lo.reshape(-1),
+            state.key_hi.reshape(-1),
+            state.key_lo.reshape(-1),
+            iota,
+        ),
+        num_keys=5,
+        is_stable=False,
+    )
+    top = lambda a: a[:budget]
+    row_t = top(row)
+    lane = top(nc) == 0
+    if limit is not None:
+        lane &= jnp.arange(budget, dtype=jnp.int32) < limit
+    bkt = row_t // s
+    slot = row_t % s
+    khi = state.key_hi[bkt, slot]
+    klo = state.key_lo[bkt, slot]
+    vals = table_mod.tier_gather(cfg.value_tier, state.values,
+                                 jnp.where(lane, row_t, 0))
+    vals = jnp.where(lane[:, None], vals, jnp.zeros_like(vals))
+    stream = EvictionStream(
+        key_hi=jnp.where(lane, khi, 0),
+        key_lo=jnp.where(lane, klo, 0),
+        values=vals,
+        score_hi=jnp.where(lane, state.score_hi[bkt, slot], 0),
+        score_lo=jnp.where(lane, state.score_lo[bkt, slot], 0),
+        mask=lane,
+    )
+    # erase the evicted slots (OOB-drop the masked-out lanes)
+    eb = jnp.where(lane, bkt, b)
+    nlanes = budget
+    state = state._replace(
+        key_hi=state.key_hi.at[eb, slot].set(
+            jnp.full((nlanes,), u64.EMPTY_HI), mode="drop"),
+        key_lo=state.key_lo.at[eb, slot].set(
+            jnp.full((nlanes,), u64.EMPTY_LO), mode="drop"),
+        digests=state.digests.at[eb, slot].set(
+            jnp.full((nlanes,), u64.EMPTY_DIGEST), mode="drop"),
+        score_hi=state.score_hi.at[eb, slot].set(
+            jnp.zeros((nlanes,), jnp.uint32), mode="drop"),
+        score_lo=state.score_lo.at[eb, slot].set(
+            jnp.zeros((nlanes,), jnp.uint32), mode="drop"),
+        values=table_mod.tier_scatter(
+            cfg.value_tier, state.values, jnp.where(lane, row_t, c),
+            jnp.zeros((nlanes, state.values.shape[1]), state.values.dtype),
+        ),
+    )
+    return EvictIfResult(state=state, evicted=stream,
+                         count=jnp.sum(lane.astype(jnp.int32)))
+
+
+# =============================================================================
 # helpers
 # =============================================================================
 

@@ -260,6 +260,48 @@ class OracleTable:
     def contains(self, keys):
         return np.array([self.locate(int(k)) is not None for k in keys])
 
+    # -- predicated sweeps (mirror core/predicates.py `match_planes`) ----------
+
+    @staticmethod
+    def _pred_match(kind: str, key: int, score: int, a: int, b: int) -> bool:
+        if kind == "always":
+            return True
+        if kind == "score_lt":
+            return score < a
+        if kind == "score_ge":
+            return score >= a
+        if kind == "epoch_lt":
+            return (score >> 32) < (a >> 32)
+        if kind == "key_range":
+            return a <= key < b
+        raise ValueError(kind)
+
+    def erase_if(self, kind: str, a: int = 0, b: int = 0) -> int:
+        """Remove every entry matching the predicate; returns the count."""
+        removed = 0
+        for bucket in self.buckets:
+            for k in [k for k, e in bucket.items()
+                      if self._pred_match(kind, k, e.score, a, b)]:
+                del bucket[k]
+                removed += 1
+        return removed
+
+    def evict_if(self, kind: str, budget: int, a: int = 0, b: int = 0):
+        """Remove up to `budget` matching entries, coldest first (ascending
+        score then key — the engine's deterministic sweep order); returns
+        them as a list of (key, score, value) in eviction rank order."""
+        cands = []
+        for bi, bucket in enumerate(self.buckets):
+            for k, e in bucket.items():
+                if self._pred_match(kind, k, e.score, a, b):
+                    cands.append((e.score, k, bi))
+        cands.sort()
+        out = []
+        for score, k, bi in cands[:budget]:
+            e = self.buckets[bi].pop(k)
+            out.append((k, score, np.array(e.value)))
+        return out
+
     def erase(self, keys):
         for k in keys:
             b = self.locate(int(k))

@@ -1,0 +1,193 @@
+"""SweepPredicate — the declarative predicate language of the maintenance
+subsystem's bulk ops (`erase_if` / `evict_if`, DESIGN.md §Maintenance).
+
+The upstream HKV library ships predicated bulk operations (`erase_if`,
+`export_batch_if`) whose predicates are device function pointers; XLA has
+no function pointers, and an arbitrary Python callable would defeat both
+jit caching and the kernel path.  So predicates here are *data*: a small
+closed algebra over the two metadata planes every table carries — keys
+and scores — expressed as a registered pytree whose structure (the
+comparison kind) is static aux and whose operands are traced uint32
+scalars.  One predicate value therefore
+
+  * passes through `jax.jit` boundaries like any other pytree argument
+    (one compile per kind, operands flow as data);
+  * evaluates identically on the pure-jnp reference path and inside the
+    Pallas bucket-sweep kernel — both call the SAME `match_planes`
+    plane-level formula, so backend bit-parity is by construction;
+  * needs no per-impl translation: every `KVTable` impl evaluates it
+    against whatever key/score planes it has (dictionary baselines carry
+    zero scores — score predicates there are the caller's lookout, see
+    the conformance capability table).
+
+Kinds:
+
+  always        every live entry (the watermark rebalancer's predicate:
+                selection pressure comes from `evict_if`'s coldest-first
+                rank order + budget, not from the match).
+  score_lt      score  <  a      (the cold set below a threshold)
+  score_ge      score  >= a      (complement; export-style filters)
+  epoch_lt      score.hi < a.hi  (TTL/epoch expiry: under the epoch_lru /
+                epoch_lfu policies the score's HIGH plane is the entry's
+                last-touch epoch, so `expire_before(e)` matches entries
+                not touched since epoch e — and under the cold tier's
+                'custom' policy, translated epoch scores keep that plane)
+  key_range     a <= key < b     (targeted invalidation of an id range)
+
+Layering: this module is core-layer (imports only u64/jax) because
+`core/ops.py` implements the sweep ops against it; the maintenance
+subsystem (`repro.maintenance`) re-exports it as the public predicate
+surface next to the scheduler that drives the sweeps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import u64
+from repro.core.u64 import U64
+
+KINDS = ("always", "score_lt", "score_ge", "epoch_lt", "key_range")
+
+
+def _u32_scalar(x) -> jax.Array:
+    return jnp.asarray(x, jnp.uint32).reshape(())
+
+
+def _to_u64(x: Any) -> U64:
+    """Coerce a threshold to a U64 scalar (python int, numpy uint64, a
+    (hi, lo) U64, or a traced array — 64-bit dtypes split into both
+    planes, 32-bit dtypes fill the low plane)."""
+    if isinstance(x, U64):
+        return U64(_u32_scalar(x.hi), _u32_scalar(x.lo))
+    if isinstance(x, (int, np.integer)):
+        v = int(x)
+        if v < 0:
+            raise ValueError(f"thresholds are unsigned; got {v}")
+        return U64(_u32_scalar((v >> 32) & 0xFFFFFFFF), _u32_scalar(v & 0xFFFFFFFF))
+    if isinstance(x, np.ndarray) and x.dtype.itemsize == 8:
+        # host-side 64-bit scalar: exact split (jnp.asarray would
+        # truncate to uint32 when x64 is disabled)
+        return _to_u64(int(np.asarray(x).reshape(())))
+    x = jnp.asarray(x)
+    if x.dtype.itemsize == 8:   # uint64/int64 under jax x64: keep high bits
+        xu = x.astype(jnp.uint64)
+        hi = jax.lax.shift_right_logical(xu, jnp.asarray(32, jnp.uint64))
+        return U64(_u32_scalar(hi), _u32_scalar(xu))
+    return U64(_u32_scalar(0), _u32_scalar(x))
+
+
+def _lt(a_hi, a_lo, b_hi, b_lo):
+    """Plane-level lexicographic u64 '<' — written out so the same formula
+    runs under jnp AND inside a Pallas kernel body."""
+    return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo < b_lo))
+
+
+def match_planes(kind: str, key_hi, key_lo, score_hi, score_lo,
+                 a_hi, a_lo, b_hi, b_lo):
+    """The single predicate formula, over raw uint32 planes.
+
+    Liveness is NOT included — callers AND the result with their own
+    occupancy mask (the EMPTY sentinel / tombstone conventions differ per
+    table family).  Shared verbatim by the jnp reference
+    (`SweepPredicate.matches`) and the Pallas sweep kernel
+    (`repro.kernels.sweep_scan`), which is what makes the two backends
+    bit-identical by construction.
+    """
+    if kind == "always":
+        return jnp.ones(jnp.shape(key_hi), bool)
+    if kind == "score_lt":
+        return _lt(score_hi, score_lo, a_hi, a_lo)
+    if kind == "score_ge":
+        return ~_lt(score_hi, score_lo, a_hi, a_lo)
+    if kind == "epoch_lt":
+        return score_hi < a_hi
+    if kind == "key_range":
+        return ~_lt(key_hi, key_lo, a_hi, a_lo) & _lt(key_hi, key_lo, b_hi, b_lo)
+    raise ValueError(f"unknown predicate kind {kind!r}; one of {KINDS}")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SweepPredicate:
+    """One declarative sweep predicate (see module docstring).
+
+    `kind` is static pytree aux (it selects the compiled formula); the
+    four operand planes are leaves, so thresholds flow through jit as
+    data.  Unused operands are zero.
+    """
+
+    kind: str
+    a_hi: jax.Array
+    a_lo: jax.Array
+    b_hi: jax.Array
+    b_lo: jax.Array
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"unknown predicate kind {self.kind!r}; one of {KINDS}")
+
+    # -- pytree protocol -----------------------------------------------------
+
+    def tree_flatten(self):
+        return (self.a_hi, self.a_lo, self.b_hi, self.b_lo), (self.kind,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux[0], *children)
+
+    # -- canned constructors ---------------------------------------------------
+
+    @classmethod
+    def _make(cls, kind: str, a: U64 | None = None,
+              b: U64 | None = None) -> "SweepPredicate":
+        z = _u32_scalar(0)
+        a = a or U64(z, z)
+        b = b or U64(z, z)
+        return cls(kind=kind, a_hi=_u32_scalar(a.hi), a_lo=_u32_scalar(a.lo),
+                   b_hi=_u32_scalar(b.hi), b_lo=_u32_scalar(b.lo))
+
+    @classmethod
+    def always(cls) -> "SweepPredicate":
+        """Match every live entry (rank order + budget do the selecting)."""
+        return cls._make("always")
+
+    @classmethod
+    def score_below(cls, threshold: Any) -> "SweepPredicate":
+        """score < threshold — the cold set (eviction order's low end)."""
+        return cls._make("score_lt", _to_u64(threshold))
+
+    @classmethod
+    def score_at_least(cls, threshold: Any) -> "SweepPredicate":
+        """score >= threshold (the complement filter)."""
+        return cls._make("score_ge", _to_u64(threshold))
+
+    @classmethod
+    def expire_before(cls, epoch: Any) -> "SweepPredicate":
+        """TTL/epoch expiry: entries whose score HIGH plane (the epoch
+        stamp under epoch_lru/epoch_lfu — see `core/scores.py`) is below
+        `epoch`.  The canned predicate the MaintenanceScheduler's TTL
+        policy sweeps with."""
+        return cls._make("epoch_lt", U64(_u32_scalar(epoch), _u32_scalar(0)))
+
+    @classmethod
+    def key_in_range(cls, lo: Any, hi: Any) -> "SweepPredicate":
+        """lo <= key < hi — targeted invalidation of an id range."""
+        return cls._make("key_range", _to_u64(lo), _to_u64(hi))
+
+    # -- evaluation ------------------------------------------------------------
+
+    def matches(self, keys: U64, scores: U64) -> jax.Array:
+        """bool mask, same shape as the planes.  Liveness NOT included —
+        AND with the caller's occupancy mask."""
+        return match_planes(self.kind, keys.hi, keys.lo, scores.hi, scores.lo,
+                            self.a_hi, self.a_lo, self.b_hi, self.b_lo)
+
+    def __repr__(self):
+        return f"SweepPredicate({self.kind})"

@@ -210,6 +210,16 @@ def tier_scatter(tier: str, values: jax.Array, rows: jax.Array,
     return op.add(upd_h, mode=mode) if add else op.set(upd_h, mode=mode)
 
 
+def tier_mask_rows(tier: str, values: jax.Array, keep: jax.Array) -> jax.Array:
+    """Zero every value row where ~keep [B*S] (the whole-plane masked clear
+    the maintenance sweeps use).  In 'hmem' mode only the keep mask crosses
+    to the host — the value rows themselves never leave their tier."""
+    if tier != "hmem":
+        return jnp.where(keep[:, None], values, jnp.zeros_like(values))
+    keep_h = _to_host(keep)
+    return jnp.where(keep_h[:, None], values, jnp.zeros_like(values))
+
+
 def advance_clock(state: HKVState) -> HKVState:
     """Tick the global LRU clock (one tick per batched op, paper's device clock)."""
     c = u64.add_u32(state.clock, jnp.uint32(1))

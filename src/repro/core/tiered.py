@@ -142,6 +142,27 @@ class _DemoteResult(NamedTuple):
     placed: jax.Array         # bool [N] — lane's pair is now cold-resident
 
 
+class TieredDemote(NamedTuple):
+    table: "TieredHKVTable"
+    demoted: jax.Array        # int32 — pairs the cold tier absorbed
+    dropped: jax.Array        # int32 — pairs lost at the cold boundary
+
+
+class TieredSweep(NamedTuple):
+    table: "TieredHKVTable"
+    swept: jax.Array          # int32 — entries removed across BOTH tiers
+                              #   (inclusive hot/cold copies count twice —
+                              #   both slots were freed)
+
+
+class TieredEvictIf(NamedTuple):
+    table: "TieredHKVTable"
+    evicted: EvictionStream   # 2*budget lanes: hot stream then cold
+                              #   stream, stale inclusive cold copies
+                              #   masked out (hot copy authoritative)
+    count: jax.Array          # int32 — live lanes in the stream
+
+
 # =============================================================================
 # The handle
 # =============================================================================
@@ -350,6 +371,16 @@ class TieredHKVTable:
                        stream: EvictionStream) -> _DemoteResult:
         return self._demote(cold, stream.keys, stream.values,
                             stream.scores, stream.mask)
+
+    def demote(self, stream: EvictionStream) -> TieredDemote:
+        """Hand a stream of (key, value, score) pairs down into the cold
+        tier — the PUBLIC form of the demotion cascade (scores translated
+        across the per-tier policies, losses at the cold boundary
+        counted).  The maintenance rebalancer feeds `evict_if`'s hot-tier
+        stream through here (repro.maintenance.rebalance)."""
+        dem = self._demote_stream(self.cold, stream)
+        return TieredDemote(table=self.with_tiers(self.hot, dem.cold),
+                            demoted=dem.demoted, dropped=dem.dropped)
 
     # -- inserters -----------------------------------------------------------
 
@@ -569,6 +600,77 @@ class TieredHKVTable:
 
     def clear(self) -> "TieredHKVTable":
         return self.with_tiers(self.hot.clear(), self.cold.clear())
+
+    # -- maintenance (predicated sweeps + observability; DESIGN.md
+    # §Maintenance) -----------------------------------------------------------
+
+    def erase_if(self, pred) -> TieredSweep:
+        """Structural sweep of BOTH tiers: like `erase`, an inclusive-cache
+        removal must kill the cold copy too, or an expired key would
+        resurrect on the next miss.  Works for TTL expiry on the default
+        tier policies because demoted scores are translated verbatim into
+        the cold tier's 'custom' domain — the epoch plane survives the
+        crossing (`translate_scores`)."""
+        hr = self.hot.erase_if(pred)
+        cr = self.cold.erase_if(pred)
+        return TieredSweep(table=self.with_tiers(hr.table, cr.table),
+                           swept=hr.swept + cr.swept)
+
+    def evict_if(self, pred, budget: int) -> TieredEvictIf:
+        """Remove up to `budget` matching entries per tier, coldest first,
+        returning them as one concatenated stream (hot lanes first).  An
+        evicted entry leaves the WHOLE hierarchy: a hot-evicted key's
+        stale inclusive cold copy is erased with it (same no-resurrection
+        rule as `erase`/`erase_if` — the stream must not report a key
+        gone while a cold hit could still serve it), and a cold lane
+        whose key remains hot-resident is a stale inclusive copy whose
+        slot is freed but whose lane is masked out of the stream (the hot
+        copy is authoritative — same rule as `export_batch`)."""
+        hr = ops_mod.evict_if(self.hot.state, self.hot.cfg, pred, budget,
+                              backend=self.hot.backend)
+        cr = ops_mod.evict_if(self.cold.state, self.cold.cfg, pred, budget,
+                              backend=self.cold.backend)
+        dup = self.hot.contains(cr.evicted.masked_keys())  # pre-sweep hot
+        cmask = cr.evicted.mask & ~dup
+        # hot-evicted keys: kill any surviving stale cold copy (the cold
+        # sweep's own budget/rank order may not have reached it)
+        cold_state = ops_mod.erase(cr.state, self.cold.cfg,
+                                   hr.evicted.masked_keys())
+        stream = EvictionStream(*[
+            jnp.concatenate([getattr(hr.evicted, f),
+                             getattr(cr.evicted, f)])
+            for f in ("key_hi", "key_lo", "values", "score_hi", "score_lo")
+        ], mask=jnp.concatenate([hr.evicted.mask, cmask]))
+        return TieredEvictIf(
+            table=self.with_tiers(self.hot.with_state(hr.state),
+                                  self.cold.with_state(cold_state)),
+            evicted=stream,
+            count=hr.count + jnp.sum(cmask.astype(jnp.int32)),
+        )
+
+    def stats(self):
+        """Hierarchy-level `TableStats`: histograms summed, size deduped
+        across inclusive copies (== `size()`); per-tier detail via
+        `tier_stats()`."""
+        from repro.maintenance import stats as stats_mod  # deferred: layering
+
+        hot, cold = self.tier_stats()
+        return stats_mod.combine_stats(hot, cold, size=self.size())
+
+    def tier_stats(self):
+        """(hot TableStats, cold TableStats) — the per-tier load factors
+        the watermark rebalancer and capacity planning read."""
+        return self.hot.stats(), self.cold.stats()
+
+    @property
+    def epoch(self) -> jax.Array:
+        return self.hot.epoch
+
+    def set_epoch(self, epoch: Any) -> "TieredHKVTable":
+        """Stamp the application epoch on BOTH tiers (one TTL clock for
+        the whole hierarchy)."""
+        return self.with_tiers(self.hot.set_epoch(epoch),
+                               self.cold.set_epoch(epoch))
 
     def session(self) -> "TieredSession":
         """Role-aware op session over the HOT TIER ONLY (the writable

@@ -40,6 +40,7 @@ from repro.kernels import gather as _ga
 from repro.kernels import ref as _ref
 from repro.kernels import scatter as _sc
 from repro.kernels import score_scan as _ss
+from repro.kernels import sweep_scan as _sw
 from repro.kernels import upsert_scan as _us
 
 
@@ -154,6 +155,24 @@ def assign_kernel(
         interpret=interpret,
     )
     return state._replace(values=new_values)
+
+
+def sweep_mask_kernel(state: HKVState, cfg: HKVConfig, pred,
+                      *, interpret: bool | None = None) -> jax.Array:
+    """Kernel-backed predicate mask for the maintenance sweeps
+    (`core.ops.erase_if` / `evict_if`): one fused pass over the metadata
+    planes evaluating `pred` (a `core.predicates.SweepPredicate`) with
+    liveness gating and per-bucket counting.  Returns the bool [B, S]
+    match mask; bit-identical to the jnp reference because both evaluate
+    `core.predicates.match_planes` (DESIGN.md §Maintenance)."""
+    if interpret is None:
+        interpret = default_interpret()
+    match, _cnt = _sw.sweep_match(
+        state.key_hi, state.key_lo, state.score_hi, state.score_lo,
+        pred.a_hi, pred.a_lo, pred.b_hi, pred.b_lo,
+        kind=pred.kind, interpret=interpret,
+    )
+    return match
 
 
 def bucket_stats_kernel(state: HKVState, *, interpret: bool | None = None):

@@ -37,6 +37,13 @@ def main():
                     help="readonly waves stay pure readers (no tiered "
                          "miss-path promotion)")
     ap.add_argument("--zipf-alpha", type=float, default=1.05)
+    ap.add_argument("--maintain", action="store_true",
+                    help="run the MaintenanceScheduler between waves "
+                         "(watermark rebalance; DESIGN.md §Maintenance)")
+    ap.add_argument("--sweep-budget", type=int, default=512,
+                    help="max structural moves per maintenance step")
+    ap.add_argument("--maintain-every", type=int, default=1,
+                    help="waves between maintenance steps")
     ap.add_argument("--update-read-ratio", type=float, default=0.25,
                     help="trainer steps per served wave")
     # lm mode
@@ -70,9 +77,16 @@ def _embedding_main(args):
         dim=args.dim)
     pub = TablePublisher(table)
     trainer = OnlineTrainer(publisher=pub, publish_every=1)
+    sched = None
+    if args.maintain:
+        from repro.maintenance import MaintenancePolicy, MaintenanceScheduler
+
+        sched = MaintenanceScheduler(MaintenancePolicy(
+            every_waves=args.maintain_every,
+            sweep_budget=args.sweep_budget))
     eng = OnlineEmbeddingEngine(
         pub, wave_size=args.wave_size, miss_policy=args.miss_policy,
-        promote=not args.no_promote)
+        promote=not args.no_promote, scheduler=sched)
 
     serve_rng = np.random.default_rng(args.seed)
     train_rng = np.random.default_rng(args.seed + 1)
@@ -100,6 +114,11 @@ def _embedding_main(args):
           f"hot={m.hot_rate*100:.1f}% kv/s={m.kv_per_s/1e3:.1f}k "
           f"p50={m.p50_latency_s*1e3:.1f}ms p99={m.p99_latency_s*1e3:.1f}ms "
           f"published={pub.published} offered={pub.offered}")
+    if sched is not None:
+        t = sched.totals
+        print(f"[serve] maintenance: {t.runs} steps, demoted={t.demoted} "
+              f"dropped={t.dropped} time={t.time_s*1e3:.0f}ms; "
+              f"reactive demotions/wave={m.demotions_per_wave:.1f}")
     return m
 
 

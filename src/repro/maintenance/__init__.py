@@ -1,0 +1,34 @@
+"""Table maintenance subsystem (DESIGN.md §Maintenance).
+
+Policy-driven eviction as a first-class BETWEEN-waves activity: the
+predicated bulk sweeps (`erase_if` / `evict_if`, implemented in
+`core/ops.py` against the declarative `SweepPredicate`), TTL/epoch
+expiry, proactive tier rebalancing, whole-table observability
+(`TableStats`), and the wave-interleaved `MaintenanceScheduler` the
+serving engine drives them from.
+
+    from repro.maintenance import (MaintenancePolicy, MaintenanceScheduler,
+                                   SweepPredicate)
+    sched = MaintenanceScheduler(MaintenancePolicy(
+        every_waves=4, sweep_budget=512, ttl_epochs=3, advance_epoch=True))
+    eng = OnlineEmbeddingEngine(pub, wave_size=1024, miss_policy="admit",
+                                scheduler=sched)
+
+`SweepPredicate` itself lives in `repro.core.predicates` (the sweep ops
+in `core/ops.py` are defined against it); it is re-exported here as part
+of the subsystem's public surface.
+"""
+
+from repro.core.predicates import SweepPredicate  # noqa: F401
+from repro.maintenance.rebalance import RebalanceResult, rebalance  # noqa: F401
+from repro.maintenance.scheduler import (  # noqa: F401
+    MaintenancePolicy,
+    MaintenanceReport,
+    MaintenanceScheduler,
+    MaintenanceTotals,
+)
+from repro.maintenance.stats import (  # noqa: F401
+    TableStats,
+    combine_stats,
+    stats_from_planes,
+)

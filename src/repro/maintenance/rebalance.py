@@ -1,0 +1,68 @@
+"""Proactive tier rebalancing — watermark-driven hot→cold demotion.
+
+The tier hierarchy (`core/tiered.py`) demotes REACTIVELY: a full hot
+bucket demotes its victim inside the serving-path upsert, so at steady
+state every admission pays an eviction + a cold-tier upsert on the
+latency-critical wave.  This module moves that work BETWEEN waves: when
+the hot tier's occupancy rises past `high_watermark`, the coldest hot
+entries (the ones reactive eviction would pick next anyway) are swept out
+down to `low_watermark` — via `evict_if`'s coldest-first rank order —
+and demoted through the EXISTING cascade (`TieredHKVTable.demote`, i.e.
+the same `EvictionStream` transport and `translate_scores` crossing the
+reactive path uses).  The next wave's admissions then land in empty
+slots: no victim extraction, no rejection, no in-wave cold upsert.
+
+The two-watermark hysteresis is deliberate: sweeping to `low` rather
+than to `high` buys (high-low)*capacity admissions of headroom per
+sweep, so the sweep cadence decouples from the admission rate.
+
+Budgeted: at most `budget` moves per call (the scheduler's step budget —
+maintenance must never stall the wave loop it runs between).  Everything
+is jittable; the scheduler compiles one step function per table config.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops as ops_mod
+from repro.core.predicates import SweepPredicate
+from repro.core.tiered import TieredHKVTable
+
+
+class RebalanceResult(NamedTuple):
+    table: TieredHKVTable
+    moved: jax.Array     # int32 [] — entries demoted hot -> cold
+    dropped: jax.Array   # int32 [] — pairs lost at the cold boundary
+
+
+def rebalance(table: TieredHKVTable, *, low_watermark: float = 0.7,
+              high_watermark: float = 0.9, budget: int = 256
+              ) -> RebalanceResult:
+    """One watermark sweep (see module docstring).
+
+    No-op (moved == 0) while hot occupancy <= high_watermark * capacity;
+    above it, demotes min(budget, occupancy - low_watermark * capacity)
+    of the coldest hot entries.  The table successor is returned either
+    way (jit-friendly: the sweep always executes, the dynamic `limit`
+    masks it to zero moves below the trigger).
+    """
+    if not 0.0 <= low_watermark <= high_watermark <= 1.0:
+        raise ValueError(
+            f"watermarks must satisfy 0 <= low <= high <= 1; got "
+            f"{low_watermark}/{high_watermark}")
+    hot = table.hot
+    cap = hot.capacity
+    budget = min(budget, cap)
+    occ = hot.size()
+    need = jnp.clip(occ - jnp.int32(int(low_watermark * cap)), 0, budget)
+    limit = jnp.where(occ > jnp.int32(int(high_watermark * cap)), need, 0)
+    ev = ops_mod.evict_if(hot.state, hot.cfg, SweepPredicate.always(),
+                          budget, limit=limit, backend=hot.backend)
+    t2 = table.with_tiers(hot.with_state(ev.state), table.cold)
+    dem = t2.demote(ev.evicted)
+    return RebalanceResult(table=dem.table, moved=dem.demoted,
+                           dropped=dem.dropped)

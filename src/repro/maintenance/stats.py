@@ -1,0 +1,140 @@
+"""TableStats — the observability half of the maintenance subsystem.
+
+The scheduler's decisions (when to expire, when to rebalance, how hard)
+need cheap whole-table summaries; operators need the same numbers to
+size tiers.  `TableStats` is that summary, computed from nothing but the
+metadata planes every table family carries (keys + scores), so ONE
+implementation serves `HKVTable`, both tiers of `TieredHKVTable`, the
+dictionary baselines (zero score planes), and `ShardedHKVTable` — whose
+sharded state leaves are globally-addressable arrays, so the same jnp
+reductions run unchanged over the whole mesh (stats never hash keys, so
+shard-local bucket numbering is irrelevant).
+
+Fields:
+
+  size / capacity / load_factor   live entries vs slots
+  occupancy_hist  int32 [S+1]     how many buckets hold exactly k live
+                                  entries — the skew picture (a long tail
+                                  at S means reactive evictions are near)
+  score_q_{hi,lo} uint32 [5]      score quantiles (min, p25, p50, p75,
+                                  max) over live entries in the u64 score
+                                  order — where the eviction threshold
+                                  sits, and what `evict_if` budgets reach
+
+Eviction/demotion/expiry COUNTERS are runtime accumulations, not state
+functions — they live on the `MaintenanceScheduler` (`.totals`) and in
+the serving engine's per-wave reports (`WaveReport.demotions`), next to
+the code that causes them.
+
+Everything is jittable and static-shape; `stats_from_planes` is the
+single implementation the handle `.stats()` methods delegate to.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import u64
+from repro.core.u64 import U64
+
+QUANTILES = (0.0, 0.25, 0.5, 0.75, 1.0)
+
+
+class TableStats(NamedTuple):
+    size: jax.Array            # int32 []
+    capacity: jax.Array        # int32 []
+    load_factor: jax.Array     # float32 []
+    occupancy_hist: jax.Array  # int32 [S+1] — buckets holding exactly k entries
+    score_q_hi: jax.Array      # uint32 [5] — score quantiles (hi plane)
+    score_q_lo: jax.Array      # uint32 [5]
+
+    def score_quantiles(self) -> np.ndarray:
+        """Host-side uint64 view of the score quantiles (min..max)."""
+        hi = np.asarray(self.score_q_hi, np.uint64)
+        lo = np.asarray(self.score_q_lo, np.uint64)
+        return (hi << np.uint64(32)) | lo
+
+
+def stats_from_planes(key_hi: jax.Array, key_lo: jax.Array,
+                      score_hi: Optional[jax.Array] = None,
+                      score_lo: Optional[jax.Array] = None,
+                      *, live: Optional[jax.Array] = None) -> TableStats:
+    """Compute TableStats from [B, S] metadata planes.
+
+    `live` overrides the EMPTY-sentinel liveness test (the open-addressing
+    baseline excludes tombstones); score planes default to zeros (the
+    dictionary baselines carry none).
+    """
+    b, s = key_hi.shape
+    if live is None:
+        live = ~u64.is_empty(U64(key_hi, key_lo))
+    if score_hi is None:
+        score_hi = jnp.zeros((b, s), jnp.uint32)
+    if score_lo is None:
+        score_lo = jnp.zeros((b, s), jnp.uint32)
+    occ_b = jnp.sum(live.astype(jnp.int32), axis=1)
+    hist = jnp.zeros((s + 1,), jnp.int32).at[occ_b].add(1)
+    n = jnp.sum(live.astype(jnp.int32))
+    # live scores sorted ascending; empties ride at the top as the max
+    # sentinel and are excluded by the quantile indexing below
+    ONES = jnp.uint32(0xFFFFFFFF)
+    sh = jnp.where(live, score_hi, ONES).reshape(-1)
+    sl = jnp.where(live, score_lo, ONES).reshape(-1)
+    sh_s, sl_s = jax.lax.sort((sh, sl), num_keys=2)
+    q = jnp.asarray(QUANTILES, jnp.float32)
+    idx = jnp.clip(jnp.round(q * jnp.maximum(n - 1, 0).astype(jnp.float32))
+                   .astype(jnp.int32), 0, b * s - 1)
+    nonempty = n > 0
+    q_hi = jnp.where(nonempty, sh_s[idx], 0)
+    q_lo = jnp.where(nonempty, sl_s[idx], 0)
+    return TableStats(
+        size=n,
+        capacity=jnp.int32(b * s),
+        load_factor=n.astype(jnp.float32) / float(b * s),
+        occupancy_hist=hist,
+        score_q_hi=q_hi.astype(jnp.uint32),
+        score_q_lo=q_lo.astype(jnp.uint32),
+    )
+
+
+def combine_stats(a: TableStats, b: TableStats,
+                  *, size: Optional[jax.Array] = None) -> TableStats:
+    """Merge two tiers'/shards' stats into one table-level view.
+
+    Histograms add elementwise (same slot width — the tier hierarchy
+    shares value-row geometry, so S matches); quantiles MERGE by
+    re-quantiling the two summaries' concatenation (an approximation —
+    exact per-tier quantiles remain available on the inputs).  `size`
+    overrides the sum for hierarchies that dedupe inclusive copies.
+    """
+    n = size if size is not None else a.size + b.size
+    cap = a.capacity + b.capacity
+    # approximate merged quantiles: sort the 10 summary points, take the
+    # same 5 positions (exact when one side is empty)
+    qh = jnp.concatenate([a.score_q_hi, b.score_q_hi])
+    ql = jnp.concatenate([a.score_q_lo, b.score_q_lo])
+    weight = jnp.concatenate([
+        jnp.broadcast_to(a.size, (5,)), jnp.broadcast_to(b.size, (5,))])
+    # empty side's zeros must not drag the min down: push them to the top
+    ONES = jnp.uint32(0xFFFFFFFF)
+    qh = jnp.where(weight > 0, qh, ONES)
+    ql = jnp.where(weight > 0, ql, ONES)
+    qh_s, ql_s = jax.lax.sort((qh, ql), num_keys=2)
+    sel = jnp.asarray([0, 2, 4, 6, 9], jnp.int32)
+    # one side empty -> the other side's quantiles, exactly
+    a_only, b_only = b.size == 0, a.size == 0
+    pick = lambda merged, av, bv: jnp.where(
+        a_only, av, jnp.where(b_only, bv, merged))
+    return TableStats(
+        size=n,
+        capacity=cap,
+        load_factor=n.astype(jnp.float32) / jnp.maximum(
+            cap.astype(jnp.float32), 1.0),
+        occupancy_hist=a.occupancy_hist + b.occupancy_hist,
+        score_q_hi=pick(qh_s[sel], a.score_q_hi, b.score_q_hi).astype(jnp.uint32),
+        score_q_lo=pick(ql_s[sel], a.score_q_lo, b.score_q_lo).astype(jnp.uint32),
+    )

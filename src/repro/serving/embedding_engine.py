@@ -84,6 +84,12 @@ class WaveReport(NamedTuple):
     table_version: int  # publisher version the wave was served from
     hot_hits: int = 0   # lanes served from the HOT tier (tiered readonly
                         # waves; == hits elsewhere)
+    demotions: int = 0  # REACTIVE hot->cold demotions this wave's own
+                        # structural motion caused (tiered admission /
+                        # promotion) — the serving-path eviction tax the
+                        # maintenance scheduler's proactive rebalancing
+                        # exists to drive toward zero (DESIGN.md
+                        # §Maintenance)
 
     @property
     def hit_rate(self) -> float:
@@ -103,6 +109,10 @@ class EngineMetrics(NamedTuple):
     kv_per_s: float     # total keys / total wave wall-clock
     p50_latency_s: float
     p99_latency_s: float
+    # reactive serving-path demotions, total and per wave (tiered tables;
+    # 0 elsewhere) — the number exp7's scheduler-on/off comparison pins
+    reactive_demotions: int = 0
+    demotions_per_wave: float = 0.0
 
 
 # =============================================================================
@@ -133,7 +143,8 @@ class OnlineEmbeddingEngine:
     def __init__(self, table: Any, *, wave_size: int,
                  miss_policy: str = "readonly",
                  promote: Optional[bool] = None,
-                 default_row: Optional[Callable[[U64], jax.Array]] = None):
+                 default_row: Optional[Callable[[U64], jax.Array]] = None,
+                 scheduler: Optional[Any] = None):
         if miss_policy not in MISS_POLICIES:
             raise ValueError(
                 f"miss_policy {miss_policy!r}; one of {MISS_POLICIES}")
@@ -143,6 +154,12 @@ class OnlineEmbeddingEngine:
         self.miss_policy = miss_policy
         self.promote = promote
         self._default_row = default_row
+        # wave-interleaved maintenance (repro.maintenance.scheduler):
+        # after each wave the scheduler gets the hand-off gap — it
+        # snapshots the source, runs one budgeted step, and offers the
+        # successor back through the same CAS as admissions.  Maintenance
+        # time is the scheduler's own metric, never wave latency.
+        self.scheduler = scheduler
         self._queue: deque = deque()      # (request, key offset)
         self._wave_fn = None              # jitted per engine (one cache entry)
         self._mutates = False             # resolved with the wave fn
@@ -195,6 +212,8 @@ class OnlineEmbeddingEngine:
         self._mutates = (policy == "admit"
                          or (bool(promote) and (is_tiered or is_sharded)))
 
+        zero = jnp.int32(0)
+
         def wave(table, kh, kl):
             k = U64(kh, kl)
             init = default_row(k)
@@ -209,7 +228,10 @@ class OnlineEmbeddingEngine:
                 else:
                     r = table.find_or_insert(k, init)
                     vals = r.values
-                return r.table, vals, r.found, r.found
+                # reactive demotion count: what THIS wave's admissions
+                # pushed hot->cold in-line (tiered handles report it)
+                dem = getattr(r, "demoted", zero)
+                return r.table, vals, r.found, r.found, dem
             # readonly: READER role — default-row fallback on miss
             if is_tiered or is_sharded:
                 r = table.find(k, promote=bool(promote))
@@ -218,7 +240,8 @@ class OnlineEmbeddingEngine:
                 r = table.find(k)
                 succ = table
             vals = jnp.where(r.found[:, None], r.values[:, : table.dim], init)
-            return succ, vals, r.found, getattr(r, "hot_hit", r.found)
+            dem = getattr(r, "demoted", zero) if promote else zero
+            return (succ, vals, r.found, getattr(r, "hot_hit", r.found), dem)
 
         if is_sharded:
             return wave   # shard_map ops jit internally; outer jit is per-mesh
@@ -234,11 +257,13 @@ class OnlineEmbeddingEngine:
             self._wave_fn = self._build_wave_fn(table)
         k = u64.from_uint64(lanes)
         t0 = time.perf_counter()
-        succ, vals, found, hot = self._wave_fn(table, k.hi, k.lo)
-        vals, found, hot = jax.block_until_ready((vals, found, hot))
+        succ, vals, found, hot, dem = self._wave_fn(table, k.hi, k.lo)
+        vals, found, hot, dem = jax.block_until_ready((vals, found, hot, dem))
         dt = time.perf_counter() - t0
         if self._mutates:         # admission / promotion built a successor
             self.source.offer(version, succ)
+        if self.scheduler is not None:   # between-waves maintenance slot
+            self.scheduler.on_wave(self.source)
         vals = np.asarray(vals)
         found = np.asarray(found)
         hot = np.asarray(hot)
@@ -256,7 +281,8 @@ class OnlineEmbeddingEngine:
         report = WaveReport(size=int(live.sum()),
                             hits=int(found[:used][live].sum()),
                             latency_s=dt, table_version=version,
-                            hot_hits=int(hot[:used][live].sum()))
+                            hot_hits=int(hot[:used][live].sum()),
+                            demotions=int(dem))
         self.reports.append(report)
         return report
 
@@ -278,6 +304,7 @@ class OnlineEmbeddingEngine:
             return EngineMetrics(0, 0, 0, 0.0, 0.0, 0.0, 0.0, 0.0)
         keys = sum(r.size for r in self.reports)
         hits = sum(r.hits for r in self.reports)
+        demos = sum(r.demotions for r in self.reports)
         timed = (self.reports[1:] if skip_warmup and len(self.reports) > 1
                  else self.reports)
         lat = np.array([r.latency_s for r in timed])
@@ -289,6 +316,8 @@ class OnlineEmbeddingEngine:
             kv_per_s=tkeys / max(float(lat.sum()), 1e-12),
             p50_latency_s=float(np.percentile(lat, 50)),
             p99_latency_s=float(np.percentile(lat, 99)),
+            reactive_demotions=demos,
+            demotions_per_wave=demos / max(len(self.reports), 1),
         )
 
 

@@ -31,6 +31,7 @@ import pytest
 from repro.core import ops
 from repro.core.api import HKVTable, normalize_keys
 from repro.core.oracle import OracleTable
+from repro.core.predicates import SweepPredicate
 from repro.core.u64 import U64
 
 try:
@@ -97,6 +98,21 @@ def _export(t):
     return t.export_batch(0, CAP // 128)
 
 
+EVICT_BUDGET = 8
+
+
+@jax.jit
+def _erase_if(t, pred):
+    r = t.erase_if(pred)
+    return r.table, r.swept
+
+
+@jax.jit
+def _evict_if(t, pred):
+    r = t.evict_if(pred, EVICT_BUDGET)
+    return r.table, r.evicted, r.count
+
+
 # =============================================================================
 # The differential harness (hypothesis-free)
 # =============================================================================
@@ -157,6 +173,47 @@ class DifferentialHarness:
         self.table = _clear(self.table)
         self.oracle.clear()
 
+    # predicated sweeps (kind, a, b) — the maintenance bulk ops.  The
+    # oracle mirrors `match_planes` and the coldest-first rank order, so
+    # swept counts AND the evicted stream must match lane-for-lane.
+
+    @staticmethod
+    def _pred(kind, a, b):
+        if kind == "always":
+            return SweepPredicate.always()
+        if kind == "score_lt":
+            return SweepPredicate.score_below(a)
+        if kind == "score_ge":
+            return SweepPredicate.score_at_least(a)
+        if kind == "epoch_lt":
+            return SweepPredicate.expire_before(a >> 32)
+        return SweepPredicate.key_in_range(a, b)
+
+    def erase_if(self, kind, a=0, b=0):
+        self.table, swept = _erase_if(self.table, self._pred(kind, a, b))
+        want = self.oracle.erase_if(kind, a, b)
+        assert int(swept) == want, f"erase_if({kind}) count"
+
+    def evict_if(self, kind, a=0, b=0):
+        self.table, ev, count = _evict_if(self.table,
+                                          self._pred(kind, a, b))
+        want = self.oracle.evict_if(kind, EVICT_BUDGET, a, b)
+        assert int(count) == len(want), f"evict_if({kind}) count"
+        mask = np.asarray(ev.mask)
+        keys = ((np.asarray(ev.key_hi, np.uint64) << np.uint64(32))
+                | np.asarray(ev.key_lo, np.uint64))
+        scores = ((np.asarray(ev.score_hi, np.uint64) << np.uint64(32))
+                  | np.asarray(ev.score_lo, np.uint64))
+        vals = np.asarray(ev.values)
+        assert not mask[len(want):].any()
+        for lane, (k, s, v) in enumerate(want):
+            assert mask[lane]
+            assert int(keys[lane]) == k, f"lane {lane} key"
+            assert int(scores[lane]) == s, f"lane {lane} score"
+            assert np.array_equal(vals[lane, :DIM],
+                                  np.asarray(v, np.float32)[:DIM]), \
+                f"lane {lane} value"
+
     def check_state(self):
         exp = _export(self.table)
         mask = np.asarray(exp.mask)
@@ -194,8 +251,23 @@ def to_caller_form(ids, form: str):
 
 
 OPS = ("upsert", "find_or_insert", "find", "assign", "accum", "erase",
-       "clear")
+       "erase_if", "evict_if", "clear")
 FORMS = ("uint64", "signed", "list")
+PRED_KINDS = ("always", "score_lt", "score_ge", "epoch_lt", "key_range")
+
+
+def random_pred_args(rng):
+    """(kind, a, b) with operands sized to the harness's key/score pools
+    (LRU clocks stay < ~200; keys live in [0, 61] plus the wide band)."""
+    kind = PRED_KINDS[rng.integers(0, len(PRED_KINDS))]
+    if kind in ("score_lt", "score_ge"):
+        return kind, int(rng.integers(0, 80)), 0
+    if kind == "epoch_lt":
+        return kind, int(rng.integers(0, 2)) << 32, 0
+    if kind == "key_range":
+        lo = int(rng.integers(0, 61))
+        return kind, lo, lo + int(rng.integers(1, 40))
+    return kind, 0, 0
 
 
 # =============================================================================
@@ -230,6 +302,10 @@ def test_seeded_differential_replay(backend):
             h.accum(canonical, caller, v)
         elif op == "erase":
             h.erase(canonical, caller)
+        elif op == "erase_if":
+            h.erase_if(*random_pred_args(rng))
+        elif op == "evict_if":
+            h.evict_if(*random_pred_args(rng))
         else:
             h.clear()
         h.check_state()
@@ -238,6 +314,15 @@ def test_seeded_differential_replay(backend):
 # =============================================================================
 # Driver 2: hypothesis stateful machine (the fuzzer proper)
 # =============================================================================
+
+def _pred_args(kind, a, span, ep):
+    """Map drawn integers onto (kind, a, b) operands per predicate kind."""
+    if kind == "epoch_lt":
+        return kind, ep << 32, 0
+    if kind == "key_range":
+        return kind, a, a + span
+    return kind, a, 0
+
 
 if HAVE_HYPOTHESIS:
     _SMALL = st.integers(0, 60)                  # collision-heavy pool
@@ -288,6 +373,18 @@ if HAVE_HYPOTHESIS:
         @rule(kb=key_batch())
         def erase(self, kb):
             self.h.erase(kb[0], kb[1])
+
+        @rule(kind=st.sampled_from(PRED_KINDS),
+              a=st.integers(0, 80), span=st.integers(1, 40),
+              ep=st.integers(0, 2))
+        def erase_if(self, kind, a, span, ep):
+            self.h.erase_if(*_pred_args(kind, a, span, ep))
+
+        @rule(kind=st.sampled_from(PRED_KINDS),
+              a=st.integers(0, 80), span=st.integers(1, 40),
+              ep=st.integers(0, 2))
+        def evict_if(self, kind, a, span, ep):
+            self.h.evict_if(*_pred_args(kind, a, span, ep))
 
         @rule()
         def clear(self):

@@ -44,14 +44,18 @@ IMPLS = [
 ]
 
 CAPS = {
-    # has_export: export_batch/num_buckets exposed
+    # has_export: export_batch/num_buckets exposed (sharded: per-shard
+    #             drain + concatenation — the PR-5 ROADMAP close)
     # caller_init: find_or_insert takes the caller's init rows
-    "hkv_jnp": dict(has_export=True, caller_init=True),
-    "hkv_kernel": dict(has_export=True, caller_init=True),
-    "dict_oa": dict(has_export=True, caller_init=True),
-    "dict_p2c": dict(has_export=True, caller_init=True),
-    "tiered": dict(has_export=True, caller_init=True),
-    "sharded": dict(has_export=False, caller_init=False),
+    # has_scores: score metadata exists, so score/epoch sweep predicates
+    #             are meaningful (dictionary tables carry zero planes —
+    #             key predicates only)
+    "hkv_jnp": dict(has_export=True, caller_init=True, has_scores=True),
+    "hkv_kernel": dict(has_export=True, caller_init=True, has_scores=True),
+    "dict_oa": dict(has_export=True, caller_init=True, has_scores=False),
+    "dict_p2c": dict(has_export=True, caller_init=True, has_scores=False),
+    "tiered": dict(has_export=True, caller_init=True, has_scores=True),
+    "sharded": dict(has_export=True, caller_init=False, has_scores=True),
 }
 
 _MESH = None
@@ -163,6 +167,26 @@ def _j_clear(t):
 @jax.jit
 def _j_size(t):
     return t.size()
+
+
+SWEEP_BUDGET = 32    # static per jit entry; >= every test's match count
+
+
+@jax.jit
+def _j_erase_if(t, pred):
+    r = t.erase_if(pred)
+    return r.table, r.swept
+
+
+@jax.jit
+def _j_evict_if(t, pred):
+    r = t.evict_if(pred, SWEEP_BUDGET)
+    return r.table, r.evicted, r.count
+
+
+@jax.jit
+def _j_stats(t):
+    return t.stats()
 
 
 def _planes(keys):
@@ -351,6 +375,89 @@ class TestStructuralContract:
         t3, ok = upsert(t2, k, rows_for(k))
         assert ok[: len(KEYS)].all()
         assert size(t3) == len(KEYS)
+
+
+class TestMaintenanceContract:
+    """The PR-5 surface: predicated sweeps + TableStats on every impl."""
+
+    def test_erase_if_key_range(self, table):
+        from repro.core import SweepPredicate
+
+        k = pad_keys(KEYS)
+        t, _ = upsert(table, k, rows_for(k))
+        lo, hi = int(KEYS[4]), int(KEYS[12])
+        t2, swept = _j_erase_if(t, SweepPredicate.key_in_range(lo, hi))
+        inside = (KEYS >= lo) & (KEYS < hi)
+        assert int(swept) == inside.sum()
+        _, found = read(t2, k)
+        np.testing.assert_array_equal(found[: len(KEYS)], ~inside)
+        assert size(t2) == len(KEYS) - inside.sum()
+        # swept slots are reusable
+        t3, ok = upsert(t2, k, rows_for(k))
+        assert ok[: len(KEYS)].all()
+
+    def test_erase_if_score_threshold(self, table):
+        if not CAPS_CURRENT["has_scores"]:
+            pytest.skip("dictionary tables carry no score metadata")
+        from repro.core import SweepPredicate
+
+        a, b = pad_keys(KEYS[:12]), pad_keys(KEYS[12:])
+        t, _ = upsert(table, a, rows_for(a))       # clock 1
+        t, _ = upsert(t, b, rows_for(b))           # clock 2
+        # LRU scores = insert clock; threshold 2 expires only round 1
+        # (tiered: demoted copies carry TRANSLATED scores, same domain)
+        t2, swept = _j_erase_if(t, SweepPredicate.score_below(2))
+        assert int(swept) >= 12                    # >=: inclusive cold copies
+        _, found = read(t2, pad_keys(KEYS))
+        assert not found[:12].any()
+        assert found[12: len(KEYS)].all()
+
+    def test_evict_if_returns_the_removed_entries(self, table):
+        from repro.core import SweepPredicate
+
+        k = pad_keys(KEYS)
+        t, _ = upsert(table, k, rows_for(k))
+        lo, hi = int(KEYS[0]), int(KEYS[8])
+        want = {int(x) for x in KEYS[(KEYS >= lo) & (KEYS < hi)]}
+        t2, stream, count = _j_evict_if(
+            t, SweepPredicate.key_in_range(lo, hi))
+        assert int(count) == len(want)
+        mask = np.asarray(stream.mask)
+        khi = np.asarray(stream.key_hi, np.uint64)
+        klo = np.asarray(stream.key_lo, np.uint64)
+        got = {int((khi[i] << np.uint64(32)) | klo[i])
+               for i in np.nonzero(mask)[0]}
+        assert got == want
+        # the evicted lanes carry the stored rows (the demotion transport)
+        vals = np.asarray(stream.values)
+        for i in np.nonzero(mask)[0]:
+            key = (khi[i] << np.uint64(32)) | klo[i]
+            np.testing.assert_allclose(
+                vals[i, :DIM], np.asarray(rows_for(np.array([key]))[0]))
+        # and are gone from the table
+        _, found = read(t2, k)
+        np.testing.assert_array_equal(
+            found[: len(KEYS)], ~((KEYS >= lo) & (KEYS < hi)))
+
+    def test_stats_sanity(self, table):
+        k = pad_keys(KEYS)
+        t, _ = upsert(table, k, rows_for(k))
+        s = _j_stats(t)
+        assert int(s.size) == len(KEYS)
+        lf = float(s.load_factor)
+        assert 0.0 < lf <= 1.0
+        hist = np.asarray(s.occupancy_hist)
+        assert (hist >= 0).all()
+        # weighted occupancy equals the live count
+        assert (hist * np.arange(len(hist))).sum() >= len(KEYS)
+        q = np.asarray(_j_stats(t).score_quantiles(), np.uint64)
+        assert q.shape == (5,)
+        assert (np.diff(q.astype(np.int64)) >= 0).all()
+
+    def test_empty_table_stats(self, table):
+        s = _j_stats(table)
+        assert int(s.size) == 0
+        assert float(s.load_factor) == 0.0
 
 
 class TestExportContract:

@@ -1,0 +1,151 @@
+"""Kernel/core parity for the Pallas bucket-sweep path (interpret mode).
+
+Same acceptance bar as test_upsert_kernel.py: BIT-IDENTITY.  For
+randomized interleaves of upserts and predicated sweeps — every predicate
+kind, full buckets at λ=1.0, dual-bucket configs, LFU score ties —
+`erase_if`/`evict_if` on backend='kernel' must produce exactly the
+post-state (keys, digests, scores, values), swept counts, and evicted
+streams of the pure-jnp reference.  Both share everything downstream of
+the match mask (`core/ops.py` orchestration); the mask itself is the one
+kernel-replaced stage and evaluates the same `match_planes` formula
+(`core/predicates.py`), so these tests pin that the sweep_scan kernel's
+liveness gating and per-kind compares honor the contract.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import merge, ops, table, u64
+from repro.core.predicates import SweepPredicate
+from repro.kernels import ops as kops
+from repro.kernels import sweep_scan
+
+EMPTY = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def _assert_states_equal(a, b, ctx=""):
+    for f in ("key_hi", "key_lo", "digests", "score_hi", "score_lo", "values",
+              "clock_hi", "clock_lo", "epoch"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{ctx}: state.{f}")
+
+
+def _assert_streams_equal(a, b, ctx=""):
+    for f in ("key_hi", "key_lo", "values", "score_hi", "score_lo", "mask"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{ctx}: evicted.{f}")
+
+
+def _random_preds(rng):
+    """One predicate of each kind, with randomized operands."""
+    lo = int(rng.integers(0, 2**40))
+    return [
+        SweepPredicate.always(),
+        SweepPredicate.score_below(int(rng.integers(1, 64))),
+        SweepPredicate.score_at_least(int(rng.integers(1, 64))),
+        SweepPredicate.expire_before(int(rng.integers(0, 4))),
+        SweepPredicate.key_in_range(lo, lo + int(rng.integers(1, 2**39))),
+    ]
+
+
+@pytest.mark.parametrize("kind_i", range(5))
+def test_sweep_mask_kernel_matches_reference(kind_i):
+    """The replaced stage in isolation: kernel mask == jnp mask, every
+    kind, on a table with live/empty mix and wide keys."""
+    rng = np.random.default_rng(11 + kind_i)
+    cfg = table.HKVConfig(capacity=4 * 128, dim=4, score_policy="lfu")
+    state = table.create(cfg)
+    keys = rng.integers(0, 2**50, size=300).astype(np.uint64)
+    vals = jnp.asarray(rng.normal(size=(300, 4)), jnp.float32)
+    state = merge.upsert(state, cfg, u64.from_uint64(keys), vals).state
+    pred = _random_preds(rng)[kind_i]
+    ref = pred.matches(state.keys, state.scores) & state.occupied_mask()
+    got = kops.sweep_mask_kernel(state, cfg, pred, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref),
+                                  err_msg=f"kind={pred.kind}")
+
+
+def test_sweep_match_counts_agree_with_mask():
+    rng = np.random.default_rng(3)
+    cfg = table.HKVConfig(capacity=2 * 128, dim=4)
+    state = table.create(cfg)
+    keys = rng.integers(0, 2**20, size=200).astype(np.uint64)
+    state = merge.upsert(
+        state, cfg, u64.from_uint64(keys),
+        jnp.zeros((200, 4), jnp.float32)).state
+    pred = SweepPredicate.always()
+    match, cnt = sweep_scan.sweep_match(
+        state.key_hi, state.key_lo, state.score_hi, state.score_lo,
+        pred.a_hi, pred.a_lo, pred.b_hi, pred.b_lo,
+        kind=pred.kind, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(cnt), np.asarray(match).sum(axis=1))
+    # odd bucket counts fall back to tile=1 (the wrapper's guard)
+    m2, c2 = sweep_scan.sweep_match(
+        state.key_hi[:3], state.key_lo[:3], state.score_hi[:3],
+        state.score_lo[:3], pred.a_hi, pred.a_lo, pred.b_hi, pred.b_lo,
+        kind=pred.kind, interpret=True)
+    np.testing.assert_array_equal(np.asarray(m2), np.asarray(match)[:3])
+
+
+@pytest.mark.parametrize("dual", [False, True])
+@pytest.mark.parametrize("policy", ["lru", "lfu"])
+def test_randomized_sweeps_bit_identical_with_full_drain(dual, policy):
+    """Interleave upserts (driving λ to 1.0) with randomized erase_if /
+    evict_if sweeps on both backends; after every op the FULL state must
+    be bit-identical, and a final export drains both tables to the same
+    live set."""
+    rng = np.random.default_rng(29 * (1 + dual) + len(policy))
+    cfg = table.HKVConfig(
+        capacity=4 * 128, dim=4, buckets_per_key=2 if dual else 1,
+        score_policy=policy,
+    )
+    sj = table.create(cfg)
+    sk = table.create(cfg)
+    for step in range(6):
+        keys = rng.integers(0, 2**50, size=192).astype(np.uint64)
+        k = u64.from_uint64(keys)
+        vals = jnp.asarray(rng.normal(size=(192, 4)), jnp.float32)
+        sj = merge.upsert(sj, cfg, k, vals).state
+        sk = kops.upsert_kernel(sk, cfg, k, vals, interpret=True).state
+        pred = _random_preds(rng)[int(rng.integers(0, 5))]
+        if step % 2:
+            rj = ops.erase_if(sj, cfg, pred, backend="jnp")
+            rk = ops.erase_if(sk, cfg, pred, backend="kernel")
+            assert int(rj.swept) == int(rk.swept), f"step {step} swept"
+        else:
+            budget = int(rng.integers(1, 64))
+            rj = ops.evict_if(sj, cfg, pred, budget, backend="jnp")
+            rk = ops.evict_if(sk, cfg, pred, budget, backend="kernel")
+            assert int(rj.count) == int(rk.count), f"step {step} count"
+            _assert_streams_equal(rj.evicted, rk.evicted, f"step {step}")
+        sj, sk = rj.state, rk.state
+        _assert_states_equal(sj, sk, f"step {step} ({pred.kind})")
+    # final full drain: identical live sets on both backends
+    ej = ops.export_batch(sj, cfg, 0, cfg.num_buckets)
+    ek = ops.export_batch(sk, cfg, 0, cfg.num_buckets)
+    for f in ("key_hi", "key_lo", "values", "score_hi", "score_lo", "mask"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ej, f)), np.asarray(getattr(ek, f)))
+
+
+def test_evict_if_limit_parity():
+    """The dynamic-limit seam (the rebalancer's path) on both backends."""
+    rng = np.random.default_rng(5)
+    cfg = table.HKVConfig(capacity=2 * 128, dim=4)
+    k = u64.from_uint64(rng.integers(0, 2**30, size=200).astype(np.uint64))
+    v = jnp.zeros((200, 4), jnp.float32)
+    sj = merge.upsert(table.create(cfg), cfg, k, v).state
+    sk = kops.upsert_kernel(table.create(cfg), cfg, k, v,
+                            interpret=True).state
+    for limit in (0, 7, 200):
+        rj = ops.evict_if(sj, cfg, SweepPredicate.always(), 64,
+                          limit=jnp.int32(limit), backend="jnp")
+        rk = ops.evict_if(sk, cfg, SweepPredicate.always(), 64,
+                          limit=jnp.int32(limit), backend="kernel")
+        assert int(rj.count) == int(rk.count) == min(limit, 64)
+        _assert_streams_equal(rj.evicted, rk.evicted, f"limit={limit}")
+        _assert_states_equal(rj.state, rk.state, f"limit={limit}")

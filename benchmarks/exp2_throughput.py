@@ -12,8 +12,12 @@ of the handle (DESIGN.md §4):
 
     PYTHONPATH=src python -m benchmarks.exp2_throughput --backend kernel
 
-'jnp' (default) times the pure-jnp batch closure; 'kernel' times the fused
-Pallas upsert path.  Off-TPU the kernels execute in interpret mode — the
+'jnp' (default) times the pure-jnp batch closure; 'kernel' times the
+Pallas paths (fused find_scan readers + upsert_scan inserters); 'fused'
+runs the dedicated reader arm instead — per-λ fused-find timings, the
+per-query work counters whose flat curve is the paper's λ-independence
+claim, and a launch-accounting row vs the replaced digest_scan+gather
+composition.  Off-TPU the kernels execute in interpret mode — the
 numbers then measure the Python interpreter, not the hardware, so kernel
 runs shrink the batch to stay tractable and are labelled accordingly.
 """
@@ -46,10 +50,93 @@ def _fill(table, rng, lam, ins):
     return fill_table(table, keys, ins=ins), keys
 
 
+def _count_launches(state, cfg, keys):
+    """Trace-time kernel-launch accounting: invocations of the fused
+    find_scan vs the digest_scan+gather composition it replaced.  The
+    wrappers resolve these module attributes at call time, so swapping in
+    counting shims (restored in `finally`) observes the real dispatch."""
+    from repro.core import ops as core_ops
+    from repro.kernels import digest_scan as _ds
+    from repro.kernels import find_scan as _fs
+    from repro.kernels import gather as _ga
+    from repro.kernels import ops as kops
+
+    slots = [(_fs, "find_scan_tlp"), (_fs, "find_scan_pipeline"),
+             (_ds, "digest_scan_tlp"), (_ds, "digest_scan_pipeline"),
+             (_ga, "gather_rows")]
+    originals = {(m, n): getattr(m, n) for m, n in slots}
+    counts = {"n": 0}
+
+    def shim(orig):
+        def f(*a, **kw):
+            counts["n"] += 1
+            return orig(*a, **kw)
+        return f
+
+    try:
+        for m, n in slots:
+            setattr(m, n, shim(originals[(m, n)]))
+        core_ops.find(state, cfg, keys, backend="kernel")
+        fused = counts["n"]
+        counts["n"] = 0
+        kops.find_composed_kernel(state, cfg, keys)
+        composed = counts["n"]
+    finally:
+        for (m, n), v in originals.items():
+            setattr(m, n, v)
+    return fused, composed
+
+
+def _fused_reader_run(csv: Csv, rng):
+    """--backend fused: the PR-6 reader-path arm.  Times the single-pass
+    fused find across load factors, reports its per-query work counters
+    (the find-curve SHAPE: flat in λ), and counts kernel launches against
+    the replaced digest_scan+gather composition."""
+    from repro.core import find as find_mod
+    from repro.core import ops as core_ops
+
+    dim = 32
+    batch = _insert_batch("kernel")     # interpret-mode tractable off-TPU
+    ins = make_insert_jit()
+    find_j = jax.jit(lambda t, h, l: t.find(U64(h, l)).values)
+    work = {}
+    for lam in (0.5, 0.75, 1.0):
+        table = HKVTable.create(capacity=CAPACITY, dim=dim,
+                                buckets_per_key=2, backend="jnp")
+        table, keys = _fill(table, rng, lam, ins)
+        table = table.with_backend("kernel")
+        hot = u64.from_uint64(rng.choice(keys, size=batch))
+        probe = find_mod.probe_keys(table.cfg, hot)
+        # rows touched per query: candidate bucket rows actually scanned
+        # (bucket2 can alias bucket1) + exactly ONE fused value row
+        meta = 1.0 + float(np.asarray(probe.bucket2 != probe.bucket1).mean())
+        work[lam] = meta + 1.0
+        t = time_fn(find_j, table, hot.hi, hot.lo)
+        r = core_ops.find(table.state, table.cfg, hot, backend="kernel")
+        hit = float(np.asarray(r.found).mean())
+        csv.row(f"fused-find/dim={dim}/lf={lam}", t,
+                f"{kv_per_s(batch, t)/1e6:.2f}M-KV/s,"
+                f"rows_per_find={work[lam]:.2f}(meta={meta:.2f}+value=1),"
+                f"hit_rate={hit:.2f}")
+    lo, hi = min(work.values()), max(work.values())
+    csv.row("fused-find/curve-shape", None,
+            f"work-variation={100 * (hi - lo) / lo:.1f}% over lf 0.5-1.0 "
+            "[paper: find cost is λ-independent]")
+    fused_l, composed_l = _count_launches(table.state, table.cfg, hot)
+    csv.row("fused-find/launches", None,
+            f"fused={fused_l},composed={composed_l},"
+            f"eliminated={composed_l - fused_l}/find")
+    return csv
+
+
 def run(csv: Csv | None = None, backend: str = "jnp"):
-    tag = "" if backend == "jnp" else f" [inserters backend={backend}]"
+    tag = "" if backend == "jnp" else (
+        " [readers: fused find arm]" if backend == "fused"
+        else f" [inserters backend={backend}]")
     csv = csv or Csv(f"Exp#2 API throughput (configs A-C, Figs. 7/8){tag}")
     rng = np.random.default_rng(1)
+    if backend == "fused":
+        return _fused_reader_run(csv, rng)
     ibatch = _insert_batch(backend)
     ins_shared = make_insert_jit()
     for name, dim in CONFIGS.items():
@@ -114,6 +201,8 @@ if __name__ == "__main__":
     import argparse
 
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--backend", default="jnp", choices=("auto", "jnp", "kernel"),
-                    help="inserter-op backend (kernel = fused Pallas upsert path)")
+    ap.add_argument("--backend", default="jnp",
+                    choices=("auto", "jnp", "kernel", "fused"),
+                    help="table-op backend (kernel = Pallas paths; fused = "
+                         "the reader-path launch-accounting arm)")
     run(backend=ap.parse_args().backend)

@@ -1,20 +1,37 @@
-"""Roofline-term extraction from the dry-run artifacts (§Roofline contract).
+"""Roofline analysis: the find-path bytes model + dry-run step terms.
 
-Per (arch x shape x mesh) cell, from runs/dryrun/<mesh>/<cell>.json:
+Two surfaces share this module:
+
+**Find-path roofline (the PR-6 fused-find contract).**  A find is
+memory-bound: the fused kernel makes exactly one pass over each query's
+candidate bucket rows and one value-row fetch, so its cost IS its bytes.
+Per query, with S slots/bucket and P candidate buckets (buckets_per_key):
+
+    metadata   = P * (S          # digest row, uint8
+                      + 2 * 4*S  # key hi/lo planes, uint32
+                      + 2 * 4*S) # score hi/lo planes (FindResult readout)
+    value      = dim * 4         # ONE fused value-row slice, f32
+    bytes/find = metadata + value
+
+The HBM roofline ceiling is then `HBM_BW / bytes_per_find` KV/s, and the
+achieved find rates from `BENCH_exp2.json` (when present in `bench_dir`)
+are reported as distance-to-roofline fractions.  `run()` returns a `Csv`
+so `benchmarks.run` emits it as `BENCH_roofline.json` in the
+bench-trajectory/v1 schema — the CI perf trajectory carries the model
+next to the measurements it bounds.
+
+**Dry-run step terms** (§Roofline contract, unchanged): per
+(arch x shape x mesh) cell from runs/dryrun/<mesh>/<cell>.json,
 
   compute term    = FLOPs / (chips x 197e12 bf16 FLOP/s)
   memory term     = bytes_accessed / (chips x 819e9 B/s HBM)
   collective term = wire_bytes / (chips x 50e9 B/s ICI link)
 
-All three use PER-DEVICE quantities from the compiled artifact divided by
-per-chip peaks (equivalent to the global/(chips x peak) form).
-
 FLOPs source: XLA's cost analysis counts while-loop bodies ONCE, so any
-cell whose graph still contains loops (scan_layers prefill cells, chunked
-attention/GLA scans) under-reports.  We therefore also compute an ANALYTIC
-per-device FLOPs (6*N*D for train, 2*N_active*D for decode/prefill, +
-attention term 2*B*S^2*H*dh*(2 or 3)/dp) and report both; the roofline
-terms use max(hlo, analytic) and the MODEL/HLO ratio flags the gap.
+cell whose graph still contains loops under-reports; an ANALYTIC
+per-device FLOPs is computed alongside and the terms use max(hlo,
+analytic).  `scripts/gen_roofline_md.py` renders these via
+`load_cells`/`terms`.
 """
 
 from __future__ import annotations
@@ -26,6 +43,100 @@ import os
 PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e-class target)
 HBM_BW = 819e9           # B/s per chip
 ICI_BW = 50e9            # B/s per link
+
+SLOTS = 128              # slots per bucket (core.table.SLOTS_PER_BUCKET)
+CONFIGS = {"A": 8, "B": 32, "C": 64}   # exp2's paper configs (dim)
+
+
+# =============================================================================
+# Find-path bytes model
+# =============================================================================
+
+
+def find_bytes(dim: int, *, buckets_per_key: int = 1,
+               slots: int = SLOTS) -> dict:
+    """Bytes one fused find moves per query, split by plane."""
+    digest = slots                      # uint8 row per candidate bucket
+    keys = 2 * 4 * slots                # key hi/lo uint32 rows
+    scores = 2 * 4 * slots              # score hi/lo uint32 rows
+    metadata = buckets_per_key * (digest + keys + scores)
+    value = 4 * dim                     # one f32 value-row slice
+    return {
+        "digest": buckets_per_key * digest,
+        "keys": buckets_per_key * keys,
+        "scores": buckets_per_key * scores,
+        "value": value,
+        "total": metadata + value,
+    }
+
+
+def find_ceiling_kv_s(dim: int, *, buckets_per_key: int = 1,
+                      slots: int = SLOTS) -> float:
+    """HBM roofline on finds/s: one fused pass is pure memory traffic."""
+    return HBM_BW / find_bytes(dim, buckets_per_key=buckets_per_key,
+                               slots=slots)["total"]
+
+
+def load_exp2(bench_dir: str) -> list[dict]:
+    """Achieved find rows from a prior `BENCH_exp2.json`, if any:
+    [{name, dim, kv_per_s}] for rows named find/cfgX(dim=D)/lf=L."""
+    import re
+
+    path = os.path.join(bench_dir, "BENCH_exp2.json")
+    if not os.path.isfile(path):
+        return []
+    with open(path) as f:
+        doc = json.load(f)
+    out = []
+    for row in doc.get("rows", []):
+        m = re.match(r"find/cfg\w\(dim=(\d+)[^)]*\)/lf=([\d.]+)",
+                     row.get("name", ""))
+        if m and row.get("kv_per_s"):
+            out.append({"name": row["name"], "dim": int(m.group(1)),
+                        "kv_per_s": float(row["kv_per_s"])})
+    return out
+
+
+def run_find_roofline(csv=None, bench_dir: str = "runs/bench"):
+    """Bytes-per-find + ceiling per config, and (when exp2 artifacts are
+    present) each measured find rate's distance to its roofline."""
+    from benchmarks.common import Csv
+
+    csv = csv or Csv("Roofline: fused-find bytes model + exp2 distance "
+                     "[ceiling = HBM_BW / bytes-per-find]")
+    for name, dim in CONFIGS.items():
+        for p in (1, 2):
+            b = find_bytes(dim, buckets_per_key=p)
+            ceil = find_ceiling_kv_s(dim, buckets_per_key=p)
+            csv.row(
+                f"find-model/cfg{name}(dim={dim})/P={p}", None,
+                f"bytes/find={b['total']}"
+                f"(digest={b['digest']}+keys={b['keys']}"
+                f"+scores={b['scores']}+value={b['value']}),"
+                f"ceiling={ceil/1e6:.0f}M-KV/s@{HBM_BW/1e9:.0f}GB/s",
+                kv_s=ceil,
+            )
+    achieved = load_exp2(bench_dir)
+    if not achieved:
+        csv.row("find-distance", None,
+                f"no BENCH_exp2.json under {bench_dir}: run exp2 with "
+                "--json-out first for distance rows")
+    for rec in achieved:
+        # exp2's measured tables are single-bucket; CPU-interpret numbers
+        # are far off the TPU roofline by design — the DISTANCE is the
+        # trajectory metric, comparable run-over-run
+        ceil = find_ceiling_kv_s(rec["dim"], buckets_per_key=1)
+        frac = rec["kv_per_s"] / ceil
+        csv.row(f"find-distance/{rec['name']}", None,
+                f"achieved={rec['kv_per_s']/1e6:.2f}M-KV/s,"
+                f"ceiling={ceil/1e6:.0f}M-KV/s,frac={frac:.2e}",
+                kv_s=rec["kv_per_s"])
+    return csv
+
+
+# =============================================================================
+# Dry-run step terms (arch x shape cells)
+# =============================================================================
 
 SHAPES = {
     "train_4k": ("train", 4096, 256),
@@ -130,14 +241,12 @@ def terms(rec: dict, arch=None) -> dict:
     }
 
 
-def run(out_dir: str = "runs/dryrun", mesh: str = "single"):
-    from benchmarks.common import Csv
+def _dryrun_terms(csv, out_dir: str, mesh: str):
     from repro.configs import get_arch
 
-    csv = Csv(f"Roofline terms per (arch x shape), mesh={mesh} "
-              f"[seconds per step; bottleneck = max term]")
     for rec in load_cells(out_dir, mesh):
-        tag = f"{rec['arch']}/{rec['shape']}/{rec.get('backend','dense')}"
+        tag = f"step/{mesh}/{rec['arch']}/{rec['shape']}/" \
+              f"{rec.get('backend', 'dense')}"
         if "skipped" in rec:
             csv.row(tag, None, f"SKIP({rec['skipped']})")
             continue
@@ -154,7 +263,18 @@ def run(out_dir: str = "runs/dryrun", mesh: str = "single"):
         )
 
 
+def run(csv=None, bench_dir: str = "runs/bench",
+        dryrun_dir: str = "runs/dryrun"):
+    """The benchmarks.run entry: find-path roofline always, dry-run step
+    terms for whichever meshes have artifacts.  Returns the Csv."""
+    csv = run_find_roofline(csv, bench_dir=bench_dir)
+    for mesh in ("single", "multi"):
+        if os.path.isdir(os.path.join(dryrun_dir, mesh)):
+            _dryrun_terms(csv, dryrun_dir, mesh)
+    return csv
+
+
 if __name__ == "__main__":
     import sys
 
-    run(mesh=sys.argv[1] if len(sys.argv) > 1 else "single")
+    run(bench_dir=sys.argv[1] if len(sys.argv) > 1 else "runs/bench")

@@ -7,8 +7,11 @@
       --smoke --json-out runs/bench --timestamp 2026-07-26T00:00:00Z
 
 Output: `name,us_per_call,derived` CSV blocks per experiment on stdout.
-Roofline rows appear when dry-run artifacts exist under runs/dryrun/.
---backend selects the inserter-op implementation for exp2 (DESIGN.md §4).
+`roofline` emits the fused-find bytes model + distance-to-roofline against
+any BENCH_exp2.json in the --json-out dir (dry-run step terms ride along
+when runs/dryrun/ artifacts exist).  --backend selects the table-op
+implementation for exp2 (DESIGN.md §4); `fused` adds the reader-path
+launch-accounting arm on top of the kernel backend.
 
 Trajectory artifacts: with `--json-out DIR`, each experiment additionally
 writes `DIR/BENCH_<exp>.json` in the stable `bench-trajectory/v1` schema —
@@ -57,8 +60,8 @@ def _pop_flag(args: list, flag: str, *, takes_value: bool = True):
 def main() -> None:
     args = sys.argv[1:]
     backend = _pop_flag(args, "--backend") or "jnp"
-    if backend not in ("auto", "jnp", "kernel"):
-        sys.exit("error: --backend requires one of auto|jnp|kernel")
+    if backend not in ("auto", "jnp", "kernel", "fused"):
+        sys.exit("error: --backend requires one of auto|jnp|kernel|fused")
     json_out = _pop_flag(args, "--json-out")
     timestamp = _pop_flag(args, "--timestamp")
     smoke = _pop_flag(args, "--smoke", takes_value=False)
@@ -70,7 +73,7 @@ def main() -> None:
     bad = [a for a in args if a not in known]
     if bad:
         sys.exit(f"error: unknown argument(s) {bad}; experiments: {sorted(known)}, "
-                 "options: --backend auto|jnp|kernel --smoke "
+                 "options: --backend auto|jnp|kernel|fused --smoke "
                  "--json-out DIR --timestamp TS")
     if backend != "jnp" and args and "exp2" not in args:
         sys.exit("error: --backend only applies to exp2; add exp2 to the "
@@ -126,10 +129,9 @@ def main() -> None:
     if want("roofline"):
         from benchmarks import roofline
 
-        if os.path.isdir("runs/dryrun/single"):
-            roofline.run(mesh="single")
-        if os.path.isdir("runs/dryrun/multi"):
-            roofline.run(mesh="multi")
+        # read exp2 artifacts from the SAME --json-out dir when set, so a
+        # single invocation's distance rows reflect the run it just wrote
+        emit("roofline", roofline.run(bench_dir=json_out or "runs/bench"))
 
 
 if __name__ == "__main__":

@@ -282,17 +282,26 @@ class HKVTable:
 
     # -- readers ---------------------------------------------------------------
 
+    # Readers thread the handle backend so backend='kernel' rides the FUSED
+    # find_scan pass (one launch: match + scores + values) with no API
+    # change — every handle-based consumer (tiered probes, shard bodies,
+    # engine waves) inherits it automatically (DESIGN.md §Readers).
+
     def find(self, keys: Any) -> ops_mod.FindResult:
-        return ops_mod.find(self.state, self.cfg, normalize_keys(keys))
+        return ops_mod.find(self.state, self.cfg, normalize_keys(keys),
+                            backend=self.backend)
 
     def find_ptr(self, keys: Any) -> find_mod.Locate:
-        return ops_mod.find_ptr(self.state, self.cfg, normalize_keys(keys))
+        return ops_mod.find_ptr(self.state, self.cfg, normalize_keys(keys),
+                                backend=self.backend)
 
     def find_rows(self, keys: Any) -> ops_mod.FindRowsResult:
-        return ops_mod.find_rows(self.state, self.cfg, normalize_keys(keys))
+        return ops_mod.find_rows(self.state, self.cfg, normalize_keys(keys),
+                                 backend=self.backend)
 
     def contains(self, keys: Any) -> jax.Array:
-        return ops_mod.contains(self.state, self.cfg, normalize_keys(keys))
+        return ops_mod.contains(self.state, self.cfg, normalize_keys(keys),
+                                backend=self.backend)
 
     def probe_keys(self, keys: Any) -> find_mod.Probe:
         return find_mod.probe_keys(self.cfg, normalize_keys(keys))
@@ -669,22 +678,29 @@ class OpSession:
                     continue
                 loc = locs.get(op.key_ref)
                 if loc is None and op.kind != "noop":
-                    loc = find_mod.locate(state, cfg, keys)
+                    # the shared probe is backend-aware too: on the kernel
+                    # backend the session's one locate per key batch runs
+                    # the digest_scan kernel (bit-identical to jnp locate)
+                    loc = ops_mod.find_ptr(state, cfg, keys, backend=backend)
                     locs[op.key_ref] = loc
-                state = self._run_nonstructural(op, state, cfg, keys, loc)
+                state = self._run_nonstructural(op, state, cfg, keys, loc,
+                                                backend)
         for op in self._ops:
             op.ref._committed = True
         self._committed = True
         self._result_table = self._table.with_state(state)
         return self._result_table
 
-    def _run_nonstructural(self, op, state, cfg, keys, loc):
+    def _run_nonstructural(self, op, state, cfg, keys, loc, backend):
         if op.kind == "find":
-            op.ref.value = ops_mod.find(state, cfg, keys, loc=loc)
+            op.ref.value = ops_mod.find(state, cfg, keys, loc=loc,
+                                        backend=backend)
         elif op.kind == "find_rows":
-            op.ref.value = ops_mod.find_rows(state, cfg, keys, loc=loc)
+            op.ref.value = ops_mod.find_rows(state, cfg, keys, loc=loc,
+                                             backend=backend)
         elif op.kind == "contains":
-            op.ref.value = ops_mod.contains(state, cfg, keys, loc=loc)
+            op.ref.value = ops_mod.contains(state, cfg, keys, loc=loc,
+                                            backend=backend)
         elif op.kind == "assign":
             values, update_scores = op.args
             state = ops_mod.assign(state, cfg, keys, values,
@@ -700,7 +716,8 @@ class OpSession:
             op.ref.value = state
         elif op.kind == "update_rows":
             fn, update_scores = op.args
-            got = ops_mod.find_rows(state, cfg, keys, loc=loc)
+            got = ops_mod.find_rows(state, cfg, keys, loc=loc,
+                                    backend=backend)
             state = ops_mod.assign(state, cfg, keys, fn(got.rows),
                                    update_scores=update_scores, loc=loc)
             op.ref.value = got

@@ -30,19 +30,24 @@ structure* rather than a lock protocol (DESIGN.md §2):
 Every op is batch-synchronous, jittable, static-shape, and accepts the
 EMPTY sentinel (0xFFFF_FFFF_FFFF_FFFF) as a padding key that is ignored.
 
-Kernel backends (DESIGN.md §4): the hot ops exist in two implementations —
-the pure-jnp reference in this package and the Pallas kernel path in
-`repro.kernels`.  Readers find/find_ptr and updaters assign/assign_add have
-kernel twins in `repro.kernels.ops` (find_kernel/locate_kernel/
-assign_kernel); the INSERTERS insert_or_assign, insert_and_evict, and
-find_or_insert take a `backend='auto'|'jnp'|'kernel'` argument here and
-dispatch to the fused upsert_scan path (`repro.kernels.ops.upsert_kernel`),
-which shares this module's batch-closure orchestration and is bit-identical.
-'auto' resolves to 'kernel' on TPU and 'jnp' elsewhere (off-TPU the kernels
-run in interpret mode — correct but slow, so it is opt-in).  contains/size/
-export_batch*, assign_scores, erase, clear, and accum_or_assign remain
-jnp-only: they are trivial reductions or metadata-plane scatters with no
-kernel to win.
+Kernel backends (DESIGN.md §4, §Readers): the hot ops exist in two
+implementations — the pure-jnp reference in this package and the Pallas
+kernel path in `repro.kernels` — selected by a
+`backend='auto'|'jnp'|'kernel'` argument.  READERS find/find_rows dispatch
+to the FUSED find_scan pass (`repro.kernels.ops.find_fused_kernel`: digest
+pre-filter + full-key confirm + score readout + in-line value gather in
+one launch); find_ptr/contains take the metadata-only locate kernel; when
+a session supplies a shared `loc=`, the value stage alone runs on the
+kernel (gather_rows).  The INSERTERS insert_or_assign, insert_and_evict,
+and find_or_insert dispatch to the fused upsert_scan path
+(`repro.kernels.ops.upsert_kernel`), which shares this module's
+batch-closure orchestration; the sweeps erase_if/evict_if dispatch their
+mask stage.  Every kernel path is bit-identical to its jnp reference.
+'auto' resolves to 'kernel' on TPU and 'jnp' elsewhere (off-TPU the
+kernels run in interpret mode — correct but slow, so it is opt-in).
+size/export_batch*, assign_scores, erase, clear, and accum_or_assign
+remain jnp-only: they are trivial reductions or metadata-plane scatters
+with no kernel to win.
 """
 
 from __future__ import annotations
@@ -81,35 +86,79 @@ class FindResult(NamedTuple):
     score_lo: jax.Array
 
 
+def _fused_find(state: HKVState, cfg: HKVConfig, keys: U64, backend: str):
+    """The reader-side kernel dispatch: the fused find_scan pass when the
+    backend resolves to 'kernel', else None (caller falls through to the
+    jnp reference).  One launch resolves match + scores + values."""
+    if _resolve_backend(backend) != "kernel":
+        return None
+    from repro.kernels import ops as kernel_ops  # deferred: kernels import core
+
+    return kernel_ops.find_fused_kernel(state, cfg, keys)
+
+
+def _gather_shared(state: HKVState, cfg: HKVConfig, loc, dim):
+    """Value gather at a caller-supplied (session-shared) locate — kernel
+    row pipeline on the hbm tier, jnp `tier_gather` otherwise."""
+    if cfg.value_tier == "hbm":
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.gather_rows_kernel(
+            state, loc, state.values.shape[1] if dim is None else dim)
+    return find_mod.gather_values(state, loc, dim, cfg.value_tier)
+
+
 def find(state: HKVState, cfg: HKVConfig, keys: U64,
-         loc: Optional[find_mod.Locate] = None) -> FindResult:
+         loc: Optional[find_mod.Locate] = None, *,
+         backend: str = "auto") -> FindResult:
     """Reader. Digest-accelerated lookup with value copy (paper `find`).
+
+    backend='kernel' (or 'auto' on TPU) runs the FUSED find_scan pass when
+    no shared `loc` is supplied: probe, match, score readout, and value
+    gather in one kernel launch.  With a session-shared `loc`, the value
+    stage alone runs on the kernel.  Bit-identical either way.
 
     Consumer code: prefer `HKVTable.find` / `session.find` (repro.core.api).
     """
     if loc is None:
+        r = _fused_find(state, cfg, keys, backend)
+        if r is not None:
+            return FindResult(values=r.values[:, : cfg.dim], found=r.found,
+                              score_hi=r.score_hi, score_lo=r.score_lo)
         loc = find_mod.locate(state, cfg, keys)
-    vals = find_mod.gather_values(state, loc, cfg.dim, cfg.value_tier)
+        vals = find_mod.gather_values(state, loc, cfg.dim, cfg.value_tier)
+    elif _resolve_backend(backend) == "kernel":
+        vals = _gather_shared(state, cfg, loc, cfg.dim)
+    else:
+        vals = find_mod.gather_values(state, loc, cfg.dim, cfg.value_tier)
     shi = jnp.where(loc.found, state.score_hi[loc.bucket, loc.slot], 0)
     slo = jnp.where(loc.found, state.score_lo[loc.bucket, loc.slot], 0)
     return FindResult(values=vals, found=loc.found, score_hi=shi, score_lo=slo)
 
 
-def find_ptr(state: HKVState, cfg: HKVConfig, keys: U64) -> find_mod.Locate:
+def find_ptr(state: HKVState, cfg: HKVConfig, keys: U64, *,
+             backend: str = "auto") -> find_mod.Locate:
     """Reader. The paper's pointer-returning `find*`: key-side work only.
 
     Returns position handles (bucket, slot, row) instead of copying values —
     the position-based addressing contract of §3.6 means `row` *is* the
     value address.  Dimension-independent, like the paper's ~7 B-KV/s path.
+    backend='kernel' runs the metadata-only digest_scan locate (no value
+    traffic — the fused pass would fetch rows this op must not touch).
     """
+    if _resolve_backend(backend) == "kernel":
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.locate_kernel(state, cfg, keys)
     return find_mod.locate(state, cfg, keys)
 
 
 def contains(state: HKVState, cfg: HKVConfig, keys: U64,
-             loc: Optional[find_mod.Locate] = None) -> jax.Array:
+             loc: Optional[find_mod.Locate] = None, *,
+             backend: str = "auto") -> jax.Array:
     """Reader. Membership only (no value traffic)."""
     if loc is None:
-        loc = find_mod.locate(state, cfg, keys)
+        loc = find_ptr(state, cfg, keys, backend=backend)
     return loc.found
 
 
@@ -122,7 +171,8 @@ class FindRowsResult(NamedTuple):
 
 
 def find_rows(state: HKVState, cfg: HKVConfig, keys: U64,
-              loc: Optional[find_mod.Locate] = None) -> FindRowsResult:
+              loc: Optional[find_mod.Locate] = None, *,
+              backend: str = "auto") -> FindRowsResult:
     """Reader. Full-width row gather (embedding + aux optimizer columns).
 
     The sparse-optimizer path: gathers the entire stored row so slot state
@@ -130,10 +180,20 @@ def find_rows(state: HKVState, cfg: HKVConfig, keys: U64,
     zero rows — callers must mask by `found` (the usual consumer, a
     row-refresh via `assign`, drops misses anyway).  Scores ride along so
     a promotion (`core/tiered.py`) can move an entry between tiers without
-    a second metadata probe."""
+    a second metadata probe.  backend='kernel' takes the same fused
+    find_scan pass as `find` — the kernel already gathers full-width rows
+    and reads out scores, so this op is one launch too."""
     if loc is None:
+        r = _fused_find(state, cfg, keys, backend)
+        if r is not None:
+            return FindRowsResult(rows=r.values, found=r.found, row=r.row,
+                                  score_hi=r.score_hi, score_lo=r.score_lo)
         loc = find_mod.locate(state, cfg, keys)
-    rows = find_mod.gather_values(state, loc, None, cfg.value_tier)
+        rows = find_mod.gather_values(state, loc, None, cfg.value_tier)
+    elif _resolve_backend(backend) == "kernel":
+        rows = _gather_shared(state, cfg, loc, None)
+    else:
+        rows = find_mod.gather_values(state, loc, None, cfg.value_tier)
     shi = jnp.where(loc.found, state.score_hi[loc.bucket, loc.slot], 0)
     slo = jnp.where(loc.found, state.score_lo[loc.bucket, loc.slot], 0)
     return FindRowsResult(rows=rows, found=loc.found, row=loc.row,

@@ -540,6 +540,9 @@ class TieredHKVTable:
         if promote is None:
             promote = self.promote_on_find
         k = normalize_keys(keys)
+        # both probe legs go through the handle readers, so on the kernel
+        # backend each is ONE fused find_scan pass (hot: values in-line;
+        # cold hmem values cross tiers via the locate+tier_gather split)
         h = self.hot.find(k)
         cold_rows = self.cold.find_rows(_mask_keys(k, ~h.found))
         cold_hit = cold_rows.found

@@ -134,6 +134,8 @@ class ShardedHKVEmbedding:
             state, rows = res.table.state, res.values
             present = res.found  # pre-existing (find_or_insert contract)
         else:
+            # handle readers carry the backend: shard-local finds run the
+            # fused find_scan pass when the embedding config picked kernel
             if isinstance(t, TieredHKVTable):
                 fr = t.find(rk, promote=promote)
             else:

@@ -7,10 +7,15 @@ in `repro.core` and are cross-checked against them in tests.
 
 Role taxonomy coverage (paper §3.5; see also `repro.core.ops`):
 
-  READERS    kernel-backed here: locate_kernel (digest_scan tlp/pipeline),
-             find_kernel (digest_scan + gather_rows), bucket_stats_kernel
-             (score_scan).  jnp-only: contains/size/load_factor/export_*
-             (trivial reductions/slices — nothing for a kernel to win).
+  READERS    kernel-backed here: find_fused_kernel / find_kernel /
+             find_many_kernel (the FUSED find_scan path: digest pre-filter
+             + full-key confirm + score readout + in-line value gather in
+             ONE launch over both candidate bucket rows — DESIGN.md
+             §Readers), locate_kernel (digest_scan tlp/pipeline; the
+             metadata-only path behind find_ptr/contains and the updaters),
+             bucket_stats_kernel (score_scan).  jnp-only: size/load_factor/
+             export_* (trivial reductions/slices — nothing for a kernel to
+             win).
   UPDATERS   kernel-backed here: assign_kernel (assign / assign_add via
              scatter_rows).  jnp-only: assign_scores (scalar metadata
              scatter, no value traffic).
@@ -25,7 +30,7 @@ Role taxonomy coverage (paper §3.5; see also `repro.core.ops`):
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +41,7 @@ from repro.core import u64
 from repro.core.table import HKVConfig, HKVState
 from repro.core.u64 import U64
 from repro.kernels import digest_scan as _ds
+from repro.kernels import find_scan as _fs
 from repro.kernels import gather as _ga
 from repro.kernels import ref as _ref
 from repro.kernels import scatter as _sc
@@ -107,6 +113,97 @@ def locate_kernel(
     return find_mod.Locate(found=found, bucket=bucket, slot=slot, row=bucket * s + slot)
 
 
+class FusedFind(NamedTuple):
+    """Everything the fused find pass resolves per query, in one launch."""
+
+    values: jax.Array    # [N, dim + aux] full-width hit rows (zeros on miss)
+    found: jax.Array     # bool [N]
+    bucket: jax.Array    # int32 [N] bucket holding the key (b1 on miss)
+    slot: jax.Array      # int32 [N] slot holding the key (0 on miss)
+    row: jax.Array       # int32 [N] value row = bucket * S + slot
+    score_hi: jax.Array  # uint32 [N] hit entry scores (0 on miss)
+    score_lo: jax.Array
+
+    @property
+    def loc(self) -> find_mod.Locate:
+        return find_mod.Locate(found=self.found, bucket=self.bucket,
+                               slot=self.slot, row=self.row)
+
+
+def find_fused_kernel(
+    state: HKVState,
+    cfg: HKVConfig,
+    keys: U64,
+    *,
+    variant: str = "pipeline",
+    interpret: bool | None = None,
+) -> FusedFind:
+    """The fused find pass (find_scan.py): digest pre-filter + full-key
+    confirm + dual-bucket merge + score readout + in-line value gather, in
+    ONE kernel launch — replacing the digest_scan (x buckets_per_key) +
+    gather_rows composition and its on-host row-address round trip.
+
+    Bit-identical to `core.find.locate` + `gather_values` + the score
+    readout in `core.ops.find`/`find_rows` (the jnp oracle; pinned in
+    tests/test_find_kernel.py).  Host-tier value planes ('hmem') keep the
+    §3.6 crossing contract: the kernel locates, `tier_gather` moves rows.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if cfg.value_tier != "hbm":
+        # host-tier rows cross via the jnp tier contract; metadata still
+        # resolves on the kernel locate path
+        loc = locate_kernel(state, cfg, keys, variant=variant,
+                            interpret=interpret)
+        vals = find_mod.gather_values(state, loc, None, cfg.value_tier)
+        shi = jnp.where(loc.found, state.score_hi[loc.bucket, loc.slot], 0)
+        slo = jnp.where(loc.found, state.score_lo[loc.bucket, loc.slot], 0)
+        return FusedFind(values=vals, found=loc.found, bucket=loc.bucket,
+                         slot=loc.slot, row=loc.row, score_hi=shi,
+                         score_lo=slo)
+
+    n = keys.hi.shape[0]
+    probe = find_mod.probe_keys(cfg, keys)
+    qd = probe.digest.astype(jnp.uint32)
+    if variant == "pipeline":
+        q_tile = min(128, n) if n % 128 else 128
+        npad = -(-n // q_tile) * q_tile
+        scan = functools.partial(_fs.find_scan_pipeline, q_tile=q_tile,
+                                 use_digest=cfg.use_digest,
+                                 interpret=interpret)
+    elif variant == "tlp":
+        npad = n
+        scan = functools.partial(_fs.find_scan_tlp,
+                                 use_digest=cfg.use_digest,
+                                 interpret=interpret)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    b2 = probe.bucket2 if cfg.buckets_per_key == 2 else probe.bucket1
+    found, sel, slot, shi, slo, vals = scan(
+        state.digests, state.key_hi, state.key_lo,
+        state.score_hi, state.score_lo, state.values,
+        _pad_to(probe.bucket1, npad),
+        _pad_to(b2, npad),
+        _pad_to(qd, npad),
+        _pad_to(keys.hi, npad, u64.EMPTY_HI),
+        _pad_to(keys.lo, npad, u64.EMPTY_LO),
+    )
+    # re-mask by probe validity: an EMPTY padding key may alias empty slots
+    # in-kernel; the reference masks those out via probe.valid
+    found = found[:n].astype(bool) & probe.valid
+    sel, slot = sel[:n], slot[:n]
+    bucket = jnp.where(sel == 1, b2, probe.bucket1)
+    return FusedFind(
+        values=jnp.where(found[:, None], vals[:n], 0),
+        found=found,
+        bucket=bucket,
+        slot=slot,
+        row=bucket * cfg.slots_per_bucket + slot,
+        score_hi=jnp.where(found, shi[:n], 0),
+        score_lo=jnp.where(found, slo[:n], 0),
+    )
+
+
 def find_kernel(
     state: HKVState,
     cfg: HKVConfig,
@@ -115,7 +212,24 @@ def find_kernel(
     variant: str = "pipeline",
     interpret: bool | None = None,
 ):
-    """Kernel-backed `find`: digest scan + position-addressed value gather."""
+    """Kernel-backed `find`: ONE fused pass (was digest_scan + gather_rows)."""
+    r = find_fused_kernel(state, cfg, keys, variant=variant,
+                          interpret=interpret)
+    return r.values[:, : cfg.dim], r.found
+
+
+def find_composed_kernel(
+    state: HKVState,
+    cfg: HKVConfig,
+    keys: U64,
+    *,
+    variant: str = "pipeline",
+    interpret: bool | None = None,
+):
+    """The pre-fusion composition — digest_scan locate (one launch per
+    candidate bucket) + position-addressed gather_rows launch — kept as the
+    launch-count/parity baseline the fused path is measured against
+    (tests/test_find_kernel.py, benchmarks/exp2 `fused` arm)."""
     if interpret is None:
         interpret = default_interpret()
     loc = locate_kernel(state, cfg, keys, variant=variant, interpret=interpret)
@@ -124,6 +238,91 @@ def find_kernel(
         state.values, rows, loc.found.astype(jnp.int32), interpret=interpret
     )
     return vals[:, : cfg.dim], loc.found
+
+
+def find_many_kernel(
+    states: Sequence[HKVState],
+    cfg: HKVConfig,
+    keys_list: Sequence[U64],
+    *,
+    variant: str = "pipeline",
+    interpret: bool | None = None,
+) -> list[FusedFind]:
+    """Batched multi-table lookup: T same-geometry tables in ONE launch.
+
+    The embedding layer keeps one table per feature; serving a wave used to
+    launch one find per feature.  Same-geometry tables (same cfg) stack
+    along the bucket axis — metadata planes [T*B, S], value plane
+    [T*B*S, V] — and per-table probes offset their buckets by t*B, so the
+    SAME fused kernel serves all features in a single grid.  Returns one
+    `FusedFind` per table with table-local bucket/row indices.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if not states:
+        return []
+    if cfg.value_tier != "hbm":
+        raise ValueError("find_many_kernel requires the hbm value tier")
+    b = cfg.num_buckets
+    s = cfg.slots_per_bucket
+    for st in states:
+        if st.key_hi.shape != (b, s) or st.values.shape != states[0].values.shape:
+            raise ValueError("find_many_kernel requires same-geometry tables")
+    probes = [find_mod.probe_keys(cfg, k) for k in keys_list]
+    counts = [k.hi.shape[0] for k in keys_list]
+    off = lambda a, t: a + jnp.int32(t * b)
+    b1 = jnp.concatenate([off(p.bucket1, t) for t, p in enumerate(probes)])
+    b2s = [p.bucket2 if cfg.buckets_per_key == 2 else p.bucket1
+           for p in probes]
+    b2 = jnp.concatenate([off(x, t) for t, x in enumerate(b2s)])
+    qd = jnp.concatenate([p.digest.astype(jnp.uint32) for p in probes])
+    qh = jnp.concatenate([k.hi for k in keys_list])
+    ql = jnp.concatenate([k.lo for k in keys_list])
+    n = qh.shape[0]
+
+    if variant == "pipeline":
+        q_tile = min(128, n) if n % 128 else 128
+        npad = -(-n // q_tile) * q_tile
+        scan = functools.partial(_fs.find_scan_pipeline, q_tile=q_tile,
+                                 use_digest=cfg.use_digest,
+                                 interpret=interpret)
+    elif variant == "tlp":
+        npad = n
+        scan = functools.partial(_fs.find_scan_tlp,
+                                 use_digest=cfg.use_digest,
+                                 interpret=interpret)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+
+    stack = lambda f: jnp.concatenate([f(st) for st in states], axis=0)
+    found, sel, slot, shi, slo, vals = scan(
+        stack(lambda st: st.digests),
+        stack(lambda st: st.key_hi),
+        stack(lambda st: st.key_lo),
+        stack(lambda st: st.score_hi),
+        stack(lambda st: st.score_lo),
+        stack(lambda st: st.values),
+        _pad_to(b1, npad), _pad_to(b2, npad), _pad_to(qd, npad),
+        _pad_to(qh, npad, u64.EMPTY_HI), _pad_to(ql, npad, u64.EMPTY_LO),
+    )
+    out: list[FusedFind] = []
+    start = 0
+    for t, (p, cnt) in enumerate(zip(probes, counts)):
+        sl = slice(start, start + cnt)
+        start += cnt
+        f = found[sl].astype(bool) & p.valid
+        b2_local = b2s[t]
+        bucket = jnp.where(sel[sl] == 1, b2_local, p.bucket1)  # table-local
+        out.append(FusedFind(
+            values=jnp.where(f[:, None], vals[sl], 0),
+            found=f,
+            bucket=bucket,
+            slot=slot[sl],
+            row=bucket * s + slot[sl],
+            score_hi=jnp.where(f, shi[sl], 0),
+            score_lo=jnp.where(f, slo[sl], 0),
+        ))
+    return out
 
 
 def assign_kernel(

@@ -35,6 +35,52 @@ def digest_scan_ref(
     return slot, found
 
 
+def find_scan_ref(
+    tdigests: jax.Array,   # uint8  [B, S]
+    tkey_hi: jax.Array,    # uint32 [B, S]
+    tkey_lo: jax.Array,    # uint32 [B, S]
+    tscore_hi: jax.Array,  # uint32 [B, S]
+    tscore_lo: jax.Array,  # uint32 [B, S]
+    tvalues: jax.Array,    # [B*S, V] value plane (position addressing §3.6)
+    bucket1: jax.Array,    # int32  [N] primary candidate bucket
+    bucket2: jax.Array,    # int32  [N] secondary candidate (== bucket1 single)
+    qdigest: jax.Array,    # uint32 [N]
+    qkey_hi: jax.Array,    # uint32 [N]
+    qkey_lo: jax.Array,    # uint32 [N]
+    use_digest: bool = True,
+):
+    """Ground truth for the fused find kernel (find_scan.py).
+
+    Per query, over both candidate bucket rows: digest pre-filter + full-key
+    confirm (the `core.find._match_in_bucket` formula), dual-bucket merge
+    (hit1 wins; miss defaults to bucket1/slot0), score readout at the hit
+    slot, and the hit row's value slice (zeros on miss).
+
+    Returns (found i32 [N], sel i32 [N] — 0=bucket1/1=bucket2, slot i32 [N],
+    score_hi u32 [N], score_lo u32 [N], values [N, V]).
+    """
+    s = tdigests.shape[1]
+
+    def match(buckets):
+        m = (tkey_hi[buckets] == qkey_hi[:, None]) & (
+            tkey_lo[buckets] == qkey_lo[:, None])
+        if use_digest:
+            m &= tdigests[buckets].astype(jnp.uint32) == qdigest[:, None]
+        return jnp.any(m, axis=1), jnp.argmax(m, axis=1).astype(jnp.int32)
+
+    hit1, slot1 = match(bucket1)
+    hit2, slot2 = match(bucket2)
+    found = hit1 | hit2
+    sel = jnp.where(hit1, 0, jnp.where(hit2, 1, 0)).astype(jnp.int32)
+    slot = jnp.where(hit1, slot1, jnp.where(hit2, slot2, 0))
+    bucket = jnp.where(sel == 1, bucket2, bucket1)
+    shi = jnp.where(found, tscore_hi[bucket, slot], 0)
+    slo = jnp.where(found, tscore_lo[bucket, slot], 0)
+    vals = tvalues[bucket * s + slot]
+    vals = jnp.where(found[:, None], vals, jnp.zeros_like(vals))
+    return found.astype(jnp.int32), sel, slot, shi, slo, vals
+
+
 def gather_rows_ref(
     values: jax.Array,  # [R, D]
     rows: jax.Array,    # int32 [N]

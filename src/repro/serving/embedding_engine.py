@@ -232,7 +232,9 @@ class OnlineEmbeddingEngine:
                 # pushed hot->cold in-line (tiered handles report it)
                 dem = getattr(r, "demoted", zero)
                 return r.table, vals, r.found, r.found, dem
-            # readonly: READER role — default-row fallback on miss
+            # readonly: READER role — default-row fallback on miss.  Wave
+            # lookups inherit the handle's backend, so kernel-backed
+            # tables serve each wave with the fused find pass
             if is_tiered or is_sharded:
                 r = table.find(k, promote=bool(promote))
                 succ = r.table if promote else table

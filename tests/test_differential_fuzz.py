@@ -73,6 +73,29 @@ def _find(t, kh, kl):
 
 
 @jax.jit
+def _find_rows(t, kh, kl):
+    r = t.find_rows(U64(kh, kl))
+    return r.rows, r.found, r.score_hi, r.score_lo
+
+
+@jax.jit
+def _session_read(t, kh, kl, v):
+    """Session-fused read mix: find + assign + find_rows + contains on ONE
+    key batch share a single locate; on the kernel backend the value legs
+    ride the fused find pass."""
+    k = U64(kh, kl)
+    s = t.session()
+    f = s.find(k)
+    s.assign(k, v)
+    r = s.find_rows(k)
+    c = s.contains(k)
+    t2 = s.commit()
+    fr, rr = f.get(), r.get()
+    return (t2, fr.values, fr.found, rr.rows, rr.score_hi, rr.score_lo,
+            c.get())
+
+
+@jax.jit
 def _assign(t, kh, kl, v):
     return t.assign(U64(kh, kl), v)
 
@@ -154,6 +177,47 @@ class DifferentialHarness:
         want_found, want_vals = self.oracle.find(canonical)
         assert np.array_equal(np.asarray(found), want_found)
         assert np.array_equal(np.asarray(vals), want_vals.astype(np.float32))
+
+    def _lane_scores(self, canonical):
+        """Per-lane (score_hi, score_lo) the read path must report: the
+        oracle entry's score for resident keys, zero for misses/padding."""
+        entries = {k: int(e.score) for k, e in self.oracle.items()}
+        want = np.array([entries.get(int(k), 0) for k in canonical],
+                        np.uint64)
+        return ((want >> np.uint64(32)).astype(np.uint32),
+                (want & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+
+    def find_rows(self, canonical, caller):
+        rows, found, shi, slo = _find_rows(self.table, *self._planes(caller))
+        want_found, want_vals = self.oracle.find(canonical)
+        assert np.array_equal(np.asarray(found), want_found)
+        assert np.array_equal(np.asarray(rows)[:, :DIM],
+                              want_vals.astype(np.float32))
+        wshi, wslo = self._lane_scores(canonical)
+        assert np.array_equal(np.asarray(shi, np.uint32), wshi), \
+            "find_rows score_hi"
+        assert np.array_equal(np.asarray(slo, np.uint32), wslo), \
+            "find_rows score_lo"
+
+    def session_read(self, canonical, caller, v):
+        (self.table, f_vals, f_found, rows, shi, slo, cont) = _session_read(
+            self.table, *self._planes(caller), jnp.asarray(v))
+        # session order is find -> assign -> find_rows/contains: the first
+        # read sees pre-assign values, the second the assigned rows
+        want_found, want_vals = self.oracle.find(canonical)
+        assert np.array_equal(np.asarray(f_found), want_found)
+        assert np.array_equal(np.asarray(f_vals),
+                              want_vals.astype(np.float32))
+        self.oracle.assign(canonical, v)
+        want_found2, want_vals2 = self.oracle.find(canonical)
+        assert np.array_equal(np.asarray(cont), want_found2)
+        assert np.array_equal(np.asarray(rows)[:, :DIM],
+                              want_vals2.astype(np.float32))
+        wshi, wslo = self._lane_scores(canonical)
+        assert np.array_equal(np.asarray(shi, np.uint32), wshi), \
+            "session score_hi"
+        assert np.array_equal(np.asarray(slo, np.uint32), wslo), \
+            "session score_lo"
 
     def assign(self, canonical, caller, v):
         self.table = _assign(self.table, *self._planes(caller), jnp.asarray(v))
@@ -250,8 +314,8 @@ def to_caller_form(ids, form: str):
     return canonical, list(ids)
 
 
-OPS = ("upsert", "find_or_insert", "find", "assign", "accum", "erase",
-       "erase_if", "evict_if", "clear")
+OPS = ("upsert", "find_or_insert", "find", "find_rows", "session_read",
+       "assign", "accum", "erase", "erase_if", "evict_if", "clear")
 FORMS = ("uint64", "signed", "list")
 PRED_KINDS = ("always", "score_lt", "score_ge", "epoch_lt", "key_range")
 
@@ -296,6 +360,10 @@ def test_seeded_differential_replay(backend):
             h.find_or_insert(canonical, caller, v)
         elif op == "find":
             h.find(canonical, caller)
+        elif op == "find_rows":
+            h.find_rows(canonical, caller)
+        elif op == "session_read":
+            h.session_read(canonical, caller, v)
         elif op == "assign":
             h.assign(canonical, caller, v)
         elif op == "accum":
@@ -361,6 +429,14 @@ if HAVE_HYPOTHESIS:
         @rule(kb=key_batch())
         def find(self, kb):
             self.h.find(kb[0], kb[1])
+
+        @rule(kb=key_batch())
+        def find_rows(self, kb):
+            self.h.find_rows(kb[0], kb[1])
+
+        @rule(kb=key_batch(), v=value_batch())
+        def session_read(self, kb, v):
+            self.h.session_read(kb[0], kb[1], v)
 
         @rule(kb=key_batch(), v=value_batch())
         def assign(self, kb, v):

@@ -1,0 +1,436 @@
+"""Kernel/core parity for the FUSED Pallas find path (interpret mode).
+
+Same acceptance bar as test_upsert_kernel.py / test_sweep_kernel.py:
+BIT-IDENTITY.  The fused kernel (`kernels/find_scan.py`) resolves digest
+pre-filter + full-key confirm + dual-bucket merge + score readout + value
+gather in ONE launch; it must produce exactly the (found, bucket, slot,
+scores, values) of
+
+  * the jnp reference (`core.find.locate` + `gather_values` + the score
+    readout in `core.ops.find`/`find_rows`), and
+  * the pre-fusion composition it replaced (digest_scan locate x
+    buckets_per_key + gather_rows — kept as
+    `kernels.ops.find_composed_kernel`),
+
+for both variants (tlp / pipeline), masked/EMPTY-padded lanes, duplicate
+keys in batch, wide (>32-bit) keys, hit/miss/secondary-bucket-collision
+cases, and under jit/vmap wrapping.  The launch-count tests pin the
+acceptance criterion that fusion eliminates >= 1 kernel launch per find.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import find as find_mod
+from repro.core import merge, ops, table, u64
+from repro.core.api import HKVTable
+from repro.kernels import digest_scan as _ds
+from repro.kernels import find_scan as _fs
+from repro.kernels import gather as _ga
+from repro.kernels import ops as kops
+from repro.kernels import ref
+
+EMPTY = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+VARIANTS = ("tlp", "pipeline")
+
+
+def _query_batch(rng, resident, n_hit, n_miss, n_pad, dup_frac=0.25):
+    """Hits drawn from `resident` (with duplicates), wide-key misses,
+    EMPTY-sentinel padding lanes — the full parity matrix in one batch."""
+    hits = rng.choice(resident, size=n_hit)
+    ndup = int(n_hit * dup_frac)
+    if ndup:
+        hits[rng.integers(0, n_hit, size=ndup)] = rng.choice(hits, size=ndup)
+    misses = rng.integers(2**50, 2**60, size=n_miss).astype(np.uint64)
+    pads = np.full(n_pad, EMPTY, np.uint64)
+    q = np.concatenate([hits, misses, pads])
+    rng.shuffle(q)
+    return q
+
+
+def _filled_table(rng, cfg, n_fill):
+    """A table with live/empty mix and wide keys (>= 2**32)."""
+    keys = rng.integers(1, 2**50, size=n_fill).astype(np.uint64)
+    vals = jnp.asarray(rng.normal(size=(n_fill, cfg.dim)), jnp.float32)
+    state = merge.upsert(table.create(cfg), cfg, u64.from_uint64(keys),
+                         vals).state
+    return state, keys
+
+
+def _ref_find(state, cfg, keys):
+    """The jnp oracle assembled exactly as core.ops.find/find_rows do."""
+    loc = find_mod.locate(state, cfg, keys)
+    rows = find_mod.gather_values(state, loc, None, cfg.value_tier)
+    shi = jnp.where(loc.found, state.score_hi[loc.bucket, loc.slot], 0)
+    slo = jnp.where(loc.found, state.score_lo[loc.bucket, loc.slot], 0)
+    return loc, rows, shi, slo
+
+
+def _assert_fused_equal(r, state, cfg, keys, ctx=""):
+    loc, rows, shi, slo = _ref_find(state, cfg, keys)
+    np.testing.assert_array_equal(np.asarray(r.found), np.asarray(loc.found),
+                                  err_msg=f"{ctx}: found")
+    np.testing.assert_array_equal(np.asarray(r.bucket), np.asarray(loc.bucket),
+                                  err_msg=f"{ctx}: bucket")
+    np.testing.assert_array_equal(np.asarray(r.slot), np.asarray(loc.slot),
+                                  err_msg=f"{ctx}: slot")
+    np.testing.assert_array_equal(np.asarray(r.row), np.asarray(loc.row),
+                                  err_msg=f"{ctx}: row")
+    np.testing.assert_array_equal(np.asarray(r.values), np.asarray(rows),
+                                  err_msg=f"{ctx}: values")
+    np.testing.assert_array_equal(np.asarray(r.score_hi), np.asarray(shi),
+                                  err_msg=f"{ctx}: score_hi")
+    np.testing.assert_array_equal(np.asarray(r.score_lo), np.asarray(slo),
+                                  err_msg=f"{ctx}: score_lo")
+
+
+# =============================================================================
+# Raw kernel vs the pure-jnp oracle (ref.find_scan_ref)
+# =============================================================================
+
+
+@pytest.mark.parametrize("dual", [False, True])
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_find_scan_matches_ref(variant, dual):
+    """The kernel in isolation, exact-tile batch (no padding seam)."""
+    rng = np.random.default_rng(7 + dual)
+    cfg = table.HKVConfig(capacity=4 * 128, dim=8,
+                          buckets_per_key=2 if dual else 1)
+    state, resident = _filled_table(rng, cfg, 400)
+    q = _query_batch(rng, resident, 96, 24, 8)
+    k = u64.from_uint64(q)
+    probe = find_mod.probe_keys(cfg, k)
+    b2 = probe.bucket2 if dual else probe.bucket1
+    args = (state.digests, state.key_hi, state.key_lo, state.score_hi,
+            state.score_lo, state.values, probe.bucket1, b2,
+            probe.digest.astype(jnp.uint32), k.hi, k.lo)
+    want = ref.find_scan_ref(*args)
+    if variant == "tlp":
+        got = _fs.find_scan_tlp(*args, interpret=True)
+    else:
+        got = _fs.find_scan_pipeline(*args, q_tile=128, interpret=True)
+    for g, w, name in zip(got, want,
+                          ("found", "sel", "slot", "shi", "slo", "vals")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=f"{variant} dual={dual} {name}")
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_find_scan_use_digest_false_matches_ref(variant):
+    """The Exp#3a ablation arm: key-only compare, no digest pre-filter."""
+    rng = np.random.default_rng(13)
+    cfg = table.HKVConfig(capacity=2 * 128, dim=4, use_digest=False)
+    state, resident = _filled_table(rng, cfg, 200)
+    q = _query_batch(rng, resident, 100, 20, 8)
+    k = u64.from_uint64(q)
+    probe = find_mod.probe_keys(cfg, k)
+    args = (state.digests, state.key_hi, state.key_lo, state.score_hi,
+            state.score_lo, state.values, probe.bucket1, probe.bucket1,
+            probe.digest.astype(jnp.uint32), k.hi, k.lo)
+    want = ref.find_scan_ref(*args, use_digest=False)
+    if variant == "tlp":
+        got = _fs.find_scan_tlp(*args, use_digest=False, interpret=True)
+    else:
+        got = _fs.find_scan_pipeline(*args, q_tile=128, use_digest=False,
+                                     interpret=True)
+    for g, w, name in zip(got, want,
+                          ("found", "sel", "slot", "shi", "slo", "vals")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=f"{variant} {name}")
+    # the fused wrapper honors cfg.use_digest end-to-end
+    r = kops.find_fused_kernel(state, cfg, k, variant=variant, interpret=True)
+    _assert_fused_equal(r, state, cfg, k, f"{variant} use_digest=False")
+
+
+# =============================================================================
+# Wrapper vs the core jnp reference AND the old composition
+# =============================================================================
+
+
+@pytest.mark.parametrize("dual", [False, True])
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_fused_wrapper_bit_identical_to_core(variant, dual):
+    """find_fused_kernel vs locate+gather+scores, odd batch sizes included
+    (the pipeline variant's padding seam)."""
+    rng = np.random.default_rng(31 * (1 + dual))
+    cfg = table.HKVConfig(capacity=4 * 128, dim=8,
+                          buckets_per_key=2 if dual else 1, score_policy="lfu")
+    state, resident = _filled_table(rng, cfg, 700)  # λ beyond 1.0: evictions
+    for n in (1, 37, 128, 193):
+        q = _query_batch(rng, resident, max(1, n - n // 4 - n // 8),
+                         n // 4, n // 8)[:n]
+        k = u64.from_uint64(q)
+        r = kops.find_fused_kernel(state, cfg, k, variant=variant,
+                                   interpret=True)
+        _assert_fused_equal(r, state, cfg, k,
+                            f"{variant} dual={dual} n={n}")
+
+
+@pytest.mark.parametrize("dual", [False, True])
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_fused_matches_old_composition(variant, dual):
+    """The replaced pair (digest_scan locate + gather_rows) and the fused
+    pass agree bit-for-bit — the regression seam of this PR."""
+    rng = np.random.default_rng(41 + dual)
+    cfg = table.HKVConfig(capacity=2 * 128, dim=16,
+                          buckets_per_key=2 if dual else 1)
+    state, resident = _filled_table(rng, cfg, 300)
+    q = _query_batch(rng, resident, 80, 30, 18)
+    k = u64.from_uint64(q)
+    v_new, f_new = kops.find_kernel(state, cfg, k, variant=variant,
+                                    interpret=True)
+    v_old, f_old = kops.find_composed_kernel(state, cfg, k, variant=variant,
+                                             interpret=True)
+    np.testing.assert_array_equal(np.asarray(f_new), np.asarray(f_old))
+    np.testing.assert_array_equal(np.asarray(v_new), np.asarray(v_old))
+
+
+def test_secondary_bucket_hits_are_exercised_and_identical():
+    """Drive a small dual table to λ=1.0 so some residents live in their
+    SECONDARY bucket, then pin that the fused path resolves them."""
+    rng = np.random.default_rng(5)
+    cfg = table.HKVConfig(capacity=2 * 128, dim=4, buckets_per_key=2)
+    # chunked inserts: load-balance picks the emptier candidate per step,
+    # so once primaries fill, later keys land in their secondary bucket
+    state = table.create(cfg)
+    resident = rng.integers(1, 2**50, size=600).astype(np.uint64)
+    for chunk in np.split(resident, 12):
+        vals = jnp.asarray(rng.normal(size=(len(chunk), cfg.dim)),
+                           jnp.float32)
+        state = merge.upsert(state, cfg, u64.from_uint64(chunk), vals).state
+    assert float(state.load_factor()) == 1.0
+    k = u64.from_uint64(np.unique(resident))
+    loc = find_mod.locate(state, cfg, k)
+    probe = find_mod.probe_keys(cfg, k)
+    in_b2 = np.asarray(loc.found & (loc.bucket == probe.bucket2)
+                       & (probe.bucket2 != probe.bucket1))
+    assert in_b2.any(), "fill did not produce secondary-bucket residents"
+    for variant in VARIANTS:
+        r = kops.find_fused_kernel(state, cfg, k, variant=variant,
+                                   interpret=True)
+        _assert_fused_equal(r, state, cfg, k, f"{variant} secondary")
+
+
+# =============================================================================
+# Dispatch: ops-layer backends, sessions, tiers, jit/vmap
+# =============================================================================
+
+
+def test_ops_reader_backend_parity():
+    rng = np.random.default_rng(11)
+    cfg = table.HKVConfig(capacity=2 * 128, dim=4, buckets_per_key=2)
+    state, resident = _filled_table(rng, cfg, 300)
+    q = _query_batch(rng, resident, 60, 20, 4)
+    k = u64.from_uint64(q)
+    fj = ops.find(state, cfg, k, backend="jnp")
+    fk = ops.find(state, cfg, k, backend="kernel")
+    for f in fj._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(fj, f)),
+                                      np.asarray(getattr(fk, f)),
+                                      err_msg=f"find.{f}")
+    rj = ops.find_rows(state, cfg, k, backend="jnp")
+    rk = ops.find_rows(state, cfg, k, backend="kernel")
+    for f in rj._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(rj, f)),
+                                      np.asarray(getattr(rk, f)),
+                                      err_msg=f"find_rows.{f}")
+    np.testing.assert_array_equal(
+        np.asarray(ops.contains(state, cfg, k, backend="jnp")),
+        np.asarray(ops.contains(state, cfg, k, backend="kernel")))
+    lj = ops.find_ptr(state, cfg, k, backend="jnp")
+    lk = ops.find_ptr(state, cfg, k, backend="kernel")
+    for f in lj._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(lj, f)),
+                                      np.asarray(getattr(lk, f)),
+                                      err_msg=f"find_ptr.{f}")
+
+
+def test_reader_backend_validation():
+    cfg = table.HKVConfig(capacity=128, dim=4)
+    state = table.create(cfg)
+    k = u64.from_uint64(np.asarray([1], np.uint64))
+    with pytest.raises(ValueError, match="backend"):
+        ops.find(state, cfg, k, backend="cuda")
+    with pytest.raises(ValueError, match="variant"):
+        kops.find_fused_kernel(state, cfg, k, variant="warp")
+
+
+def test_hmem_tier_falls_back_to_tier_gather():
+    """Host-tier value planes keep the §3.6 crossing contract: the kernel
+    locates, tier_gather moves rows — results identical to jnp."""
+    rng = np.random.default_rng(23)
+    cfg = table.HKVConfig(capacity=2 * 128, dim=4, value_tier="hmem")
+    state, resident = _filled_table(rng, cfg, 200)
+    q = _query_batch(rng, resident, 50, 10, 4)
+    k = u64.from_uint64(q)
+    r = kops.find_fused_kernel(state, cfg, k, interpret=True)
+    _assert_fused_equal(r, state, cfg, k, "hmem")
+    fj = ops.find_rows(state, cfg, k, backend="jnp")
+    fk = ops.find_rows(state, cfg, k, backend="kernel")
+    for f in fj._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(fj, f)),
+                                      np.asarray(getattr(fk, f)),
+                                      err_msg=f"hmem find_rows.{f}")
+
+
+def test_fused_find_under_jit_and_vmap():
+    rng = np.random.default_rng(19)
+    cfg = table.HKVConfig(capacity=2 * 128, dim=4, buckets_per_key=2)
+    state, resident = _filled_table(rng, cfg, 300)
+    tk = HKVTable.wrap(state, cfg, backend="kernel")
+    q = _query_batch(rng, resident, 50, 10, 4)
+    k = u64.from_uint64(q)
+
+    # jit: the handle path (fused pass inside the traced region)
+    jfind = jax.jit(lambda t, hi, lo: t.find(u64.U64(hi, lo)))
+    got = jfind(tk, k.hi, k.lo)
+    want = tk.with_backend("jnp").find(k)
+    for f in want._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(got, f)),
+                                      np.asarray(getattr(want, f)),
+                                      err_msg=f"jit find.{f}")
+
+    # vmap: map the raw kernel over a stacked query axis (Pallas adds a
+    # grid dim); each mapped row must equal its solo run
+    probe = find_mod.probe_keys(cfg, k)
+    args = lambda sl: (probe.bucket1[sl], probe.bucket2[sl],
+                       probe.digest.astype(jnp.uint32)[sl], k.hi[sl],
+                       k.lo[sl])
+    half = len(q) // 2
+    stacked = tuple(jnp.stack([a, b]) for a, b in
+                    zip(args(slice(0, half)), args(slice(half, 2 * half))))
+    fn = lambda b1, b2, qd, qh, ql: _fs.find_scan_tlp(
+        state.digests, state.key_hi, state.key_lo, state.score_hi,
+        state.score_lo, state.values, b1, b2, qd, qh, ql, interpret=True)
+    vout = jax.vmap(fn)(*stacked)
+    solo0 = fn(*args(slice(0, half)))
+    solo1 = fn(*args(slice(half, 2 * half)))
+    for i, name in enumerate(("found", "sel", "slot", "shi", "slo", "vals")):
+        np.testing.assert_array_equal(np.asarray(vout[i][0]),
+                                      np.asarray(solo0[i]),
+                                      err_msg=f"vmap row0 {name}")
+        np.testing.assert_array_equal(np.asarray(vout[i][1]),
+                                      np.asarray(solo1[i]),
+                                      err_msg=f"vmap row1 {name}")
+
+
+# =============================================================================
+# Launch accounting: fusion eliminates >= 1 launch per find
+# =============================================================================
+
+
+class TestLaunchBudget:
+    def _counters(self, monkeypatch):
+        counts = {"find_scan": 0, "digest_scan": 0, "gather": 0}
+
+        def wrap(mod, name, key):
+            orig = getattr(mod, name)
+
+            def counting(*a, **kw):
+                counts[key] += 1
+                return orig(*a, **kw)
+
+            monkeypatch.setattr(mod, name, counting)
+
+        wrap(_fs, "find_scan_tlp", "find_scan")
+        wrap(_fs, "find_scan_pipeline", "find_scan")
+        wrap(_ds, "digest_scan_tlp", "digest_scan")
+        wrap(_ds, "digest_scan_pipeline", "digest_scan")
+        wrap(_ga, "gather_rows", "gather")
+        return counts
+
+    @pytest.mark.parametrize("dual", [False, True])
+    def test_fused_find_is_one_launch(self, dual, monkeypatch):
+        """Old composition: buckets_per_key digest_scan launches + one
+        gather launch.  Fused: ONE find_scan launch — >= 1 eliminated
+        (2 in dual mode), the PR's acceptance criterion."""
+        rng = np.random.default_rng(3)
+        cfg = table.HKVConfig(capacity=2 * 128, dim=4,
+                              buckets_per_key=2 if dual else 1)
+        state, resident = _filled_table(rng, cfg, 200)
+        k = u64.from_uint64(resident[:64])
+        counts = self._counters(monkeypatch)
+        ops.find(state, cfg, k, backend="kernel")
+        assert (counts["find_scan"], counts["digest_scan"],
+                counts["gather"]) == (1, 0, 0)
+        counts.update(find_scan=0)
+        kops.find_composed_kernel(state, cfg, k, interpret=True)
+        old = counts["digest_scan"] + counts["gather"]
+        assert counts["digest_scan"] == (2 if dual else 1)
+        assert counts["gather"] == 1
+        assert old - 1 >= 1  # launches eliminated per find
+
+    def test_find_ptr_stays_metadata_only(self, monkeypatch):
+        """The pointer path must NOT ride the fused pass (no value
+        traffic) — it takes the digest_scan locate."""
+        rng = np.random.default_rng(4)
+        cfg = table.HKVConfig(capacity=2 * 128, dim=4)
+        state, resident = _filled_table(rng, cfg, 100)
+        k = u64.from_uint64(resident[:32])
+        counts = self._counters(monkeypatch)
+        ops.find_ptr(state, cfg, k, backend="kernel")
+        assert counts == {"find_scan": 0, "digest_scan": 1, "gather": 0}
+
+
+# =============================================================================
+# find_many: batched multi-table lookup in one launch
+# =============================================================================
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_find_many_matches_per_table_finds(variant):
+    rng = np.random.default_rng(29)
+    cfg = table.HKVConfig(capacity=2 * 128, dim=8, buckets_per_key=2)
+    states, keysets = [], []
+    for _ in range(3):
+        state, resident = _filled_table(rng, cfg, 250)
+        states.append(state)
+        keysets.append(u64.from_uint64(
+            _query_batch(rng, resident, 40, 10, 5)))
+    many = kops.find_many_kernel(states, cfg, keysets, variant=variant,
+                                 interpret=True)
+    assert len(many) == 3
+    for t, (state, k) in enumerate(zip(states, keysets)):
+        solo = kops.find_fused_kernel(state, cfg, k, variant=variant,
+                                      interpret=True)
+        for f in solo._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(many[t], f)),
+                np.asarray(getattr(solo, f)),
+                err_msg=f"{variant} table {t} {f}")
+        _assert_fused_equal(many[t], state, cfg, k, f"{variant} many[{t}]")
+
+
+def test_find_many_is_one_launch(monkeypatch):
+    rng = np.random.default_rng(31)
+    cfg = table.HKVConfig(capacity=2 * 128, dim=4)
+    states, keysets = [], []
+    for _ in range(4):
+        state, resident = _filled_table(rng, cfg, 150)
+        states.append(state)
+        keysets.append(u64.from_uint64(resident[:32]))
+    counts = {"find_scan": 0}
+    orig = _fs.find_scan_pipeline
+
+    def counting(*a, **kw):
+        counts["find_scan"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(_fs, "find_scan_pipeline", counting)
+    kops.find_many_kernel(states, cfg, keysets, interpret=True)
+    assert counts["find_scan"] == 1  # 4 tables, ONE launch
+
+
+def test_find_many_validation():
+    cfg = table.HKVConfig(capacity=2 * 128, dim=4)
+    cfg_h = table.HKVConfig(capacity=2 * 128, dim=4, value_tier="hmem")
+    k = u64.from_uint64(np.asarray([1], np.uint64))
+    assert kops.find_many_kernel([], cfg, []) == []
+    with pytest.raises(ValueError, match="hbm"):
+        kops.find_many_kernel([table.create(cfg_h)], cfg_h, [k])
+    other = table.create(table.HKVConfig(capacity=4 * 128, dim=4))
+    with pytest.raises(ValueError, match="geometry"):
+        kops.find_many_kernel([table.create(cfg), other], cfg, [k, k])

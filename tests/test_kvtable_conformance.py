@@ -50,12 +50,21 @@ CAPS = {
     # has_scores: score metadata exists, so score/epoch sweep predicates
     #             are meaningful (dictionary tables carry zero planes —
     #             key predicates only)
-    "hkv_jnp": dict(has_export=True, caller_init=True, has_scores=True),
-    "hkv_kernel": dict(has_export=True, caller_init=True, has_scores=True),
-    "dict_oa": dict(has_export=True, caller_init=True, has_scores=False),
-    "dict_p2c": dict(has_export=True, caller_init=True, has_scores=False),
-    "tiered": dict(has_export=True, caller_init=True, has_scores=True),
-    "sharded": dict(has_export=True, caller_init=False, has_scores=True),
+    # has_find_rows: full-row reads + session-fused read mixes (find /
+    #             find_rows / contains over one shared locate) — the HKV
+    #             handle surface the PR-6 fused find kernel serves
+    "hkv_jnp": dict(has_export=True, caller_init=True, has_scores=True,
+                    has_find_rows=True),
+    "hkv_kernel": dict(has_export=True, caller_init=True, has_scores=True,
+                       has_find_rows=True),
+    "dict_oa": dict(has_export=True, caller_init=True, has_scores=False,
+                    has_find_rows=False),
+    "dict_p2c": dict(has_export=True, caller_init=True, has_scores=False,
+                     has_find_rows=False),
+    "tiered": dict(has_export=True, caller_init=True, has_scores=True,
+                   has_find_rows=False),
+    "sharded": dict(has_export=True, caller_init=False, has_scores=True,
+                    has_find_rows=False),
 }
 
 _MESH = None
@@ -129,6 +138,25 @@ def _j_read_pure(t, kh, kl):        # tiered/sharded: no miss-path promotion
 @jax.jit
 def _j_contains(t, kh, kl):
     return t.contains(U64(kh, kl))
+
+
+@jax.jit
+def _j_find_rows(t, kh, kl):
+    r = t.find_rows(U64(kh, kl))
+    return r.rows[:, :DIM], r.found, r.score_hi, r.score_lo
+
+
+@jax.jit
+def _j_session_read(t, kh, kl):
+    """find + contains + find_rows fused over ONE shared locate."""
+    k = U64(kh, kl)
+    s = t.session()
+    f = s.find(k)
+    c = s.contains(k)
+    r = s.find_rows(k)
+    s.commit()     # readers only: the committed table is unchanged
+    return (f.get().values[:, :DIM], f.get().found,
+            r.get().rows[:, :DIM], c.get())
 
 
 @jax.jit
@@ -325,6 +353,48 @@ class TestInserterContract:
         # hits return the STORED rows (the first call's admissions)
         assert np.allclose(vals2[: len(KEYS)], vals1[: len(KEYS)])
         assert size(t) == len(KEYS)
+
+
+class TestFusedReadContract:
+    """The PR-6 reader surface: find_rows and session-fused read mixes
+    must agree lane-for-lane with plain find/contains.  Running the matrix
+    over BOTH HKV backends conformance-tests the fused find kernel path
+    against the jnp one on identical states."""
+
+    def _mixed(self, table):
+        """Residents + erased keys + never-inserted keys in one batch."""
+        k = pad_keys(KEYS)
+        t, _ = upsert(table, k, rows_for(k))
+        t = erase(t, pad_keys(KEYS[:6]))
+        q = pad_keys(np.concatenate([KEYS, np.array([999983], np.uint64)]))
+        return t, q
+
+    def test_find_rows_matches_find(self, table):
+        if not CAPS_CURRENT["has_find_rows"]:
+            pytest.skip("no full-row read surface on this impl")
+        t, q = self._mixed(table)
+        vals, found = read(t, q)
+        rows, rfound, shi, slo = map(np.asarray, _j_find_rows(t, *_planes(q)))
+        np.testing.assert_array_equal(rfound, found)
+        np.testing.assert_array_equal(rows, vals)
+        # scores mask exactly like values: live lanes carry the entry's
+        # score, misses/erased/padding lanes read zero
+        score = (shi.astype(np.uint64) << np.uint64(32)) | slo.astype(
+            np.uint64)
+        assert (score[found] > 0).all()
+        assert (score[~found] == 0).all()
+
+    def test_session_read_matches_unfused(self, table):
+        if not CAPS_CURRENT["has_find_rows"]:
+            pytest.skip("no session find_rows surface on this impl")
+        t, q = self._mixed(table)
+        vals, found = read(t, q)
+        f_vals, f_found, rows, cont = map(
+            np.asarray, _j_session_read(t, *_planes(q)))
+        np.testing.assert_array_equal(f_found, found)
+        np.testing.assert_array_equal(cont, found)
+        np.testing.assert_array_equal(f_vals, vals)
+        np.testing.assert_array_equal(rows, vals)
 
 
 class TestUpdaterContract:

@@ -1,0 +1,59 @@
+"""hkv-lint: static contract checking for the HierarchicalKV repro.
+
+Four checkers, one findings model:
+
+  kernel-contracts   trace every registered Pallas kernel in interpret
+                     mode and walk the jaxpr for DMA start/wait pairing,
+                     memory-space legality (plus the §3.6 hmem tier seam),
+                     and mask-dominated stores.
+  compile-cache      drive public handle ops across predicate kinds, key
+                     forms, and backends, asserting exactly one compile
+                     per static signature.
+  roles              the §3.5 triple-group taxonomy — every op annotated
+                     reader/updater/inserter, session records match the
+                     annotations, and ``_plan()`` fences/fuses correctly.
+  oracle-coupling    one key-match formula (``core.find.match_lanes``) and
+                     one liveness formula (``core.u64.empty_lanes``),
+                     referenced from every kernel stage; inline hi/lo
+                     re-derivations are findings.
+
+Run with ``python -m repro.analysis`` (add ``--format github`` in CI).
+"""
+
+from __future__ import annotations
+
+from repro.analysis.findings import (Finding, WAIVERS, apply_waivers,
+                                     format_github, format_text, unwaived)
+
+__all__ = ["Finding", "WAIVERS", "apply_waivers", "format_github",
+           "format_text", "unwaived", "run_all", "CHECKERS"]
+
+
+def _checkers():
+    # imports deferred: each checker pulls in jax tracing machinery
+    from repro.analysis.compile_cache import check_compile_cache
+    from repro.analysis.kernel_contracts import check_hmem_seam, check_kernels
+    from repro.analysis.oracle_coupling import check_oracle_coupling
+    from repro.analysis.roles import check_roles
+    return {
+        "kernel-contracts": lambda: check_kernels() + check_hmem_seam(),
+        "compile-cache": check_compile_cache,
+        "roles": check_roles,
+        "oracle-coupling": check_oracle_coupling,
+    }
+
+
+CHECKERS = ("kernel-contracts", "compile-cache", "roles", "oracle-coupling")
+
+
+def run_all(only=None) -> list:
+    """Run checkers (all, or the named subset) and apply waivers."""
+    table = _checkers()
+    names = list(only) if only else list(CHECKERS)
+    findings = []
+    for name in names:
+        if name not in table:
+            raise SystemExit(f"unknown checker {name!r}; "
+                             f"choose from {', '.join(CHECKERS)}")
+        findings.extend(table[name]())
+    return apply_waivers(findings, WAIVERS)

@@ -1,0 +1,41 @@
+"""CLI for hkv-lint: ``python -m repro.analysis``.
+
+Exit status is the number of unwaived findings (capped at 99), so CI can
+gate on it directly.  ``--format github`` emits ``::error file=...``
+workflow commands that surface as PR annotations; ``--format text`` (the
+default) prints one line per finding plus a summary.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro import analysis
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="hkv-lint: static contract checks for the "
+                    "HierarchicalKV repro")
+    ap.add_argument("--format", choices=("text", "github"), default="text",
+                    help="finding output format (github = workflow-command "
+                         "annotations)")
+    ap.add_argument("--checker", action="append", metavar="NAME",
+                    choices=analysis.CHECKERS,
+                    help="run only this checker (repeatable); default: all")
+    args = ap.parse_args(argv)
+
+    findings = analysis.run_all(only=args.checker)
+    fmt = (analysis.format_github if args.format == "github"
+           else analysis.format_text)
+    out = fmt(findings)
+    if out:
+        print(out)
+    fatal = analysis.unwaived(findings)
+    return min(len(fatal), 99)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,174 @@
+"""Checker 2: compile-cache audit — one compile per static signature.
+
+PR 5's contract: a ``SweepPredicate``'s *kind* is static pytree aux (one
+compile per kind) while its threshold operands are traced (no recompile per
+value).  The handle layer's contract: every accepted key form funnels
+through ``normalize_keys`` into identical avals (no weak_type drift), and
+the handle's cfg/backend are the only static axes.
+
+This checker pins both DYNAMICALLY but cheaply: it drives jitted handle
+ops across predicate kinds, key forms (negative-int, numpy-uint64, wide
+u64), threshold values, and backends on a tiny table, counting compiles
+with ``jax.jit``'s cache size.  ``expected`` is exact — a cache size above
+it means a Python operand leaked into the static signature (a silent perf
+cliff on TPU: each serving wave would recompile); below it means the
+scenario under-exercised and the audit itself is stale.
+
+Each scenario is one Finding at most; the audit is hermetic (fresh jitted
+callables per run, nothing shared with user code).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.findings import Finding
+from repro.core.api import HKVTable, normalize_keys
+from repro.core.predicates import KINDS, SweepPredicate
+
+CHECKER = "compile-cache"
+_PATH = "src/repro/core/api.py"
+
+
+def _table(backend: str = "jnp") -> HKVTable:
+    return HKVTable.create(capacity=64, dim=4, slots_per_bucket=8,
+                           backend=backend)
+
+
+def _preds():
+    """Two operand values per kind — same kind must share one compile."""
+    return {
+        "always": [SweepPredicate.always(), SweepPredicate.always()],
+        "score_lt": [SweepPredicate.score_below(5),
+                     SweepPredicate.score_below(9)],
+        "score_ge": [SweepPredicate.score_at_least(5),
+                     SweepPredicate.score_at_least(9)],
+        "epoch_lt": [SweepPredicate.expire_before(2),
+                     SweepPredicate.expire_before(7)],
+        "key_range": [SweepPredicate.key_in_range(1, 9),
+                      SweepPredicate.key_in_range(4, 6)],
+    }
+
+
+def _key_forms():
+    """Every accepted key form, normalized — avals must coincide."""
+    return [
+        normalize_keys([1, 2, -1, 4]),                      # negative-int list
+        normalize_keys(np.arange(4, dtype=np.uint64)),      # numpy uint64
+        normalize_keys(np.uint64([1 << 40, 2, 3, (1 << 63) + 5])),  # wide
+        normalize_keys(np.array([7, 8, 9, 10], dtype=np.int32)),    # signed
+    ]
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    expected: int
+    run: Callable[[], int]   # returns observed cache size
+
+
+def _scenario_key_forms() -> Scenario:
+    def run():
+        t = _table()
+        f = jax.jit(lambda tbl, keys: tbl.find(keys).values)
+        for keys in _key_forms():
+            f(t, keys)
+        return f._cache_size()
+    return Scenario("find across key forms (normalize_keys avals)", 1, run)
+
+
+def _scenario_sweep_kinds(op: str) -> Scenario:
+    def run():
+        t = _table()
+        if op == "erase_if":
+            f = jax.jit(lambda tbl, p: tbl.erase_if(p).swept)
+        else:
+            f = jax.jit(lambda tbl, p: tbl.evict_if(p, 4).count)
+        for kind, preds in _preds().items():
+            for p in preds:
+                f(t, p)
+        return f._cache_size()
+    return Scenario(f"{op} across predicate kinds x operand values",
+                    len(KINDS), run)
+
+
+def _scenario_backend_axis() -> Scenario:
+    def run():
+        f = jax.jit(lambda tbl, keys: tbl.contains(keys))
+        keys = _key_forms()[0]
+        for backend in ("jnp", "kernel"):
+            t = _table(backend)
+            f(t, keys)
+            f(t, keys)   # repeat: must not grow
+        return f._cache_size()
+    return Scenario("contains across backends (static aux axis)", 2, run)
+
+
+def _scenario_upsert_signatures() -> Scenario:
+    def run():
+        t = _table()
+        vals = jnp.zeros((4, 4), jnp.float32)
+        f = jax.jit(lambda tbl, keys, v: tbl.insert_or_assign(keys, v).status)
+        g = jax.jit(lambda tbl, keys, v, cs:
+                    tbl.insert_or_assign(keys, v, custom_scores=cs).status)
+        for keys in _key_forms():
+            f(t, keys, vals)
+            g(t, keys, vals, normalize_keys([5, 6, 7, 8]))
+        return f._cache_size() + g._cache_size()
+    return Scenario("insert_or_assign across key forms (+custom scores)",
+                    2, run)
+
+
+def _scenario_score_values() -> Scenario:
+    def run():
+        t = _table()
+        f = jax.jit(lambda tbl, keys, s: tbl.assign_scores(keys, s))
+        keys = _key_forms()[0]
+        for sval in (3, 9, 1 << 40):
+            f(t, keys, normalize_keys(np.uint64([sval] * 4)))
+        return f._cache_size()
+    return Scenario("assign_scores across score values", 1, run)
+
+
+def scenarios() -> list[Scenario]:
+    return [
+        _scenario_key_forms(),
+        _scenario_sweep_kinds("erase_if"),
+        _scenario_sweep_kinds("evict_if"),
+        _scenario_backend_axis(),
+        _scenario_upsert_signatures(),
+        _scenario_score_values(),
+    ]
+
+
+def check_compile_cache() -> list[Finding]:
+    out = []
+    for sc in scenarios():
+        try:
+            got = sc.run()
+        except Exception as e:
+            out.append(Finding(CHECKER, "audit-error", sc.name,
+                               f"scenario raised {type(e).__name__}: {e}",
+                               path=_PATH))
+            continue
+        if got > sc.expected:
+            out.append(Finding(
+                CHECKER, "recompile", sc.name,
+                f"expected {sc.expected} compile(s), observed {got} — a "
+                f"value that should be traced (threshold, key planes) is "
+                f"leaking into the static jit signature (weak_type drift "
+                f"or Python-operand capture)",
+                path=_PATH))
+        elif got < sc.expected:
+            out.append(Finding(
+                CHECKER, "under-exercised", sc.name,
+                f"expected {sc.expected} compile(s), observed {got} — the "
+                f"audit scenario no longer drives distinct static "
+                f"signatures; update the audit",
+                path=_PATH))
+    return out

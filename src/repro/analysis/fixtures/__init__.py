@@ -1,0 +1,7 @@
+"""Known-bad fixtures for hkv-lint's own test suite.
+
+Each module here violates exactly one contract the analyzer enforces.
+They are NEVER imported by shipped code — only by ``tests/test_analysis.py``
+(and by the analyzer when explicitly pointed at them) to prove each checker
+actually fires.  The oracle-coupling tree scan excludes this directory.
+"""

@@ -1,0 +1,24 @@
+"""Fixture: a forked (inlined) copy of the key-match formula.
+
+``oracle_coupling.scan_source`` over this file must flag the
+``&``-conjunction of paired hi/lo equality compares in ``forked_match``
+with rule ``match-formula-fork`` — the formula must come from
+``core.find.match_lanes`` instead.  ``not_a_fork`` is the control: its
+conjunction compares unrelated planes and must NOT be flagged.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def forked_match(key_hi, key_lo, q_hi, q_lo):
+    """BUG: re-derives the match formula instead of calling the oracle."""
+    hits = (key_hi == q_hi) & (key_lo == q_lo)
+    return jnp.where(hits, 1, 0)
+
+
+def not_a_fork(scores, epochs, s_min, e_min):
+    """Conjunction over unrelated planes — legitimate, must not flag."""
+    keep = (scores == s_min) & (epochs == e_min)
+    return keep

@@ -1,0 +1,31 @@
+"""Fixture: an op entry point with no declared §3.5 role.
+
+``roles.check_annotations`` pointed at this module must flag
+``mystery_op`` with rule ``unannotated-op`` (and must NOT flag
+``annotated_op``).
+"""
+
+from __future__ import annotations
+
+from repro.core import roles
+
+
+def mystery_op(state, cfg, keys):
+    """BUG: no @roles.* annotation — commutativity class undeclared."""
+    return state
+
+
+@roles.reader
+def annotated_op(state, cfg, keys):
+    """Correctly annotated control case."""
+    return keys
+
+
+def _private_helper(state, cfg):
+    """Underscore-prefixed: out of scope for the lint."""
+    return state
+
+
+def free_function(cfg, keys):
+    """No leading ``state`` param: not an op entry point."""
+    return keys

@@ -1,0 +1,210 @@
+"""Checker 4: oracle coupling — one match formula, referenced everywhere.
+
+The correctness seam of the whole table is the key-match formula
+(§3.2: 128-bit split-plane equality, optionally digest-prefiltered) and
+the EMPTY-sentinel liveness formula.  Both live in exactly one place —
+``core.find.match_lanes`` and ``core.u64.empty_lanes`` — and every kernel
+stage must call them rather than re-deriving the plane math inline.  A
+fork is how upsert and find silently diverge on (say) digest handling,
+which no unit test of either side catches.
+
+Three AST rules over ``src/repro``:
+
+  oracle-multiplicity   exactly one ``def match_lanes`` and one
+                        ``def empty_lanes`` in the tree.
+  oracle-uncoupled      each required module references the oracle it is
+                        supposed to route through (see ``REQUIRED_REFS``).
+  match-formula-fork    an ``&``-conjunction contains two equality
+                        compares that are hi/lo mirror images of each
+                        other (identifier multisets coincide once hi/lo
+                        markers are normalized away) — the signature of an
+                        inlined copy of the match formula.
+
+Scope for the fork rule: ``kernels/`` and ``core/`` minus the oracle
+definition sites themselves (``core/find.py``, ``core/u64.py``) and
+``core/predicates.py`` (key_range legitimately compares against lo/hi
+bounds).  ``baselines/`` is deliberately out of scope: differential
+baselines must stay independent re-implementations.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from repro.analysis.findings import Finding
+
+CHECKER = "oracle-coupling"
+
+ORACLES = ("match_lanes", "empty_lanes")
+
+# module (relative to src/) -> oracle names it must reference
+REQUIRED_REFS = {
+    "repro/core/find.py": ("match_lanes",),          # definition + wrapper
+    "repro/core/merge.py": ("match_lanes",),
+    "repro/kernels/digest_scan.py": ("match_lanes",),
+    "repro/kernels/find_scan.py": ("match_lanes",),
+    "repro/kernels/upsert_scan.py": ("match_lanes", "empty_lanes"),
+    "repro/kernels/sweep_scan.py": ("empty_lanes",),
+    "repro/kernels/score_scan.py": ("empty_lanes",),
+    "repro/kernels/ref.py": ("match_lanes", "empty_lanes"),
+}
+
+_DEF_SITES = {"repro/core/find.py": ("match_lanes",),
+              "repro/core/u64.py": ("empty_lanes",)}
+
+_FORK_SCOPE = ("repro/kernels", "repro/core")
+_FORK_EXEMPT = ("repro/core/find.py", "repro/core/u64.py",
+                "repro/core/predicates.py")
+
+
+def src_root() -> pathlib.Path:
+    # .../src/repro/analysis/oracle_coupling.py -> .../src
+    return pathlib.Path(__file__).resolve().parents[2]
+
+
+def _tree_files(root: pathlib.Path):
+    for p in sorted(root.glob("repro/**/*.py")):
+        rel = p.relative_to(root).as_posix()
+        if rel.startswith("repro/analysis/"):
+            continue   # the analyzer and its known-bad fixtures
+        yield rel, p
+
+
+def _norm_ident(name: str) -> str:
+    """Erase hi/lo markers so mirror compares collapse to one shape."""
+    s = name.lower()
+    for tok in ("hi", "lo", "h", "l"):
+        s = s.replace(tok, "#")
+    return s
+
+
+def _compare_idents(node: ast.Compare):
+    """Identifier multiset of a single-Eq compare, else None."""
+    if len(node.ops) != 1 or not isinstance(node.ops[0], ast.Eq):
+        return None
+    names = []
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            names.append(sub.id)
+        elif isinstance(sub, ast.Attribute):
+            names.append(sub.attr)
+    return tuple(sorted(names)) if names else None
+
+
+def _and_leaves(node: ast.BinOp):
+    """Flatten a chain of ``&`` into its leaf operands."""
+    for side in (node.left, node.right):
+        if isinstance(side, ast.BinOp) and isinstance(side.op, ast.BitAnd):
+            yield from _and_leaves(side)
+        else:
+            yield side
+
+
+def scan_source(source: str, rel_path: str) -> list[Finding]:
+    """Fork rule over one file's source (separable for fixture tests)."""
+    out = []
+    tree = ast.parse(source, filename=rel_path)
+    claimed_parents = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.BinOp)
+                and isinstance(node.op, ast.BitAnd)):
+            continue
+        if id(node) in claimed_parents:
+            continue
+        for sub in ast.walk(node):
+            if sub is not node and isinstance(sub, ast.BinOp) \
+                    and isinstance(sub.op, ast.BitAnd):
+                claimed_parents.add(id(sub))
+        shapes = {}
+        for leaf in _and_leaves(node):
+            if not isinstance(leaf, ast.Compare):
+                continue
+            idents = _compare_idents(leaf)
+            if idents is None:
+                continue
+            norm = tuple(_norm_ident(n) for n in idents)
+            if norm == idents:
+                continue   # no hi/lo marker anywhere: not plane math
+            other = shapes.get(norm)
+            if other is not None and other != idents:
+                out.append(Finding(
+                    CHECKER, "match-formula-fork",
+                    f"{rel_path}:{leaf.lineno}",
+                    "hi/lo mirror equality pair inside an '&' conjunction "
+                    "re-derives the key-match formula — route through "
+                    "core.find.match_lanes / core.u64.empty_lanes instead",
+                    path=f"src/{rel_path}", line=leaf.lineno))
+            else:
+                shapes.setdefault(norm, idents)
+    return out
+
+
+def check_multiplicity(files) -> list[Finding]:
+    out = []
+    defs = {name: [] for name in ORACLES}
+    for rel, path in files:
+        tree = ast.parse(path.read_text(), filename=rel)
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name in defs:
+                defs[node.name].append((rel, node.lineno))
+    for name, sites in defs.items():
+        expect = [(rel, None) for rel, names in _DEF_SITES.items()
+                  if name in names]
+        if len(sites) != 1:
+            where = ", ".join(f"{r}:{ln}" for r, ln in sites) or "nowhere"
+            out.append(Finding(
+                CHECKER, "oracle-multiplicity", name,
+                f"expected exactly one definition of {name} "
+                f"(in {expect[0][0]}), found {len(sites)}: {where}",
+                path=f"src/{expect[0][0]}"))
+        elif sites[0][0] != expect[0][0]:
+            out.append(Finding(
+                CHECKER, "oracle-multiplicity", name,
+                f"{name} is defined in {sites[0][0]}, expected "
+                f"{expect[0][0]}", path=f"src/{sites[0][0]}",
+                line=sites[0][1]))
+    return out
+
+
+def check_required_refs(files) -> list[Finding]:
+    out = []
+    by_rel = dict(files)
+    for rel, needed in sorted(REQUIRED_REFS.items()):
+        path = by_rel.get(rel)
+        if path is None:
+            out.append(Finding(CHECKER, "oracle-uncoupled", rel,
+                               "required module is missing from the tree",
+                               path=f"src/{rel}"))
+            continue
+        tree = ast.parse(path.read_text(), filename=rel)
+        refs = {sub.attr if isinstance(sub, ast.Attribute) else sub.id
+                for sub in ast.walk(tree)
+                if isinstance(sub, (ast.Attribute, ast.Name))}
+        for oracle in needed:
+            if oracle not in refs:
+                out.append(Finding(
+                    CHECKER, "oracle-uncoupled", f"{rel}::{oracle}",
+                    f"module must route its plane math through {oracle} "
+                    f"but never references it — an inline re-derivation "
+                    f"(or dead seam) slipped in",
+                    path=f"src/{rel}"))
+    return out
+
+
+def check_forks(files) -> list[Finding]:
+    out = []
+    for rel, path in files:
+        if not rel.startswith(_FORK_SCOPE):
+            continue
+        if rel in _FORK_EXEMPT:
+            continue
+        out.extend(scan_source(path.read_text(), rel))
+    return out
+
+
+def check_oracle_coupling() -> list[Finding]:
+    files = list(_tree_files(src_root()))
+    return (check_multiplicity(files) + check_required_refs(files)
+            + check_forks(files))

@@ -1,0 +1,184 @@
+"""Registry of Pallas kernel entry points for the contract checker.
+
+Every registered spec knows how to TRACE its kernel (``jax.make_jaxpr``
+over tiny placeholder planes — no execution, no compile) and where its
+source lives for findings.  New kernels must be registered here: the
+cleanliness test asserts the registry covers every ``pl.pallas_call`` in
+``src/repro/kernels``, so an unregistered kernel is itself a finding.
+
+Trace shapes are deliberately tiny (8 buckets x 8 slots): the contracts
+checked (DMA pairing, memory spaces, masked stores) are shape-independent
+structure, and small shapes keep ``python -m repro.analysis`` fast.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.predicates import KINDS
+
+B, S, V, N = 8, 8, 8, 8   # buckets, slots/bucket, value width, queries
+Q_TILE = 4                # pipeline-variant tile (must divide N)
+
+
+def _planes():
+    u32 = lambda: jnp.zeros((B, S), jnp.uint32)
+    return {
+        "digests": jnp.zeros((B, S), jnp.uint8),
+        "key_hi": u32(), "key_lo": u32(),
+        "score_hi": u32(), "score_lo": u32(),
+        "values": jnp.zeros((B * S, V), jnp.float32),
+    }
+
+
+def _queries():
+    z32 = lambda: jnp.zeros((N,), jnp.uint32)
+    return {
+        "bucket1": jnp.zeros((N,), jnp.int32),
+        "bucket2": jnp.zeros((N,), jnp.int32),
+        "qdigest": z32(), "qkey_hi": z32(), "qkey_lo": z32(),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    name: str                 # registry id, e.g. "find_scan_tlp"
+    path: str                 # repo-relative source file for findings
+    build: Callable[[], jax.core.ClosedJaxpr]
+
+    def trace(self) -> jax.core.ClosedJaxpr:
+        return self.build()
+
+
+def _trace(fn, *args, **kwargs):
+    return jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+
+
+def _spec_digest_tlp():
+    from repro.kernels import digest_scan as m
+    p, q = _planes(), _queries()
+    return _trace(m.digest_scan_tlp, p["digests"], p["key_hi"], p["key_lo"],
+                  q["bucket1"], q["qdigest"], q["qkey_hi"], q["qkey_lo"])
+
+
+def _spec_digest_pipeline():
+    from repro.kernels import digest_scan as m
+    p, q = _planes(), _queries()
+    return _trace(m.digest_scan_pipeline, p["digests"], p["key_hi"],
+                  p["key_lo"], q["bucket1"], q["qdigest"], q["qkey_hi"],
+                  q["qkey_lo"], q_tile=Q_TILE)
+
+
+def _spec_find_tlp():
+    from repro.kernels import find_scan as m
+    p, q = _planes(), _queries()
+    return _trace(m.find_scan_tlp, p["digests"], p["key_hi"], p["key_lo"],
+                  p["score_hi"], p["score_lo"], p["values"],
+                  q["bucket1"], q["bucket2"], q["qdigest"], q["qkey_hi"],
+                  q["qkey_lo"])
+
+
+def _spec_find_pipeline():
+    from repro.kernels import find_scan as m
+    p, q = _planes(), _queries()
+    return _trace(m.find_scan_pipeline, p["digests"], p["key_hi"],
+                  p["key_lo"], p["score_hi"], p["score_lo"], p["values"],
+                  q["bucket1"], q["bucket2"], q["qdigest"], q["qkey_hi"],
+                  q["qkey_lo"], q_tile=Q_TILE)
+
+
+def _spec_upsert_probe():
+    from repro.kernels import upsert_scan as m
+    p, q = _planes(), _queries()
+    return _trace(m.upsert_probe, p["digests"], p["key_hi"], p["key_lo"],
+                  p["score_hi"], p["score_lo"], q["bucket1"], q["bucket2"],
+                  q["qdigest"], q["qkey_hi"], q["qkey_lo"])
+
+
+def _spec_claim_scan():
+    from repro.kernels import upsert_scan as m
+    p, q = _planes(), _queries()
+    return _trace(m.claim_scan, p["key_hi"], p["key_lo"], p["score_hi"],
+                  p["score_lo"], q["bucket1"], jnp.zeros((N,), jnp.int32))
+
+
+def _spec_sweep(kind):
+    from repro.kernels import sweep_scan as m
+    p = _planes()
+    op = jnp.zeros((), jnp.uint32)
+    return _trace(m.sweep_match, p["key_hi"], p["key_lo"], p["score_hi"],
+                  p["score_lo"], op, op, op, op, kind=kind)
+
+
+def _spec_bucket_stats():
+    from repro.kernels import score_scan as m
+    p = _planes()
+    return _trace(m.bucket_stats, p["key_hi"], p["key_lo"], p["score_hi"],
+                  p["score_lo"], bucket_tile=B)
+
+
+def _spec_gather():
+    from repro.kernels import gather as m
+    p = _planes()
+    return _trace(m.gather_rows, p["values"], jnp.zeros((N,), jnp.int32),
+                  jnp.zeros((N,), jnp.int32))
+
+
+def _spec_scatter(add):
+    from repro.kernels import scatter as m
+    p = _planes()
+    return _trace(m.scatter_rows, p["values"], jnp.zeros((N,), jnp.int32),
+                  jnp.zeros((N, V), jnp.float32), jnp.zeros((N,), jnp.int32),
+                  add=add)
+
+
+def kernel_specs() -> Sequence[KernelSpec]:
+    specs = [
+        KernelSpec("digest_scan_tlp", "src/repro/kernels/digest_scan.py",
+                   _spec_digest_tlp),
+        KernelSpec("digest_scan_pipeline", "src/repro/kernels/digest_scan.py",
+                   _spec_digest_pipeline),
+        KernelSpec("find_scan_tlp", "src/repro/kernels/find_scan.py",
+                   _spec_find_tlp),
+        KernelSpec("find_scan_pipeline", "src/repro/kernels/find_scan.py",
+                   _spec_find_pipeline),
+        KernelSpec("upsert_probe", "src/repro/kernels/upsert_scan.py",
+                   _spec_upsert_probe),
+        KernelSpec("claim_scan", "src/repro/kernels/upsert_scan.py",
+                   _spec_claim_scan),
+        KernelSpec("bucket_stats", "src/repro/kernels/score_scan.py",
+                   _spec_bucket_stats),
+        KernelSpec("gather_rows", "src/repro/kernels/gather.py", _spec_gather),
+        KernelSpec("scatter_rows", "src/repro/kernels/scatter.py",
+                   lambda: _spec_scatter(False)),
+        KernelSpec("scatter_rows_add", "src/repro/kernels/scatter.py",
+                   lambda: _spec_scatter(True)),
+    ]
+    for kind in KINDS:
+        specs.append(KernelSpec(
+            f"sweep_match[{kind}]", "src/repro/kernels/sweep_scan.py",
+            lambda k=kind: _spec_sweep(k)))
+    return specs
+
+
+def unregistered_kernel_files() -> list:
+    """Kernel source files that call pallas_call but have no spec.
+
+    The contract checker can only enforce what it traces; a kernel file
+    missing from the registry silently escapes every rule, so the checker
+    reports such files as findings.
+    """
+    import pathlib
+
+    registered = {spec.path for spec in kernel_specs()}
+    kernels_dir = pathlib.Path(__file__).resolve().parents[1] / "kernels"
+    missing = []
+    for p in sorted(kernels_dir.glob("*.py")):
+        rel = f"src/repro/kernels/{p.name}"
+        if "pallas_call" in p.read_text() and rel not in registered:
+            missing.append(rel)
+    return missing

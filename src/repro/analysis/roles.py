@@ -1,0 +1,183 @@
+"""Checker 3: role/commutativity lint — the §3.5 triple-group taxonomy.
+
+Three layers are cross-checked:
+
+  unannotated-op     every public op entry point in ``repro.core.ops``
+                     (module-level function whose first parameter is
+                     ``state``) must carry a ``@roles.reader`` /
+                     ``@roles.updater`` / ``@roles.inserter`` annotation —
+                     a new op without a declared commutativity class is a
+                     finding, because the session planner would otherwise
+                     guess its fencing behaviour.
+  role-mismatch      every op the ``OpSession`` records must record it
+                     under the SAME role its ``core.ops`` counterpart is
+                     annotated with (the session's fusion/fencing decisions
+                     key off the recorded role).
+  plan-taxonomy      ``session._plan()`` must obey the taxonomy on a probe
+                     sequence: commuting reader/updater runs on one key
+                     batch share a single locate; every inserter is a
+                     singleton serialization group; and a reader AFTER an
+                     inserter must issue a fresh locate (cached positions
+                     died at the fence).
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding
+from repro.core import api as api_mod
+from repro.core import ops as ops_mod
+from repro.core import roles as roles_mod
+
+CHECKER = "roles"
+_OPS_PATH = "src/repro/core/ops.py"
+_API_PATH = "src/repro/core/api.py"
+
+# session-only composite ops (no core.ops counterpart) and their roles
+_SESSION_ONLY = {"update_rows": roles_mod.UPDATER}
+
+
+def public_ops(module=ops_mod) -> dict:
+    """Name -> function for every op entry point in the ops module."""
+    out = {}
+    for name, fn in vars(module).items():
+        if name.startswith("_") or not inspect.isfunction(fn):
+            continue
+        if getattr(fn, "__module__", None) != module.__name__:
+            continue
+        params = list(inspect.signature(fn).parameters)
+        if params and params[0] == "state":
+            out[name] = fn
+    return out
+
+
+def check_annotations(module=ops_mod, path: str = _OPS_PATH) -> list[Finding]:
+    out = []
+    for name, fn in sorted(public_ops(module).items()):
+        r = roles_mod.role_of(fn)
+        line = None
+        try:
+            line = inspect.getsourcelines(fn)[1]
+        except OSError:  # pragma: no cover
+            pass
+        if r is None:
+            out.append(Finding(
+                CHECKER, "unannotated-op", name,
+                "public op entry point has no @roles.reader/updater/"
+                "inserter annotation — declare its §3.5 commutativity "
+                "class so the session planner can fence it correctly",
+                path=path, line=line))
+        elif r not in roles_mod.ROLES:  # pragma: no cover - role() validates
+            out.append(Finding(CHECKER, "unknown-role", name,
+                               f"annotation {r!r} is not one of "
+                               f"{roles_mod.ROLES}", path=path,
+                               line=line))
+    return out
+
+
+def _probe_session():
+    t = api_mod.HKVTable.create(capacity=64, dim=4, slots_per_bucket=8)
+    s = t.session()
+    keys = api_mod.normalize_keys([1, 2, 3, 4])
+    vals = jnp.zeros((4, 4), jnp.float32)
+    # one of each recordable kind (keeps the recorded-role census complete)
+    s.find(keys)
+    s.find_rows(keys)
+    s.contains(keys)
+    s.assign(keys, vals)
+    s.assign_add(keys, vals)
+    s.assign_scores(keys, [5, 6, 7, 8])
+    s.update_rows(keys, lambda rows: rows)
+    s.insert_or_assign(keys, vals)
+    s.find_or_insert(keys, vals)
+    s.insert_and_evict(keys, vals)
+    s.erase(keys)
+    return s
+
+
+def check_session_roles() -> list[Finding]:
+    out = []
+    ops = public_ops()
+    s = _probe_session()
+    for op in s._ops:
+        if op.kind in _SESSION_ONLY:
+            want = _SESSION_ONLY[op.kind]
+            if op.role != want:
+                out.append(Finding(
+                    CHECKER, "role-mismatch", op.kind,
+                    f"session records composite op as {op.role!r}; its "
+                    f"declared class is {want!r}", path=_API_PATH))
+            continue
+        fn = ops.get(op.kind)
+        if fn is None:
+            out.append(Finding(
+                CHECKER, "unknown-session-op", op.kind,
+                "session records an op with no core.ops counterpart and "
+                "no session-only registration", path=_API_PATH))
+            continue
+        want = roles_mod.role_of(fn)
+        if want is not None and op.role != want:
+            out.append(Finding(
+                CHECKER, "role-mismatch", op.kind,
+                f"session records role {op.role!r} but core.ops.{op.kind} "
+                f"is annotated @roles.{want} — the planner would "
+                f"{'skip a required fence' if want == roles_mod.INSERTER else 'fence needlessly'}",
+                path=_API_PATH))
+    return out
+
+
+def check_plan_taxonomy() -> list[Finding]:
+    out = []
+    t = api_mod.HKVTable.create(capacity=64, dim=4, slots_per_bucket=8)
+    k1 = api_mod.normalize_keys([1, 2, 3, 4])
+    k2 = api_mod.normalize_keys([9, 10, 11, 12])
+    vals = jnp.zeros((4, 4), jnp.float32)
+    s = t.session()
+    s.find(k1)                      # issues locate[k1]
+    s.assign(k1, vals)              # must SHARE locate[k1]
+    s.find(k2)                      # distinct batch: own locate
+    s.insert_or_assign(k1, vals)    # serialization point
+    s.find(k1)                      # must RE-issue: cache died at fence
+    groups = s._plan()
+
+    def finding(rule, msg):
+        out.append(Finding(CHECKER, rule, "OpSession._plan", msg,
+                           path=_API_PATH))
+
+    if len(groups) != 3:
+        finding("plan-shape",
+                f"probe sequence should plan 3 groups "
+                f"(commuting run | inserter | trailing reader), got "
+                f"{len(groups)}")
+        return out
+    pre, ins, post = groups
+    if [op.kind for op in pre] != ["find", "assign", "find"]:
+        finding("plan-shape", f"first commuting group is "
+                f"{[op.kind for op in pre]}, expected [find, assign, find]")
+    if not (len(ins) == 1 and ins[0].role == roles_mod.INSERTER):
+        finding("inserter-not-serialized",
+                "inserter did not form a singleton serialization group")
+    if len(pre) == 3:
+        if pre[0].shares_locate:
+            finding("locate-sharing", "first reader on a key batch must "
+                    "issue (not share) its locate")
+        if not pre[1].shares_locate:
+            finding("locate-sharing", "updater on an already-probed key "
+                    "batch must share the reader's locate (§3.5 commuting "
+                    "rule)")
+        if pre[2].shares_locate:
+            finding("locate-sharing", "reader on a NEW key batch must "
+                    "issue its own locate")
+    if post and post[0].shares_locate:
+        finding("stale-locate",
+                "reader after an inserter shares a pre-fence locate — "
+                "structural ops invalidate cached positions (§3.5)")
+    return out
+
+
+def check_roles() -> list[Finding]:
+    return (check_annotations() + check_session_roles()
+            + check_plan_taxonomy())

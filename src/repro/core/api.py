@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core import find as find_mod
 from repro.core import ops as ops_mod
+from repro.core import roles as roles_mod
 from repro.core import table as table_mod
 from repro.core import u64
 from repro.core.predicates import SweepPredicate
@@ -452,7 +453,11 @@ def _opt_keys(x: Optional[Any]) -> Optional[U64]:
 # Op sessions — the triple-group taxonomy as a planner
 # =============================================================================
 
-_READER, _UPDATER, _INSERTER = "reader", "updater", "inserter"
+# The session's role vocabulary IS the annotation vocabulary (core.roles):
+# hkv-lint cross-checks every recorded op's role against the @roles.*
+# annotation on its core.ops counterpart.
+_READER, _UPDATER, _INSERTER = (roles_mod.READER, roles_mod.UPDATER,
+                                roles_mod.INSERTER)
 
 
 class SessionRef:

@@ -58,6 +58,30 @@ def probe_keys(cfg: HKVConfig, keys: U64) -> Probe:
     )
 
 
+def match_lanes(key_hi, key_lo, q_hi, q_lo, digests=None, q_digest=None):
+    """THE key-match formula (paper §3.2, Algorithm 1 lines 4–10).
+
+    Pure plane math — uint32/uint8 lane compares only, no gathers and no
+    dtype casts — so the identical function body runs under jnp on
+    ``[N, S]`` bucket rows *and* inside Pallas kernel bodies on ``[S]``
+    (or ``[T, S]``) VMEM rows.  This is the single definition every probe
+    stage must call: the jnp reference (via :func:`_match_in_bucket`) and
+    the ``digest_scan`` / ``find_scan`` / ``upsert_scan`` kernels.  hkv-lint's
+    oracle-coupling checker (``repro.analysis.oracle_coupling``) fails the
+    build if a kernel re-derives this conjunction inline, so the kernel and
+    reference paths cannot silently fork.
+
+    When ``digests``/``q_digest`` are given the 8-bit digest pre-filter is
+    folded into the mask (~1/256 false-positive rate, resolved by the full
+    key compare in the same expression).  Callers pass them pre-broadcast
+    and pre-cast: the formula itself never changes dtypes.
+    """
+    m = (key_hi == q_hi) & (key_lo == q_lo)
+    if digests is not None:
+        m = m & (digests == q_digest)
+    return m
+
+
 def _match_in_bucket(
     state: HKVState, bucket: jax.Array, keys: U64, digest: jax.Array,
     use_digest: bool = True,
@@ -70,10 +94,11 @@ def _match_in_bucket(
     """
     khi = state.key_hi[bucket]                       # uint32 [N, S]
     klo = state.key_lo[bucket]
-    kmask = (khi == keys.hi[:, None]) & (klo == keys.lo[:, None])
     if use_digest:
-        drow = state.digests[bucket]                 # uint8  [N, S]
-        kmask &= drow == digest[:, None]             # ~1/256 false positives
+        kmask = match_lanes(khi, klo, keys.hi[:, None], keys.lo[:, None],
+                            state.digests[bucket], digest[:, None])
+    else:
+        kmask = match_lanes(khi, klo, keys.hi[:, None], keys.lo[:, None])
     hit = jnp.any(kmask, axis=1)
     slot = jnp.argmax(kmask, axis=1).astype(jnp.int32)
     return hit, slot

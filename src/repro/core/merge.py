@@ -497,8 +497,9 @@ def upsert(
     pos_b = jnp.zeros((n,), jnp.int32)
     pos_s = jnp.zeros((n,), jnp.int32)
     pos_in = jnp.zeros((n,), bool)
-    hit_live = hit & (state.key_hi[loc.bucket, loc.slot] == keys_s.hi) & (
-        state.key_lo[loc.bucket, loc.slot] == keys_s.lo)
+    hit_live = hit & find_mod.match_lanes(
+        state.key_hi[loc.bucket, loc.slot], state.key_lo[loc.bucket, loc.slot],
+        keys_s.hi, keys_s.lo)
     hg = jnp.where(hit_live, gid, n)
     pos_b = pos_b.at[hg].set(loc.bucket, mode="drop")
     pos_s = pos_s.at[hg].set(loc.slot, mode="drop")

@@ -59,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import find as find_mod
+from repro.core import roles
 from repro.core import merge as merge_mod
 from repro.core import table as table_mod
 from repro.core import u64
@@ -108,6 +109,7 @@ def _gather_shared(state: HKVState, cfg: HKVConfig, loc, dim):
     return find_mod.gather_values(state, loc, dim, cfg.value_tier)
 
 
+@roles.reader
 def find(state: HKVState, cfg: HKVConfig, keys: U64,
          loc: Optional[find_mod.Locate] = None, *,
          backend: str = "auto") -> FindResult:
@@ -136,6 +138,7 @@ def find(state: HKVState, cfg: HKVConfig, keys: U64,
     return FindResult(values=vals, found=loc.found, score_hi=shi, score_lo=slo)
 
 
+@roles.reader
 def find_ptr(state: HKVState, cfg: HKVConfig, keys: U64, *,
              backend: str = "auto") -> find_mod.Locate:
     """Reader. The paper's pointer-returning `find*`: key-side work only.
@@ -153,6 +156,7 @@ def find_ptr(state: HKVState, cfg: HKVConfig, keys: U64, *,
     return find_mod.locate(state, cfg, keys)
 
 
+@roles.reader
 def contains(state: HKVState, cfg: HKVConfig, keys: U64,
              loc: Optional[find_mod.Locate] = None, *,
              backend: str = "auto") -> jax.Array:
@@ -170,6 +174,7 @@ class FindRowsResult(NamedTuple):
     score_lo: jax.Array  # tier hierarchy translates these on promotion
 
 
+@roles.reader
 def find_rows(state: HKVState, cfg: HKVConfig, keys: U64,
               loc: Optional[find_mod.Locate] = None, *,
               backend: str = "auto") -> FindRowsResult:
@@ -200,11 +205,13 @@ def find_rows(state: HKVState, cfg: HKVConfig, keys: U64,
                           score_hi=shi, score_lo=slo)
 
 
+@roles.reader
 def size(state: HKVState) -> jax.Array:
     """Reader. Number of live entries."""
     return jnp.sum(state.occupied_mask().astype(jnp.int32))
 
 
+@roles.reader
 def load_factor(state: HKVState) -> jax.Array:
     return state.load_factor()
 
@@ -218,6 +225,7 @@ class ExportResult(NamedTuple):
     mask: jax.Array   # bool — live & predicate-matching entries
 
 
+@roles.reader
 def export_batch(
     state: HKVState, cfg: HKVConfig, bucket_start: int, bucket_count: int
 ) -> ExportResult:
@@ -248,6 +256,7 @@ def export_batch(
     )
 
 
+@roles.reader
 def export_batch_if(
     state: HKVState,
     cfg: HKVConfig,
@@ -266,6 +275,7 @@ def export_batch_if(
 # =============================================================================
 
 
+@roles.updater
 def assign(
     state: HKVState,
     cfg: HKVConfig,
@@ -316,6 +326,7 @@ def assign(
     return state
 
 
+@roles.updater
 def assign_add(
     state: HKVState, cfg: HKVConfig, keys: U64, deltas: jax.Array,
     loc: Optional[find_mod.Locate] = None,
@@ -340,6 +351,7 @@ def assign_add(
     ))
 
 
+@roles.updater
 def assign_scores(
     state: HKVState, cfg: HKVConfig, keys: U64, scores: U64,
     loc: Optional[find_mod.Locate] = None,
@@ -386,6 +398,7 @@ def _upsert_stages(backend: str, cfg: HKVConfig):
     return kernel_ops.kernel_stages(cfg)
 
 
+@roles.inserter
 def insert_or_assign(
     state: HKVState,
     cfg: HKVConfig,
@@ -412,6 +425,7 @@ class InsertAndEvictResult(NamedTuple):
     evicted: EvictionStream   # positionally aligned with the input batch
 
 
+@roles.inserter
 def insert_and_evict(
     state: HKVState,
     cfg: HKVConfig,
@@ -453,6 +467,7 @@ class FindOrInsertResult(NamedTuple):
     evicted: EvictionStream
 
 
+@roles.inserter
 def find_or_insert(
     state: HKVState,
     cfg: HKVConfig,
@@ -509,6 +524,7 @@ def _gather_post(res: MergeResult, cfg: HKVConfig, init_values: jax.Array,
     return jnp.where(res.loc.found[:, None], vals, init_values[:, : cfg.dim])
 
 
+@roles.inserter
 def accum_or_assign(
     state: HKVState,
     cfg: HKVConfig,
@@ -545,6 +561,7 @@ def accum_or_assign(
     return UpsertResult(state=res.state, status=res.status[d.inverse])
 
 
+@roles.inserter
 def ingest(
     state: HKVState,
     cfg: HKVConfig,
@@ -566,6 +583,7 @@ def ingest(
     return UpsertResult(state=res.state, status=res.status)
 
 
+@roles.inserter
 def erase(state: HKVState, cfg: HKVConfig, keys: U64) -> HKVState:
     """Inserter (structural). Remove keys; freed slots return to the pool."""
     loc = find_mod.locate(state, cfg, keys)
@@ -588,6 +606,7 @@ def erase(state: HKVState, cfg: HKVConfig, keys: U64) -> HKVState:
     )
 
 
+@roles.inserter
 def clear(state: HKVState, cfg: HKVConfig) -> HKVState:
     """Inserter (structural). Drop every entry."""
     return table_mod.create(cfg)._replace(
@@ -649,6 +668,7 @@ def _erase_slots(state: HKVState, cfg: HKVConfig, mask: jax.Array) -> HKVState:
     )
 
 
+@roles.inserter
 def erase_if(state: HKVState, cfg: HKVConfig, pred, *,
              backend: str = "auto") -> SweepResult:
     """Inserter (structural). Remove EVERY live entry matching `pred` —
@@ -662,6 +682,7 @@ def erase_if(state: HKVState, cfg: HKVConfig, pred, *,
                        swept=jnp.sum(mask.astype(jnp.int32)))
 
 
+@roles.inserter
 def evict_if(state: HKVState, cfg: HKVConfig, pred, budget: int, *,
              limit: Optional[jax.Array] = None,
              backend: str = "auto") -> EvictIfResult:

@@ -1,0 +1,78 @@
+"""Op-role annotations — the §3.5 triple-group taxonomy, machine-readable.
+
+The paper groups table operations into three roles with different
+commutativity properties (DESIGN.md §3):
+
+  reader    pure probes — commute with each other and with updaters on
+            disjoint or identical key sets; never move keys between slots.
+  updater   in-place mutations of located entries (values/scores) — keys
+            keep their (bucket, slot), so a locate computed before the op
+            is still valid after it.
+  inserter  ops that create, move, or destroy entries — serialization
+            points: any locate computed before an inserter is invalid
+            after it.
+
+``OpSession`` uses the roles to share one locate across a run of commuting
+ops and to fence at inserters.  hkv-lint's role checker
+(``repro.analysis.roles``) requires every public op entry point in
+``core/ops.py`` to carry one of these annotations and cross-checks the
+session's recorded roles against them, so a new op cannot silently join
+the session machinery with the wrong commutativity class.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, TypeVar
+
+READER = "reader"
+UPDATER = "updater"
+INSERTER = "inserter"
+ROLES = (READER, UPDATER, INSERTER)
+
+_ATTR = "__hkv_role__"
+
+F = TypeVar("F", bound=Callable)
+
+
+def role(name: str) -> Callable[[F], F]:
+    """Decorator declaring an op entry point's §3.5 role.
+
+    ``@role(roles.READER)`` etc.  The annotation is metadata only — it does
+    not wrap the function — so jit/static-argnum behaviour is untouched.
+    """
+    if name not in ROLES:
+        raise ValueError(f"unknown op role {name!r}; expected one of {ROLES}")
+
+    def mark(fn: F) -> F:
+        setattr(fn, _ATTR, name)
+        return fn
+
+    return mark
+
+
+def reader(fn: F) -> F:
+    return role(READER)(fn)
+
+
+def updater(fn: F) -> F:
+    return role(UPDATER)(fn)
+
+
+def inserter(fn: F) -> F:
+    return role(INSERTER)(fn)
+
+
+def role_of(fn) -> Optional[str]:
+    """The declared role of an op entry point, or None if unannotated.
+
+    Sees through ``functools.partial``/``jax.jit`` wrappers exposing
+    ``__wrapped__`` or ``func``.
+    """
+    seen = 0
+    while fn is not None and seen < 8:
+        r = getattr(fn, _ATTR, None)
+        if r is not None:
+            return r
+        fn = getattr(fn, "__wrapped__", None) or getattr(fn, "func", None)
+        seen += 1
+    return None

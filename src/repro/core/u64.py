@@ -130,8 +130,20 @@ def maximum(a: U64, b: U64) -> U64:
     return select(ge(a, b), a, b)
 
 
+def empty_lanes(hi, lo) -> jax.Array:
+    """Plane-level EMPTY-sentinel test — the one liveness formula.
+
+    Takes raw (hi, lo) uint32 planes rather than a U64 so the same body
+    serves jnp table planes and VMEM rows inside Pallas kernel bodies
+    (occupancy masks, sweep liveness).  Kernels must call this instead of
+    re-deriving the all-ones compare inline — hkv-lint's oracle-coupling
+    checker flags inline forks.
+    """
+    return (hi == EMPTY_HI) & (lo == EMPTY_LO)
+
+
 def is_empty(a: U64) -> jax.Array:
-    return (a.hi == EMPTY_HI) & (a.lo == EMPTY_LO)
+    return empty_lanes(a.hi, a.lo)
 
 
 # ---------------------------------------------------------------------------

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.find import match_lanes
 from repro.kernels import compat
 
 LANES = 128  # TPU vreg minor dimension == slots per bucket
@@ -53,8 +54,10 @@ def _tlp_kernel(bidx_ref, qd_ref, qh_ref, ql_ref, td_ref, th_ref, tl_ref,
     qd = qd_ref[i]
     qh = qh_ref[i]
     ql = ql_ref[i]
-    # one vector compare over the 128-lane digest row = the whole candidate set
-    m = (td_ref[0, :].astype(jnp.uint32) == qd) & (th_ref[0, :] == qh) & (tl_ref[0, :] == ql)
+    # one vector compare over the 128-lane digest row = the whole candidate
+    # set; the mask formula is the shared core.find.match_lanes oracle
+    m = match_lanes(th_ref[0, :], tl_ref[0, :], qh, ql,
+                    td_ref[0, :].astype(jnp.uint32), qd)
     found_ref[0, 0] = jnp.any(m).astype(jnp.int32)
     slot_ref[0, 0] = jnp.argmax(m).astype(jnp.int32)
 
@@ -134,12 +137,11 @@ def _pipeline_kernel(q_tile, bidx_ref, qd_ref, qh_ref, ql_ref,
             issue(q + 1, nxt)
 
         wait(q, cur)
-        # stage 2: vectorized digest + key compare (one lane-row each)
-        m = (
-            (dbuf[cur, 0, :].astype(jnp.uint32) == qd_ref[0, q])
-            & (hbuf[cur, 0, :] == qh_ref[0, q])
-            & (lbuf[cur, 0, :] == ql_ref[0, q])
-        )
+        # stage 2: vectorized digest + key compare (one lane-row each),
+        # via the shared core.find.match_lanes oracle
+        m = match_lanes(hbuf[cur, 0, :], lbuf[cur, 0, :],
+                        qh_ref[0, q], ql_ref[0, q],
+                        dbuf[cur, 0, :].astype(jnp.uint32), qd_ref[0, q])
         # stage 3: reduce to (found, slot)
         f = jnp.any(m).astype(jnp.int32)
         s = jnp.argmax(m).astype(jnp.int32)

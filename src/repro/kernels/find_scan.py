@@ -56,6 +56,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.find import match_lanes
 from repro.kernels import compat
 
 LANES = 128  # TPU vreg minor dimension == slots per bucket
@@ -88,10 +89,13 @@ def _tlp_kernel(use_digest, slots, b1_ref, b2_ref, qd_ref, qh_ref, ql_ref,
 
     def row_match(d_ref, h_ref, l_ref):
         # full-key compare, gated by the one-lane-row digest pre-filter —
-        # the reference `_match_in_bucket` formula, verbatim
-        m = (h_ref[0, :] == qh) & (l_ref[0, :] == ql)
+        # the shared `core.find.match_lanes` oracle, so kernel and jnp
+        # reference cannot fork
         if use_digest:
-            m &= d_ref[0, :].astype(jnp.uint32) == qd
+            m = match_lanes(h_ref[0, :], l_ref[0, :], qh, ql,
+                            d_ref[0, :].astype(jnp.uint32), qd)
+        else:
+            m = match_lanes(h_ref[0, :], l_ref[0, :], qh, ql)
         return jnp.any(m), jnp.argmax(m).astype(jnp.int32)
 
     hit1, slot1 = row_match(d1_ref, h1_ref, l1_ref)
@@ -262,11 +266,14 @@ def _pipeline_kernel(use_digest, q_tile, slots,
         qh = qh_ref[0, q]
         ql = ql_ref[0, q]
 
-        # stage 2: vectorized digest + key compare per candidate bucket
+        # stage 2: vectorized digest + key compare per candidate bucket,
+        # via the shared `core.find.match_lanes` oracle
         def row_match(db, hb, lb):
-            m = (hb[cur, 0, :] == qh) & (lb[cur, 0, :] == ql)
             if use_digest:
-                m &= db[cur, 0, :].astype(jnp.uint32) == qd
+                m = match_lanes(hb[cur, 0, :], lb[cur, 0, :], qh, ql,
+                                db[cur, 0, :].astype(jnp.uint32), qd)
+            else:
+                m = match_lanes(hb[cur, 0, :], lb[cur, 0, :], qh, ql)
             return jnp.any(m), jnp.argmax(m).astype(jnp.int32)
 
         hit1, slot1 = row_match(d1b, h1b, l1b)

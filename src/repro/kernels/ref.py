@@ -11,6 +11,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import find, u64
+
 
 def digest_scan_ref(
     tdigests: jax.Array,   # uint8  [B, S] table digest rows
@@ -26,10 +28,10 @@ def digest_scan_ref(
     Digest pre-filter then full key compare; the first matching slot wins
     (at most one can match by the table's key-uniqueness invariant).
     """
-    drow = tdigests[buckets].astype(jnp.uint32)
-    m = (drow == qdigest[:, None]) & (tkey_hi[buckets] == qkey_hi[:, None]) & (
-        tkey_lo[buckets] == qkey_lo[:, None]
-    )
+    m = find.match_lanes(tkey_hi[buckets], tkey_lo[buckets],
+                         qkey_hi[:, None], qkey_lo[:, None],
+                         tdigests[buckets].astype(jnp.uint32),
+                         qdigest[:, None])
     found = jnp.any(m, axis=1).astype(jnp.int32)
     slot = jnp.argmax(m, axis=1).astype(jnp.int32)
     return slot, found
@@ -62,10 +64,14 @@ def find_scan_ref(
     s = tdigests.shape[1]
 
     def match(buckets):
-        m = (tkey_hi[buckets] == qkey_hi[:, None]) & (
-            tkey_lo[buckets] == qkey_lo[:, None])
         if use_digest:
-            m &= tdigests[buckets].astype(jnp.uint32) == qdigest[:, None]
+            m = find.match_lanes(tkey_hi[buckets], tkey_lo[buckets],
+                                 qkey_hi[:, None], qkey_lo[:, None],
+                                 tdigests[buckets].astype(jnp.uint32),
+                                 qdigest[:, None])
+        else:
+            m = find.match_lanes(tkey_hi[buckets], tkey_lo[buckets],
+                                 qkey_hi[:, None], qkey_lo[:, None])
         return jnp.any(m, axis=1), jnp.argmax(m, axis=1).astype(jnp.int32)
 
     hit1, slot1 = match(bucket1)
@@ -116,7 +122,7 @@ def bucket_stats_ref(
     Empty slots (all-ones key sentinel) are excluded from the min; a fully
     empty bucket reports the all-ones max score and argmin slot 0.
     """
-    occ_mask = ~((tkey_hi == jnp.uint32(0xFFFFFFFF)) & (tkey_lo == jnp.uint32(0xFFFFFFFF)))
+    occ_mask = ~u64.empty_lanes(tkey_hi, tkey_lo)
     occ = jnp.sum(occ_mask.astype(jnp.int32), axis=1)
     ones = jnp.uint32(0xFFFFFFFF)
     shi = jnp.where(occ_mask, score_hi, ones)
@@ -124,6 +130,6 @@ def bucket_stats_ref(
     min_hi = jnp.min(shi, axis=1)
     lo_cand = jnp.where(shi == min_hi[:, None], slo, ones)
     min_lo = jnp.min(lo_cand, axis=1)
-    is_min = (shi == min_hi[:, None]) & (slo == min_lo[:, None])
+    is_min = find.match_lanes(shi, slo, min_hi[:, None], min_lo[:, None])
     argmin = jnp.argmax(is_min, axis=1).astype(jnp.int32)
     return occ, min_hi, min_lo, argmin

@@ -23,9 +23,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.find import match_lanes
+from repro.core.u64 import empty_lanes
+
+
 def _stats_kernel(kh_ref, kl_ref, sh_ref, sl_ref, occ_ref, mh_ref, ml_ref, am_ref):
     ONES = jnp.uint32(0xFFFFFFFF)
-    occ_mask = ~((kh_ref[...] == ONES) & (kl_ref[...] == ONES))
+    occ_mask = ~empty_lanes(kh_ref[...], kl_ref[...])
     occ_ref[:, 0] = jnp.sum(occ_mask.astype(jnp.int32), axis=1)
     shi = jnp.where(occ_mask, sh_ref[...], ONES)
     slo = jnp.where(occ_mask, sl_ref[...], ONES)
@@ -34,7 +38,7 @@ def _stats_kernel(kh_ref, kl_ref, sh_ref, sl_ref, occ_ref, mh_ref, ml_ref, am_re
     min_lo = jnp.min(lo_cand, axis=1)
     mh_ref[:, 0] = min_hi
     ml_ref[:, 0] = min_lo
-    is_min = (shi == min_hi[:, None]) & (slo == min_lo[:, None])
+    is_min = match_lanes(shi, slo, min_hi[:, None], min_lo[:, None])
     am_ref[:, 0] = jnp.argmax(is_min, axis=1).astype(jnp.int32)
 
 

@@ -34,14 +34,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.predicates import match_planes
+from repro.core.u64 import empty_lanes
 
 
 def _sweep_kernel(kind, kh_ref, kl_ref, sh_ref, sl_ref,
                   ah_ref, al_ref, bh_ref, bl_ref, match_ref, cnt_ref):
-    ONES = jnp.uint32(0xFFFFFFFF)
     kh = kh_ref[...]
     kl = kl_ref[...]
-    live = ~((kh == ONES) & (kl == ONES))
+    live = ~empty_lanes(kh, kl)
     m = live & match_planes(
         kind, kh, kl, sh_ref[...], sl_ref[...],
         ah_ref[0, 0], al_ref[0, 0], bh_ref[0, 0], bl_ref[0, 0],

@@ -37,6 +37,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.find import match_lanes
+from repro.core.u64 import empty_lanes
 from repro.kernels import compat
 
 
@@ -58,11 +60,13 @@ def _probe_kernel(use_digest, slots, b1_ref, b2_ref, qd_ref, qh_ref, ql_ref,
     def row_pass(d_ref, h_ref, l_ref, sh_ref, sl_ref):
         hh = h_ref[0, :]
         ll = l_ref[0, :]
-        # full-key compare, gated by the one-lane-row digest pre-filter
-        m = (hh == qh) & (ll == ql)
+        # full-key compare, gated by the one-lane-row digest pre-filter —
+        # the shared `core.find.match_lanes` oracle
         if use_digest:
-            m &= d_ref[0, :].astype(jnp.uint32) == qd
-        occ_mask = ~((hh == ONES) & (ll == ONES))
+            m = match_lanes(hh, ll, qh, ql, d_ref[0, :].astype(jnp.uint32), qd)
+        else:
+            m = match_lanes(hh, ll, qh, ql)
+        occ_mask = ~empty_lanes(hh, ll)
         # lexicographic u64 min over live slots (empties -> +inf sentinel)
         shi = jnp.where(occ_mask, sh_ref[0, :], ONES)
         slo = jnp.where(occ_mask, sl_ref[0, :], ONES)
@@ -152,10 +156,9 @@ def _claim_kernel(slots, bkt_ref, rank_ref, kh_ref, kl_ref, sh_ref, sl_ref,
                   vslot_ref, vocc_ref, vsh_ref, vsl_ref, vkh_ref, vkl_ref):
     i = pl.program_id(0)
     r = rank_ref[i]
-    ONES = jnp.uint32(0xFFFFFFFF)
     hh = kh_ref[0, :]
     ll = kl_ref[0, :]
-    occ = (~((hh == ONES) & (ll == ONES))).astype(jnp.uint32)
+    occ = (~empty_lanes(hh, ll)).astype(jnp.uint32)
     shi = sh_ref[0, :]
     slo = sl_ref[0, :]
     slot_iota = jax.lax.iota(jnp.int32, slots)

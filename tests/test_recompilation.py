@@ -1,0 +1,103 @@
+"""Recompilation regressions: one compile per static signature.
+
+PR 5 made ``SweepPredicate.kind`` the ONLY static axis of a predicate
+(operands are traced u64 planes); the handle layer funnels every accepted
+key form through ``normalize_keys`` into one aval.  These tests pin both
+with ``jax.jit``'s cache counter so a weak_type leak or a Python operand
+captured into the static signature fails CI as a named regression rather
+than surfacing as a silent TPU perf cliff.
+
+The dynamic compile-cache AUDIT (scenario table, findings) lives in
+``repro.analysis.compile_cache``; this file is the narrow, always-on
+regression net for the two contracts most likely to drift.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import HKVTable, normalize_keys
+from repro.core.predicates import KINDS, SweepPredicate
+
+
+def _table(backend="jnp"):
+    return HKVTable.create(capacity=64, dim=4, slots_per_bucket=8,
+                           backend=backend)
+
+
+PREDS = {
+    "always": (SweepPredicate.always(), SweepPredicate.always()),
+    "score_lt": (SweepPredicate.score_below(3),
+                 SweepPredicate.score_below(1 << 40)),
+    "score_ge": (SweepPredicate.score_at_least(3),
+                 SweepPredicate.score_at_least(1 << 40)),
+    "epoch_lt": (SweepPredicate.expire_before(1),
+                 SweepPredicate.expire_before(12)),
+    "key_range": (SweepPredicate.key_in_range(1, 9),
+                  SweepPredicate.key_in_range(1 << 33, 1 << 34)),
+}
+
+
+def test_predicate_kind_census_matches_kinds():
+    # a new kind must be added to PREDS or the count assertions go stale
+    assert set(PREDS) == set(KINDS)
+
+
+@pytest.mark.parametrize("op", ["erase_if", "evict_if"])
+def test_one_compile_per_predicate_kind(op):
+    t = _table()
+    if op == "erase_if":
+        f = jax.jit(lambda tbl, p: tbl.erase_if(p).swept)
+    else:
+        f = jax.jit(lambda tbl, p: tbl.evict_if(p, 4).count)
+    for kind in KINDS:
+        for p in PREDS[kind]:
+            f(t, p)
+        assert f._cache_size() == list(KINDS).index(kind) + 1, (
+            f"{op} recompiled within predicate kind {kind!r}: threshold "
+            f"operands must be traced, not static")
+    assert f._cache_size() == len(KINDS)
+
+
+def test_one_compile_across_key_forms():
+    t = _table()
+    f = jax.jit(lambda tbl, keys: tbl.find(keys).values)
+    forms = [
+        normalize_keys([1, 2, -1, 4]),
+        normalize_keys(np.arange(4, dtype=np.uint64)),
+        normalize_keys(np.uint64([1 << 40, 2, 3, (1 << 63) + 5])),
+        normalize_keys(np.array([7, 8, 9, 10], dtype=np.int32)),
+    ]
+    for keys in forms:
+        f(t, keys)
+    assert f._cache_size() == 1, (
+        "normalize_keys must land every accepted key form on one aval "
+        "(u64 plane pair, no weak_type drift)")
+
+
+def test_one_compile_per_backend():
+    f = jax.jit(lambda tbl, keys: tbl.contains(keys))
+    keys = normalize_keys([1, 2, 3, 4])
+    for backend in ("jnp", "kernel"):
+        t = _table(backend)
+        f(t, keys)
+        f(t, keys)
+    assert f._cache_size() == 2, (
+        "backend is a static aux axis: one compile each, no growth on "
+        "repeat calls")
+
+
+def test_insert_values_and_scores_are_traced():
+    t = _table()
+    f = jax.jit(lambda tbl, keys, v: tbl.insert_or_assign(keys, v).status)
+    keys = normalize_keys([1, 2, 3, 4])
+    for fill in (0.0, 1.5, -2.0):
+        f(t, keys, jnp.full((4, 4), fill, jnp.float32))
+    assert f._cache_size() == 1
+
+    g = jax.jit(lambda tbl, keys, s: tbl.assign_scores(keys, s))
+    for sval in (3, 9, 1 << 40):
+        g(t, keys, normalize_keys(np.uint64([sval] * 4)))
+    assert g._cache_size() == 1, (
+        "score operands (incl. wide u64) must share one compile")

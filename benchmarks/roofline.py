@@ -1,6 +1,6 @@
-"""Roofline analysis: the find-path bytes model + dry-run step terms.
+"""Roofline analysis: find- and update-path bytes models + dry-run terms.
 
-Two surfaces share this module:
+Three surfaces share this module:
 
 **Find-path roofline (the PR-6 fused-find contract).**  A find is
 memory-bound: the fused kernel makes exactly one pass over each query's
@@ -19,6 +19,21 @@ are reported as distance-to-roofline fractions.  `run()` returns a `Csv`
 so `benchmarks.run` emits it as `BENCH_roofline.json` in the
 bench-trajectory/v1 schema — the CI perf trajectory carries the model
 next to the measurements it bounds.
+
+**Update-path roofline (the fused update_scan contract).**  A gradient
+step is also memory-bound, but the row moves BOTH ways (read + optimizer
+apply + write-back) and carries its optimizer state (`aux` columns).  Per
+deduped query, with R = 4*(dim+aux) the f32 row bytes:
+
+    metadata    = P * (S + 2 * 4*S)   # digest + key planes; scores untouched
+    fused       = metadata + 2*R      # in-kernel RMW: one read, one write
+    composed    = metadata + 4*R      # gather materializes compact rows to
+                                      # HBM, the host apply reads them back,
+                                      # scatter writes: 2x the row traffic
+
+`update_bytes` is the model `exp9_train_apply` records its byte deltas
+from; the savings fraction grows with dim+aux (config C rowwise_adagrad:
+2x on the row plane).
 
 **Dry-run step terms** (§Roofline contract, unchanged): per
 (arch x shape x mesh) cell from runs/dryrun/<mesh>/<cell>.json,
@@ -77,6 +92,35 @@ def find_ceiling_kv_s(dim: int, *, buckets_per_key: int = 1,
                                slots=slots)["total"]
 
 
+# =============================================================================
+# Update-path bytes model (the fused update_scan contract)
+# =============================================================================
+
+
+def update_bytes(dim: int, aux: int, *, buckets_per_key: int = 1,
+                 slots: int = SLOTS) -> dict:
+    """Bytes one gradient-step update moves per deduped query, fused vs
+    the composed locate+gather+apply+scatter it replaced (module
+    docstring for the derivation; scores are untouched on this path)."""
+    digest = slots                      # uint8 row per candidate bucket
+    keys = 2 * 4 * slots                # key hi/lo uint32 rows
+    metadata = buckets_per_key * (digest + keys)
+    row = 4 * (dim + aux)               # f32 value row incl. optimizer aux
+    return {
+        "metadata": metadata,
+        "row": row,
+        "fused": metadata + 2 * row,        # in-kernel read + write-back
+        "composed": metadata + 4 * row,     # extra compact-row round trip
+    }
+
+
+def update_ceiling_kv_s(dim: int, aux: int, *, buckets_per_key: int = 1,
+                        slots: int = SLOTS) -> float:
+    """HBM roofline on fused updates/s."""
+    return HBM_BW / update_bytes(dim, aux, buckets_per_key=buckets_per_key,
+                                 slots=slots)["fused"]
+
+
 def load_exp2(bench_dir: str) -> list[dict]:
     """Achieved find rows from a prior `BENCH_exp2.json`, if any:
     [{name, dim, kv_per_s}] for rows named find/cfgX(dim=D)/lf=L."""
@@ -102,8 +146,8 @@ def run_find_roofline(csv=None, bench_dir: str = "runs/bench"):
     present) each measured find rate's distance to its roofline."""
     from benchmarks.common import Csv
 
-    csv = csv or Csv("Roofline: fused-find bytes model + exp2 distance "
-                     "[ceiling = HBM_BW / bytes-per-find]")
+    csv = csv or Csv("Roofline: fused find/update bytes models + exp2 "
+                     "distance [ceiling = HBM_BW / bytes-per-op]")
     for name, dim in CONFIGS.items():
         for p in (1, 2):
             b = find_bytes(dim, buckets_per_key=p)
@@ -113,6 +157,22 @@ def run_find_roofline(csv=None, bench_dir: str = "runs/bench"):
                 f"bytes/find={b['total']}"
                 f"(digest={b['digest']}+keys={b['keys']}"
                 f"+scores={b['scores']}+value={b['value']}),"
+                f"ceiling={ceil/1e6:.0f}M-KV/s@{HBM_BW/1e9:.0f}GB/s",
+                kv_s=ceil,
+            )
+    # the update-path model: per config x optimizer-aux class, the fused
+    # vs composed bytes and the row-plane saving the fused kernel banks
+    for name, dim in CONFIGS.items():
+        for opt_name, aux in (("sgd", 0), ("rowwise_adagrad", 1),
+                              ("adagrad", dim)):
+            b = update_bytes(dim, aux, buckets_per_key=2)
+            ceil = update_ceiling_kv_s(dim, aux, buckets_per_key=2)
+            saved = b["composed"] - b["fused"]
+            csv.row(
+                f"update-model/cfg{name}(dim={dim},{opt_name})/P=2", None,
+                f"fused={b['fused']}B,composed={b['composed']}B"
+                f"(meta={b['metadata']}+row={b['row']}x2|4),"
+                f"saved={saved}B/update({100 * saved / b['composed']:.0f}%),"
                 f"ceiling={ceil/1e6:.0f}M-KV/s@{HBM_BW/1e9:.0f}GB/s",
                 kv_s=ceil,
             )

@@ -7,9 +7,11 @@
       --smoke --json-out runs/bench --timestamp 2026-07-26T00:00:00Z
 
 Output: `name,us_per_call,derived` CSV blocks per experiment on stdout.
-`roofline` emits the fused-find bytes model + distance-to-roofline against
-any BENCH_exp2.json in the --json-out dir (dry-run step terms ride along
-when runs/dryrun/ artifacts exist).  --backend selects the table-op
+`roofline` emits the fused find/update bytes models + distance-to-roofline
+against any BENCH_exp2.json in the --json-out dir (dry-run step terms ride
+along when runs/dryrun/ artifacts exist).  `exp9_train_apply` measures
+end-to-end DLRM train steps/sec under the fused vs composed updater arms
+per optimizer variant, with kernel launch/byte deltas.  --backend selects the table-op
 implementation for exp2 (DESIGN.md §4); `fused` adds the reader-path
 launch-accounting arm on top of the kernel backend.
 
@@ -69,7 +71,7 @@ def main() -> None:
         sys.exit("error: --json-out requires --timestamp (the driver passes "
                  "the clock in; artifacts never read one)")
     known = {"exp1", "exp2", "exp3", "exp4", "exp5", "exp6_online",
-             "exp7_maintenance", "roofline"}
+             "exp7_maintenance", "exp9_train_apply", "roofline"}
     bad = [a for a in args if a not in known]
     if bad:
         sys.exit(f"error: unknown argument(s) {bad}; experiments: {sorted(known)}, "
@@ -126,6 +128,10 @@ def main() -> None:
         from benchmarks import exp7_maintenance
 
         emit("exp7_maintenance", exp7_maintenance.run(smoke=bool(smoke)))
+    if want("exp9_train_apply"):
+        from benchmarks import exp9_train_apply
+
+        emit("exp9_train_apply", exp9_train_apply.run())
     if want("roofline"):
         from benchmarks import roofline
 

@@ -31,7 +31,7 @@ if [ "${1:-}" = "--fast" ]; then
     if [ "$#" -eq 0 ] && python -c "import pytest_cov" >/dev/null 2>&1; then
         exec python -m pytest -x -q -m "not slow" \
             --cov=repro --cov-report=term --cov-report=xml:coverage.xml \
-            --cov-fail-under=65
+            --cov-fail-under=66
     fi
     exec python -m pytest -x -q -m "not slow" "$@"
 fi

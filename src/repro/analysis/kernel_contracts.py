@@ -459,6 +459,9 @@ def check_hmem_seam() -> list[Finding]:
                                      backend="kernel").state,
         "erase_if[hmem,kernel]": lambda s, h, l, v: ops_mod.erase_if(
             s, cfg, _always(), backend="kernel").state,
+        "update_rows[hmem,kernel]": lambda s, h, l, v:
+            ops_mod.update_rows(s, cfg, U64(h, l), v, _sgd(),
+                                backend="kernel").state,
     }
     out = []
     for label, f in cases.items():
@@ -474,3 +477,8 @@ def check_hmem_seam() -> list[Finding]:
 def _always():
     from repro.core.predicates import SweepPredicate
     return SweepPredicate.always()
+
+
+def _sgd():
+    from repro.embedding.sparse_opt import SparseOptimizer
+    return SparseOptimizer("sgd")

@@ -44,6 +44,7 @@ REQUIRED_REFS = {
     "repro/core/merge.py": ("match_lanes",),
     "repro/kernels/digest_scan.py": ("match_lanes",),
     "repro/kernels/find_scan.py": ("match_lanes",),
+    "repro/kernels/update_scan.py": ("match_lanes",),
     "repro/kernels/upsert_scan.py": ("match_lanes", "empty_lanes"),
     "repro/kernels/sweep_scan.py": ("empty_lanes",),
     "repro/kernels/score_scan.py": ("empty_lanes",),

@@ -121,6 +121,24 @@ def _spec_bucket_stats():
                   p["score_lo"], bucket_tile=B)
 
 
+def _spec_update(variant):
+    from repro.embedding.sparse_opt import SparseOptimizer
+    from repro.kernels import update_scan as m
+    p, q = _planes(), _queries()
+    # rowwise_adagrad with dim = V-1: dim + 1 aux col == V, so the trace
+    # exercises both the embedding and aux column paths of the in-kernel
+    # optimizer apply against the standard V-wide placeholder plane
+    opt = SparseOptimizer("rowwise_adagrad")
+    dim = V - 1
+    qvalid = jnp.ones((N,), jnp.int32)
+    grads = jnp.zeros((N, dim), jnp.float32)
+    fn = m.update_scan_tlp if variant == "tlp" else m.update_scan_pipeline
+    kw = {} if variant == "tlp" else {"q_tile": Q_TILE}
+    return _trace(fn, p["digests"], p["key_hi"], p["key_lo"], p["values"],
+                  q["bucket1"], q["bucket2"], q["qdigest"], q["qkey_hi"],
+                  q["qkey_lo"], qvalid, grads, opt=opt, dim=dim, **kw)
+
+
 def _spec_gather():
     from repro.kernels import gather as m
     p = _planes()
@@ -152,6 +170,10 @@ def kernel_specs() -> Sequence[KernelSpec]:
                    _spec_claim_scan),
         KernelSpec("bucket_stats", "src/repro/kernels/score_scan.py",
                    _spec_bucket_stats),
+        KernelSpec("update_scan_tlp", "src/repro/kernels/update_scan.py",
+                   lambda: _spec_update("tlp")),
+        KernelSpec("update_scan_pipeline", "src/repro/kernels/update_scan.py",
+                   lambda: _spec_update("pipeline")),
         KernelSpec("gather_rows", "src/repro/kernels/gather.py", _spec_gather),
         KernelSpec("scatter_rows", "src/repro/kernels/scatter.py",
                    lambda: _spec_scatter(False)),

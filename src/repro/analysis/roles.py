@@ -36,8 +36,11 @@ CHECKER = "roles"
 _OPS_PATH = "src/repro/core/ops.py"
 _API_PATH = "src/repro/core/api.py"
 
-# session-only composite ops (no core.ops counterpart) and their roles
-_SESSION_ONLY = {"update_rows": roles_mod.UPDATER}
+# session-only composite ops (no core.ops counterpart) and their roles.
+# Empty since update_rows became a first-class @roles.updater op in
+# core.ops (the fused gradient step) — kept as the registration point for
+# any future session-only composite.
+_SESSION_ONLY: dict = {}
 
 
 def public_ops(module=ops_mod) -> dict:

@@ -581,9 +581,16 @@ class OpSession:
         """Updater. Fused read-modify-write: rows[k] = fn(rows[k]) for
         existing keys (misses untouched; fn sees zero rows there).
 
-        `fn` maps the gathered full-width rows [N, dim+aux] to replacement
-        rows — the sparse-optimizer shape.  Gather and write-back share ONE
-        locate (the unfused sequence find_rows + assign issues two).
+        `fn` is either a callable mapping the gathered full-width rows
+        [N, dim+aux] to replacement rows, or an `ops.RowUpdate` — the
+        structured gradient-step payload (sparse-optimizer variant +
+        segment-summed grads).  A callable shares the session's ONE locate
+        (the unfused find_rows + assign issues two); a `RowUpdate` with no
+        already-shared locate goes further: commit() routes it whole to
+        `ops.update_rows`, which on the kernel backend is the fused
+        update_scan pass — probe + optimizer apply + write-back in ONE
+        launch.  The ref resolves to an `ops.UpdateRowsResult` for a
+        `RowUpdate` and to the gathered `FindRowsResult` for a callable.
         """
         return self._record("update_rows", _UPDATER, keys, fn, update_scores)
 
@@ -682,7 +689,12 @@ class OpSession:
                     locs.clear()
                     continue
                 loc = locs.get(op.key_ref)
-                if loc is None and op.kind != "noop":
+                # a structured RowUpdate with no locate to share does its
+                # own (fused) probe inside ops.update_rows — pre-locating
+                # here would break the ONE-launch contract
+                structured = (op.kind == "update_rows"
+                              and isinstance(op.args[0], ops_mod.RowUpdate))
+                if loc is None and op.kind != "noop" and not structured:
                     # the shared probe is backend-aware too: on the kernel
                     # backend the session's one locate per key batch runs
                     # the digest_scan kernel (bit-identical to jnp locate)
@@ -721,11 +733,21 @@ class OpSession:
             op.ref.value = state
         elif op.kind == "update_rows":
             fn, update_scores = op.args
-            got = ops_mod.find_rows(state, cfg, keys, loc=loc,
-                                    backend=backend)
-            state = ops_mod.assign(state, cfg, keys, fn(got.rows),
-                                   update_scores=update_scores, loc=loc)
-            op.ref.value = got
+            if isinstance(fn, ops_mod.RowUpdate):
+                # structured gradient step: ops.update_rows owns the whole
+                # op (the fused update_scan kernel when backend resolves
+                # to 'kernel' and no locate is shared)
+                res = ops_mod.update_rows(
+                    state, cfg, keys, fn.grads, fn.opt,
+                    update_scores=update_scores, loc=loc, backend=backend)
+                state = res.state
+                op.ref.value = res
+            else:
+                got = ops_mod.find_rows(state, cfg, keys, loc=loc,
+                                        backend=backend)
+                state = ops_mod.assign(state, cfg, keys, fn(got.rows),
+                                       update_scores=update_scores, loc=loc)
+                op.ref.value = got
         else:  # pragma: no cover - guarded by _record
             raise AssertionError(op.kind)
         return state

@@ -18,11 +18,17 @@ structure* rather than a lock protocol (DESIGN.md §2):
   READERS   (find, find_ptr, contains, size, load_factor, export_batch*):
             consume the state, produce no new state.  XLA may fuse and
             reorder them freely — they commute with each other.
-  UPDATERS  (assign, assign_add, assign_scores): produce a new state but
-            touch only values/scores of *existing* keys — no slot
-            allocation, no digest writes, no eviction.  Two updater ops on
-            disjoint keys commute; the training step exploits this by
-            fusing gradient-assign with the forward lookup.
+  UPDATERS  (assign, assign_add, assign_scores, update_rows): produce a
+            new state but touch only values/scores of *existing* keys — no
+            slot allocation, no digest writes, no eviction.  Two updater
+            ops on disjoint keys commute; the training step exploits this
+            by fusing gradient-assign with the forward lookup.
+            `update_rows` is the gradient step proper: it applies a static
+            `SparseOptimizer` variant to each resident key's full row, and
+            on backend='kernel' runs the FUSED update_scan pass — probe +
+            in-kernel optimizer apply + masked write-back in ONE launch
+            (was locate + gather + host apply + scatter, ≥3 launches and
+            2× row traffic through HBM).
   INSERTERS (insert_or_assign, find_or_insert, insert_and_evict, erase,
             clear): structural — bucket membership changes.  These are the
             only ops that form serialization points in a step schedule.
@@ -52,7 +58,7 @@ with no kernel to win.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -364,6 +370,77 @@ def assign_scores(
         score_hi=state.score_hi.at[hb, loc.slot].set(scores.hi, mode="drop"),
         score_lo=state.score_lo.at[hb, loc.slot].set(scores.lo, mode="drop"),
     )
+
+
+class RowUpdate(NamedTuple):
+    """Structured updater payload for the gradient step (`update_rows`).
+
+    `OpSession.update_rows` accepts this in place of an opaque callable:
+    a static `SparseOptimizer` variant plus the per-key (deduped,
+    segment-summed) gradient rows.  Being structured — the planner can see
+    *what* the update is — lets the session route the whole op to the
+    fused update_scan kernel instead of forcing the generic
+    locate/gather/fn/scatter decomposition.
+    """
+
+    opt: Any            # SparseOptimizer (hashable/static — selects the variant)
+    grads: jax.Array    # [N, dim] segment-summed gradient rows
+
+
+class UpdateRowsResult(NamedTuple):
+    state: HKVState
+    found: jax.Array    # bool [N] — lane's key was resident and its row trained
+
+
+@roles.updater
+def update_rows(
+    state: HKVState,
+    cfg: HKVConfig,
+    keys: U64,
+    grads: jax.Array,
+    opt,
+    *,
+    update_scores: bool = False,
+    loc: Optional[find_mod.Locate] = None,
+    backend: str = "auto",
+) -> UpdateRowsResult:
+    """Updater. The gradient step: apply the sparse optimizer `opt` (a
+    static `SparseOptimizer` variant) to each *existing* key's full row
+    [embedding | aux slot state] in place.  Misses are no-ops — cache
+    semantics: un-admitted keys never train.
+
+    PRECONDITION: keys unique within the batch, `grads` pre-summed per key
+    (`HKVEmbedding.apply_grads` dedupes + segment-sums before calling).
+
+    backend='kernel' (or 'auto' on TPU) with no shared `loc` and no score
+    touch runs the FUSED update_scan pass: probe + full-key confirm +
+    in-kernel optimizer apply + masked row write-back in ONE kernel launch
+    (was locate + gather_rows + host `opt.apply` + scatter_rows — ≥3
+    launches and 2× row traffic).  With a session-shared `loc` or
+    `update_scores=True`, the value stages run composed against that
+    locate.  Bit-identical either way (pinned in
+    tests/test_update_kernel.py).
+
+    Consumer code: prefer `session.update_rows` with a `RowUpdate` payload.
+    """
+    if (loc is None and not update_scores
+            and _resolve_backend(backend) == "kernel"):
+        from repro.kernels import ops as kernel_ops  # deferred: kernels import core
+
+        r = kernel_ops.update_rows_kernel(state, cfg, keys, grads, opt)
+        return UpdateRowsResult(state=r.state, found=r.found)
+    if loc is None:
+        loc = find_mod.locate(state, cfg, keys)
+        rows = find_mod.gather_values(state, loc, None, cfg.value_tier)
+    elif _resolve_backend(backend) == "kernel":
+        rows = _gather_shared(state, cfg, loc, None)
+    else:
+        rows = find_mod.gather_values(state, loc, None, cfg.value_tier)
+    new_rows = opt.apply(rows, grads, cfg.dim).astype(state.values.dtype)
+    new_rows = jnp.where(loc.found[:, None], new_rows, rows)
+    state = assign(state, cfg, keys, new_rows, update_scores=update_scores,
+                   loc=loc)
+    return UpdateRowsResult(state=state, found=loc.found)
 
 
 # =============================================================================

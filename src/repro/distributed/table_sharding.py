@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import ops as ops_mod
 from repro.core import u64
 from repro.core.api import HKVTable, dedupe_keys, normalize_keys
 from repro.core.merge import EvictionStream
@@ -177,15 +178,24 @@ class ShardedHKVEmbedding:
         recv_g = jax.lax.all_to_all(gbuf.reshape(n_shards, cap, -1), axis, 0, 0,
                                     tiled=True).reshape(n_shards * cap, -1)
         rk = U64(recv_hi.reshape(-1), recv_lo.reshape(-1))
-        # owner-side dedupe across sources: same key from several data shards
+        # owner-side dedupe across sources: same key from several data shards.
+        # Compacted form (group g's key at slot g) so the segment sums align
+        # with the uniques directly — no batch-sized g_sum[d.gid] re-broadcast
         n = rk.hi.shape[0]
         d = dedupe_keys(rk)
-        g_sum = jax.ops.segment_sum(recv_g[d.idx_sorted], d.gid, num_segments=n)[d.gid]
-        # fused read-modify-write: optimizer gather + assign share one locate
+        uniq = U64(
+            jnp.full((n,), u64.EMPTY_HI, jnp.uint32)
+            .at[d.gid].set(rk.hi[d.idx_sorted]),
+            jnp.full((n,), u64.EMPTY_LO, jnp.uint32)
+            .at[d.gid].set(rk.lo[d.idx_sorted]),
+        )
+        g_sum = jax.ops.segment_sum(recv_g[d.idx_sorted], d.gid,
+                                    num_segments=n, indices_are_sorted=True)
+        # structured gradient step: ONE table op, and on the kernel backend
+        # ONE fused update_scan launch per shard body
         t = local.wrap(state)
         s = t.session()
-        s.update_rows(d.unique,
-                      lambda rows: local.optimizer.apply(rows, g_sum, local.dim))
+        s.update_rows(uniq, ops_mod.RowUpdate(local.optimizer, g_sum))
         return s.commit().state
 
     def _upsert_body(self, n_shards, cap, state, khi, klo, values):

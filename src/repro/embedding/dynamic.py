@@ -9,9 +9,10 @@ Training path (one step):
      ingestion, paper Fig. 2).
   2. The model consumes the gathered rows; jax.grad gives d(loss)/d(rows).
   3. apply_grads — UPDATER role: per-unique-token gradient sums feed a
-     sparse optimizer whose slot state lives in aux value columns, and the
-     refreshed rows write back through a fused read-modify-write session op
-     (one shared locate for gather + assign; §3.5 adaptation).
+     sparse optimizer whose slot state lives in aux value columns, handed
+     to the table as a structured `ops.RowUpdate` session op — on the
+     kernel backend the whole step is ONE fused update_scan launch (probe
+     + in-kernel optimizer apply + masked write-back; §3.5 adaptation).
 
 Serving path: `find` only — READER role; unseen tokens fall back to the
 same deterministic hash-derived init the training path would insert, so
@@ -30,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import ops as ops_mod
 from repro.core import u64
 from repro.core.api import HKVTable, dedupe_keys
 from repro.core.table import HKVConfig
@@ -151,20 +153,33 @@ class HKVEmbedding:
     def apply_grads(
         self, table: HKVTable, tokens: jax.Array, grads: jax.Array
     ) -> HKVTable:
-        """UPDATER: sum grads per unique token, run the sparse optimizer on
-        the gathered rows, write back — one session op, one shared locate
-        (the unfused gather + assign sequence would probe twice)."""
+        """UPDATER: sum grads per unique token, hand the table the
+        structured gradient step (`ops.RowUpdate`) — so the whole update is
+        dedupe (XLA) + ONE table op, and on backend='kernel' ONE fused
+        update_scan launch (probe + optimizer apply + write-back).
+
+        Dedupe is COMPACTED: group g's representative key lands at slot g,
+        so the unique keys occupy a prefix (EMPTY-padded beyond) and the
+        segment sums are already aligned with them — the old form
+        re-broadcast the sums to every sorted slot (`g_sum[d.gid]`, a
+        second batch-sized [N, dim] buffer) to line up with the
+        sorted-space `d.unique`."""
         keys = self.keys_of(tokens)
         g = grads.reshape(-1, self.dim)
         n = g.shape[0]
         d = dedupe_keys(keys)
-        g_sum = jax.ops.segment_sum(g[d.idx_sorted], d.gid, num_segments=n)
-        g_rep = g_sum[d.gid]  # at each group's first slot: the group total
+        uniq = U64(
+            jnp.full((n,), u64.EMPTY_HI, jnp.uint32)
+            .at[d.gid].set(keys.hi[d.idx_sorted]),
+            jnp.full((n,), u64.EMPTY_LO, jnp.uint32)
+            .at[d.gid].set(keys.lo[d.idx_sorted]),
+        )
+        g_sum = jax.ops.segment_sum(g[d.idx_sorted], d.gid, num_segments=n,
+                                    indices_are_sorted=True)
         s = table.session()
         # rejected-admission tokens simply have no row to update (cache
         # semantics: un-admitted embeddings do not train)
-        s.update_rows(d.unique,
-                      lambda rows: self.optimizer.apply(rows, g_rep, self.dim))
+        s.update_rows(uniq, ops_mod.RowUpdate(self.optimizer, g_sum))
         return s.commit()
 
     def ingest(self, table: HKVTable, tokens: jax.Array) -> HKVTable:

@@ -19,6 +19,23 @@ import jax
 import jax.numpy as jnp
 
 
+def _rounded(p: jax.Array) -> jax.Array:
+    """Pin ``p`` (a float product) to its own IEEE rounding.
+
+    FMA contraction folds ``a*b + c`` into one rounding, and whether the
+    compiler contracts depends on the fusion context around the expression
+    — the identical formula can produce last-ULP-different results in two
+    programs (the fused update kernel vs the batched jnp reference).
+    ``llvm.fmuladd`` formation requires the multiply to have a SINGLE use,
+    so giving the product a second, value-preserving use (``p - p`` cannot
+    be folded to zero without fast-math: NaN/inf operands) forces the
+    product to round separately in every context.  ``lax
+    .optimization_barrier`` does NOT work for this — XLA:CPU strips it
+    before LLVM sees the loop.  Cost: two extra vector ops per site.
+    """
+    return p + (p - p)
+
+
 @dataclasses.dataclass(frozen=True)
 class SparseOptimizer:
     name: str = "rowwise_adagrad"
@@ -34,21 +51,31 @@ class SparseOptimizer:
 
         Returns updated rows (embedding + refreshed aux columns) — written
         back through the updater role (`assign`), never structurally.
+
+        Every multiply feeding an add/sub is pinned to one IEEE rounding
+        via ``_rounded``: XLA/LLVM otherwise contract mul+add into an FMA
+        *depending on the surrounding fusion context*, so the same row
+        would round differently inside the fused update kernel ([1, V]
+        slices) than in the batched jnp reference — and the repo's
+        acceptance bar for kernels is BIT-identity, not allclose.
         """
         emb, aux = rows[:, :dim], rows[:, dim:]
         g = grads.astype(emb.dtype)
+        rnd = _rounded
         if self.name == "sgd":
-            return emb - self.lr * g
+            return emb - rnd(self.lr * g)
         if self.name == "sgdm":
-            m = self.momentum * aux + g
-            return jnp.concatenate([emb - self.lr * m, m], axis=1)
+            m = rnd(self.momentum * aux) + g
+            return jnp.concatenate([emb - rnd(self.lr * m), m], axis=1)
         if self.name == "rowwise_adagrad":
-            acc = aux[:, 0] + jnp.mean(g * g, axis=1)
+            acc = aux[:, 0] + rnd(jnp.mean(g * g, axis=1))
             step = self.lr / (jnp.sqrt(acc) + self.eps)
-            return jnp.concatenate([emb - step[:, None] * g, acc[:, None]], axis=1)
-        if self.name == "adagrad":
-            acc = aux + g * g
             return jnp.concatenate(
-                [emb - self.lr * g / (jnp.sqrt(acc) + self.eps), acc], axis=1
+                [emb - rnd(step[:, None] * g), acc[:, None]], axis=1)
+        if self.name == "adagrad":
+            acc = aux + rnd(g * g)
+            return jnp.concatenate(
+                [emb - rnd(self.lr * g / (jnp.sqrt(acc) + self.eps)), acc],
+                axis=1,
             )
         raise ValueError(self.name)

@@ -16,9 +16,13 @@ Role taxonomy coverage (paper §3.5; see also `repro.core.ops`):
              bucket_stats_kernel (score_scan).  jnp-only: size/load_factor/
              export_* (trivial reductions/slices — nothing for a kernel to
              win).
-  UPDATERS   kernel-backed here: assign_kernel (assign / assign_add via
-             scatter_rows).  jnp-only: assign_scores (scalar metadata
-             scatter, no value traffic).
+  UPDATERS   kernel-backed here: update_rows_kernel (the FUSED update_scan
+             pass: probe + full-key confirm + in-kernel sparse-optimizer
+             apply + masked row write-back in ONE launch — DESIGN.md
+             §Updaters; update_composed_kernel is the pre-fusion
+             locate + gather + host apply + scatter baseline), assign_kernel
+             (assign / assign_add via scatter_rows).  jnp-only:
+             assign_scores (scalar metadata scatter, no value traffic).
   INSERTERS  kernel-backed here: upsert_kernel / insert_and_evict_kernel /
              find_or_insert_kernel — the fused upsert_scan path (probe +
              claim row passes plus gather/scatter value stages) sharing
@@ -37,6 +41,7 @@ import jax.numpy as jnp
 
 from repro.core import find as find_mod
 from repro.core import merge as merge_mod
+from repro.core import table as table_mod
 from repro.core import u64
 from repro.core.table import HKVConfig, HKVState
 from repro.core.u64 import U64
@@ -47,6 +52,7 @@ from repro.kernels import ref as _ref
 from repro.kernels import scatter as _sc
 from repro.kernels import score_scan as _ss
 from repro.kernels import sweep_scan as _sw
+from repro.kernels import update_scan as _upd
 from repro.kernels import upsert_scan as _us
 
 
@@ -354,6 +360,116 @@ def assign_kernel(
         interpret=interpret,
     )
     return state._replace(values=new_values)
+
+
+class UpdateRows(NamedTuple):
+    """Result of the fused updater pass: new state + which lanes trained."""
+
+    state: HKVState
+    found: jax.Array   # bool [N] — lane's key was resident and its row trained
+
+
+def update_rows_kernel(
+    state: HKVState,
+    cfg: HKVConfig,
+    keys: U64,
+    grads: jax.Array,
+    opt,
+    *,
+    variant: str = "pipeline",
+    interpret: bool | None = None,
+) -> UpdateRows:
+    """The fused updater pass (update_scan.py): probe + full-key confirm +
+    in-kernel sparse-optimizer apply + masked row write-back in ONE kernel
+    launch — replacing the locate + gather_rows + host `opt.apply` +
+    scatter_rows composition and its 2x row traffic through HBM.
+
+    PRECONDITION: keys unique within the batch, `grads` pre-summed per key
+    (the embedding layer dedupes + segment-sums first).  Miss lanes and
+    EMPTY padding never write (cache semantics: un-admitted keys do not
+    train).  Bit-identical to `ref.update_scan_ref` and to the jnp
+    `core.ops.update_rows` reference (pinned in tests/test_update_kernel.py).
+
+    Host-tier value planes ('hmem') keep the §3.6 crossing contract: the
+    kernel locates, the rows cross through tier_gather / tier_scatter with
+    the optimizer applied on-device between the crossings.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    b, s = cfg.num_buckets, cfg.slots_per_bucket
+    if cfg.value_tier != "hbm":
+        loc = locate_kernel(state, cfg, keys, variant=variant,
+                            interpret=interpret)
+        rows = find_mod.gather_values(state, loc, None, cfg.value_tier)
+        new_rows = opt.apply(rows, grads, cfg.dim).astype(state.values.dtype)
+        new_rows = jnp.where(loc.found[:, None], new_rows, rows)
+        new_values = table_mod.tier_scatter(
+            cfg.value_tier, state.values,
+            jnp.where(loc.found, loc.row, b * s), new_rows)
+        return UpdateRows(state=state._replace(values=new_values),
+                          found=loc.found)
+
+    n = keys.hi.shape[0]
+    probe = find_mod.probe_keys(cfg, keys)
+    qd = probe.digest.astype(jnp.uint32)
+    if variant == "pipeline":
+        q_tile = min(128, n) if n % 128 else 128
+        npad = -(-n // q_tile) * q_tile
+        scan = functools.partial(_upd.update_scan_pipeline, q_tile=q_tile,
+                                 opt=opt, dim=cfg.dim,
+                                 use_digest=cfg.use_digest,
+                                 interpret=interpret)
+    elif variant == "tlp":
+        npad = n
+        scan = functools.partial(_upd.update_scan_tlp, opt=opt, dim=cfg.dim,
+                                 use_digest=cfg.use_digest,
+                                 interpret=interpret)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    b2 = probe.bucket2 if cfg.buckets_per_key == 2 else probe.bucket1
+    # the qvalid gate travels INTO the kernel: EMPTY padding lanes match
+    # empty slots, and unlike the read-only find pass an updater cannot
+    # re-mask after the fact — the gate must dominate the store
+    found, new_values = scan(
+        state.digests, state.key_hi, state.key_lo, state.values,
+        _pad_to(probe.bucket1, npad),
+        _pad_to(b2, npad),
+        _pad_to(qd, npad),
+        _pad_to(keys.hi, npad, u64.EMPTY_HI),
+        _pad_to(keys.lo, npad, u64.EMPTY_LO),
+        _pad_to(probe.valid.astype(jnp.int32), npad),
+        _pad_to(grads.astype(state.values.dtype), npad),
+    )
+    return UpdateRows(state=state._replace(values=new_values),
+                      found=found[:n].astype(bool))
+
+
+def update_composed_kernel(
+    state: HKVState,
+    cfg: HKVConfig,
+    keys: U64,
+    grads: jax.Array,
+    opt,
+    *,
+    variant: str = "pipeline",
+    interpret: bool | None = None,
+) -> UpdateRows:
+    """The pre-fusion updater composition — locate (one digest_scan launch
+    per candidate bucket) + gather_rows + host-jnp `opt.apply` + scatter_rows
+    — kept as the launch-count/parity baseline the fused pass is measured
+    against (tests/test_update_kernel.py, benchmarks/exp9)."""
+    if interpret is None:
+        interpret = default_interpret()
+    loc = locate_kernel(state, cfg, keys, variant=variant, interpret=interpret)
+    rows_idx = jnp.clip(loc.row, 0, state.values.shape[0] - 1)
+    rows = _ga.gather_rows(state.values, rows_idx,
+                           loc.found.astype(jnp.int32), interpret=interpret)
+    new_rows = opt.apply(rows, grads, cfg.dim).astype(state.values.dtype)
+    new_values = _sc.scatter_rows(
+        state.values, rows_idx, new_rows, loc.found.astype(jnp.int32),
+        add=False, interpret=interpret)
+    return UpdateRows(state=state._replace(values=new_values),
+                      found=loc.found)
 
 
 def sweep_mask_kernel(state: HKVState, cfg: HKVConfig, pred,

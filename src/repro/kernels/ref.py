@@ -87,6 +87,64 @@ def find_scan_ref(
     return found.astype(jnp.int32), sel, slot, shi, slo, vals
 
 
+def update_scan_ref(
+    tdigests: jax.Array,   # uint8  [B, S]
+    tkey_hi: jax.Array,    # uint32 [B, S]
+    tkey_lo: jax.Array,    # uint32 [B, S]
+    tvalues: jax.Array,    # [B*S, V] value plane (position addressing §3.6)
+    bucket1: jax.Array,    # int32  [N] primary candidate bucket
+    bucket2: jax.Array,    # int32  [N] secondary candidate (== bucket1 single)
+    qdigest: jax.Array,    # uint32 [N]
+    qkey_hi: jax.Array,    # uint32 [N]
+    qkey_lo: jax.Array,    # uint32 [N]
+    qvalid: jax.Array,     # int32  [N] — 0 gates the write (EMPTY padding)
+    grads: jax.Array,      # [N, dim] segment-summed gradient rows
+    opt,                   # SparseOptimizer (static variant)
+    dim: int,
+    use_digest: bool = True,
+):
+    """Ground truth for the fused updater kernel (update_scan.py).
+
+    Per query, over both candidate bucket rows: digest pre-filter + full-key
+    confirm (the shared `core.find.match_lanes` formula), dual-bucket merge
+    (hit1 wins), then a masked row read-modify-write: the hit row becomes
+    ``opt.apply(row, grads[i], dim)``; miss or qvalid==0 lanes leave the
+    plane untouched (cache semantics — un-admitted keys never train).
+
+    The qvalid gate exists because an EMPTY-padded query key *matches*
+    empty slots (both are the all-ones sentinel in the key planes): a
+    read-only kernel can re-mask afterwards, a writing kernel cannot.
+
+    Returns (found i32 [N], new_values [B*S, V]).
+    """
+    s = tdigests.shape[1]
+
+    def match(buckets):
+        if use_digest:
+            m = find.match_lanes(tkey_hi[buckets], tkey_lo[buckets],
+                                 qkey_hi[:, None], qkey_lo[:, None],
+                                 tdigests[buckets].astype(jnp.uint32),
+                                 qdigest[:, None])
+        else:
+            m = find.match_lanes(tkey_hi[buckets], tkey_lo[buckets],
+                                 qkey_hi[:, None], qkey_lo[:, None])
+        return jnp.any(m, axis=1), jnp.argmax(m, axis=1).astype(jnp.int32)
+
+    hit1, slot1 = match(bucket1)
+    hit2, slot2 = match(bucket2)
+    found = (hit1 | hit2) & (qvalid != 0)
+    sel = jnp.where(hit1, 0, jnp.where(hit2, 1, 0)).astype(jnp.int32)
+    slot = jnp.where(hit1, slot1, jnp.where(hit2, slot2, 0))
+    bucket = jnp.where(sel == 1, bucket2, bucket1)
+    row = bucket * s + slot
+    raw = tvalues[row]
+    new_rows = opt.apply(raw, grads, dim).astype(tvalues.dtype)
+    r = jnp.where(found, row, tvalues.shape[0])  # OOB -> dropped
+    new_values = tvalues.at[r].set(
+        jnp.where(found[:, None], new_rows, raw), mode="drop")
+    return found.astype(jnp.int32), new_values
+
+
 def gather_rows_ref(
     values: jax.Array,  # [R, D]
     rows: jax.Array,    # int32 [N]

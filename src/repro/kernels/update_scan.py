@@ -1,0 +1,350 @@
+"""Pallas TPU kernels for the FUSED updater path (paper §3.5, updater role).
+
+PR 1 kernel-completed the inserter (``upsert_scan``) and PR 6 the reader
+(``find_scan``); the updater — the gradient path that dominates continuous
+training — still ran as a three-launch composition: ``find_ptr`` locate,
+``gather_rows`` value fetch, host-jnp optimizer math, ``scatter_rows``
+write-back.  Every embedding row crossed HBM *twice* with a full kernel
+boundary in between.  This module folds all four stages into ONE
+scalar-prefetched pass per (deduped) query:
+
+  1. probe + confirm      both candidate bucket rows stream in as
+                          scalar-prefetch-indexed blocks and are matched
+                          with the shared ``core.find.match_lanes`` oracle
+                          (digest conjoined iff ``use_digest``) — the same
+                          formula as ``find_scan`` and the jnp reference,
+                          so kernel and oracle cannot fork;
+  2. dual-bucket merge    hit1-wins-over-hit2, ``core.find.locate``'s merge;
+  3. row RMW              an in-kernel HBM->VMEM DMA of the full value row
+                          ``[dim + aux]`` at ``bucket * S + slot``, the
+                          sparse optimizer applied *in-kernel* (static
+                          variant per ``SparseOptimizer.name`` — the exact
+                          ``SparseOptimizer.apply`` math on a [1, V] row
+                          slice, so per-row equals batch application
+                          bitwise), then a VMEM->HBM DMA back.
+
+Mask domination (cache semantics — rejected embeddings do not train):
+
+  * miss lanes resolve to row ``b1*S + 0`` (a valid address), read it, and
+    write the freshly-read bytes back unchanged — the optimizer result is
+    ``jnp.where``-selected away before the write DMA, so an un-admitted
+    key never perturbs a resident row;
+  * a ``qvalid`` lane gates the match IN-KERNEL: an EMPTY-padded query key
+    would otherwise *match* an empty slot (empty slots store the all-ones
+    sentinel in their key planes).  The find path can re-mask after the
+    kernel because it only reads; an updater writes, so the gate must
+    dominate the store inside the kernel.
+
+Write-after-read ordering: each query's value RMW is fully serialized
+(read.wait before apply, write.wait before the next query's read) because
+miss lanes alias row ``b1*S+0`` and may collide with a hit lane's row.
+The pipeline variant keeps its two-slot metadata double buffer — query
+q+1's bucket rows stream while query q's row is read-modified-written —
+so the latency hiding lives where the traffic is (metadata), and the
+serialized value row is the correctness anchor.
+
+PRECONDITION (enforced by callers, asserted in tests): query keys are
+unique within a batch (the embedding layer dedupes and segment-sums
+gradients first) — the same one-warp-per-key invariant as the paper's
+update kernels.
+
+Both variants compute exactly ``ref.update_scan_ref`` and are swept
+against it in tests/test_update_kernel.py (interpret mode executes the
+kernel bodies on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.find import match_lanes
+from repro.kernels import compat
+from repro.kernels.find_scan import _merge_hits
+
+LANES = 128  # TPU vreg minor dimension == slots per bucket
+
+
+# =============================================================================
+# TLP variant: one query per grid step, auto-pipelined metadata row blocks
+# =============================================================================
+
+
+def _tlp_kernel(opt, dim, use_digest, slots,
+                b1_ref, b2_ref, qd_ref, qh_ref, ql_ref, qv_ref,
+                d1_ref, h1_ref, l1_ref, d2_ref, h2_ref, l2_ref,
+                g_ref, v_hbm, found_ref, out_hbm, vbuf, rsem, wsem):
+    del v_hbm  # aliased with out_hbm — all row traffic goes through out_hbm
+    i = pl.program_id(0)
+    qd = qd_ref[i]
+    qh = qh_ref[i]
+    ql = ql_ref[i]
+
+    def row_match(d_ref, h_ref, l_ref):
+        if use_digest:
+            m = match_lanes(h_ref[0, :], l_ref[0, :], qh, ql,
+                            d_ref[0, :].astype(jnp.uint32), qd)
+        else:
+            m = match_lanes(h_ref[0, :], l_ref[0, :], qh, ql)
+        return jnp.any(m), jnp.argmax(m).astype(jnp.int32)
+
+    hit1, slot1 = row_match(d1_ref, h1_ref, l1_ref)
+    hit2, slot2 = row_match(d2_ref, h2_ref, l2_ref)
+    found, sel, slot = _merge_hits(slots, (hit1, slot1, hit2, slot2))
+    # qvalid gate must dominate the store: an EMPTY-padded query matches
+    # empty slots (both are the all-ones key sentinel) and would otherwise
+    # train a vacant row.
+    found = found & (qv_ref[i] != 0)
+    found_ref[0, 0] = found.astype(jnp.int32)
+
+    b = jnp.where(sel == 0, b1_ref[i], b2_ref[i])
+    row = b * slots + slot
+
+    # serialized row RMW: read.wait -> apply -> masked write -> write.wait
+    rd = pltpu.make_async_copy(out_hbm.at[pl.ds(row, 1), :], vbuf, rsem)
+    rd.start()
+    rd.wait()
+    raw = vbuf[0, :]
+    new = opt.apply(raw[None, :], g_ref[0, :][None, :], dim)[0]
+    vbuf[0, :] = jnp.where(found, new.astype(raw.dtype), raw)
+    wr = pltpu.make_async_copy(vbuf, out_hbm.at[pl.ds(row, 1), :], wsem)
+    wr.start()
+    wr.wait()
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("opt", "dim", "use_digest", "interpret"))
+def update_scan_tlp(tdigests, tkey_hi, tkey_lo, tvalues,
+                    bucket1, bucket2, qdigest, qkey_hi, qkey_lo, qvalid,
+                    grads, *, opt, dim: int,
+                    use_digest: bool = True, interpret: bool = True):
+    """Fused update, TLP tier: one query per grid step.
+
+    tvalues is updated IN PLACE (input/output aliased).  Returns
+    (found i32 [N], new_values [B*S, V]):
+      found       1 iff the key matched a live slot AND qvalid[i] != 0
+      new_values  the value plane with each hit row replaced by
+                  ``opt.apply(row, grads[i], dim)``; miss/invalid lanes
+                  leave their (aliased) rows bit-identical.
+
+    ``opt`` is a static ``SparseOptimizer`` (frozen dataclass — hashable);
+    its variant is compiled into the kernel body, not branched at runtime.
+    Single-bucket mode: pass bucket2 == bucket1.
+    """
+    n = bucket1.shape[0]
+    s = tdigests.shape[1]
+    row = lambda i, b1, b2: (b1[i], 0)
+    row2 = lambda i, b1, b2: (b2[i], 0)
+    v = tvalues.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec(memory_space=compat.SMEM),  # qdigest
+            pl.BlockSpec(memory_space=compat.SMEM),  # qkey_hi
+            pl.BlockSpec(memory_space=compat.SMEM),  # qkey_lo
+            pl.BlockSpec(memory_space=compat.SMEM),  # qvalid
+            pl.BlockSpec((1, s), row),    # bucket1 digest row
+            pl.BlockSpec((1, s), row),    # bucket1 key_hi row
+            pl.BlockSpec((1, s), row),    # bucket1 key_lo row
+            pl.BlockSpec((1, s), row2),   # bucket2 digest row
+            pl.BlockSpec((1, s), row2),   # bucket2 key_hi row
+            pl.BlockSpec((1, s), row2),   # bucket2 key_lo row
+            pl.BlockSpec((1, grads.shape[1]), lambda i, b1, b2: (i, 0)),
+            pl.BlockSpec(memory_space=compat.HBM),  # value plane (aliased)
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, b1, b2: (i, 0)),
+            pl.BlockSpec(memory_space=compat.HBM),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, v), tvalues.dtype),
+            pltpu.SemaphoreType.DMA,   # read semaphore
+            pltpu.SemaphoreType.DMA,   # write semaphore
+        ],
+    )
+    found, vals = pl.pallas_call(
+        functools.partial(_tlp_kernel, opt, dim, use_digest, s),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+            jax.ShapeDtypeStruct(tvalues.shape, tvalues.dtype),
+        ],
+        input_output_aliases={13: 1},  # value plane updated in place
+        interpret=interpret,
+        name="hkv_update_scan_tlp",
+    )(
+        bucket1, bucket2, qdigest, qkey_hi, qkey_lo, qvalid,
+        tdigests, tkey_hi, tkey_lo,
+        tdigests, tkey_hi, tkey_lo,
+        grads, tvalues,
+    )
+    return found[:, 0], vals
+
+
+# =============================================================================
+# Pipeline variant: Q queries per grid step, manual two-slot metadata buffer
+# =============================================================================
+
+
+def _pipeline_kernel(opt, dim, use_digest, q_tile, slots,
+                     b1_ref, b2_ref, qd_ref, qh_ref, ql_ref, qv_ref,
+                     td, th, tl, g_ref, v_hbm,
+                     found_ref, out_hbm,
+                     d1b, h1b, l1b, d2b, h2b, l2b,
+                     vbuf, sems, rsem, wsem):
+    del v_hbm  # aliased with out_hbm — all row traffic goes through out_hbm
+    i = pl.program_id(0)
+
+    def meta_copies(q, slot_):
+        base = i * q_tile + q
+        b1 = b1_ref[base]
+        b2 = b2_ref[base]
+        planes = (td, th, tl)
+        cps = []
+        for j, (p, bf) in enumerate(zip(planes, (d1b, h1b, l1b))):
+            cps.append(pltpu.make_async_copy(
+                p.at[pl.ds(b1, 1), :], bf.at[slot_], sems.at[slot_, j]))
+        for j, (p, bf) in enumerate(zip(planes, (d2b, h2b, l2b))):
+            cps.append(pltpu.make_async_copy(
+                p.at[pl.ds(b2, 1), :], bf.at[slot_], sems.at[slot_, 3 + j]))
+        return cps
+
+    def issue(q, slot_):
+        for c in meta_copies(q, slot_):
+            c.start()
+
+    def wait(q, slot_):
+        for c in meta_copies(q, slot_):
+            c.wait()
+
+    # prologue: prefetch query 0's two candidate bucket rows
+    issue(0, 0)
+
+    q_iota = jax.lax.iota(jnp.int32, q_tile)
+
+    def body(q, founds):
+        cur = jax.lax.rem(q, 2)
+        nxt = jax.lax.rem(q + 1, 2)
+
+        # overlap: issue q+1's metadata DMAs while q is compared + RMW'd
+        @pl.when(q + 1 < q_tile)
+        def _():
+            issue(q + 1, nxt)
+
+        wait(q, cur)
+        qd = qd_ref[0, q]
+        qh = qh_ref[0, q]
+        ql = ql_ref[0, q]
+
+        def row_match(db, hb, lb):
+            if use_digest:
+                m = match_lanes(hb[cur, 0, :], lb[cur, 0, :], qh, ql,
+                                db[cur, 0, :].astype(jnp.uint32), qd)
+            else:
+                m = match_lanes(hb[cur, 0, :], lb[cur, 0, :], qh, ql)
+            return jnp.any(m), jnp.argmax(m).astype(jnp.int32)
+
+        hit1, slot1 = row_match(d1b, h1b, l1b)
+        hit2, slot2 = row_match(d2b, h2b, l2b)
+        found, sel, slot = _merge_hits(slots, (hit1, slot1, hit2, slot2))
+        found = found & (qv_ref[0, q] != 0)  # gate dominates the store
+
+        base = i * q_tile + q
+        b = jnp.where(sel == 0, b1_ref[base], b2_ref[base])
+        row = b * slots + slot
+
+        # serialized row RMW — miss lanes alias row b1*S+0, so query q's
+        # write must retire before query q+1's read (no value-row overlap)
+        rd = pltpu.make_async_copy(out_hbm.at[pl.ds(row, 1), :], vbuf, rsem)
+        rd.start()
+        rd.wait()
+        raw = vbuf[0, :]
+        new = opt.apply(raw[None, :], g_ref[pl.ds(q, 1), :], dim)[0]
+        vbuf[0, :] = jnp.where(found, new.astype(raw.dtype), raw)
+        wr = pltpu.make_async_copy(vbuf, out_hbm.at[pl.ds(row, 1), :], wsem)
+        wr.start()
+        wr.wait()
+
+        return jnp.where(q_iota == q, found.astype(jnp.int32), founds)
+
+    founds = jax.lax.fori_loop(
+        0, q_tile, body, jnp.zeros((q_tile,), jnp.int32))
+    found_ref[0, :] = founds
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "q_tile", "opt", "dim", "use_digest", "interpret"))
+def update_scan_pipeline(tdigests, tkey_hi, tkey_lo, tvalues,
+                         bucket1, bucket2, qdigest, qkey_hi, qkey_lo, qvalid,
+                         grads, *, q_tile: int = 128, opt, dim: int,
+                         use_digest: bool = True, interpret: bool = True):
+    """Fused update, Pipeline tier: Q queries per grid step, manual DMA.
+
+    Same outputs and in-place aliasing as `update_scan_tlp`.  Queries are
+    padded to a multiple of q_tile by the wrapper (padding lanes carry
+    qvalid == 0, so they never write).  Scratch working set: 2 x 6
+    metadata rows + one value row — the value plane itself stays in HBM.
+    """
+    n = bucket1.shape[0]
+    assert n % q_tile == 0, "wrapper must pad to a q_tile multiple"
+    s = tdigests.shape[1]
+    v = tvalues.shape[1]
+    g = grads.shape[1]
+    tiles = n // q_tile
+    smem_block = lambda: pl.BlockSpec((1, q_tile), lambda i, b1, b2: (i, 0),
+                                      memory_space=compat.SMEM)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(tiles,),
+        in_specs=[
+            smem_block(),   # qdigest
+            smem_block(),   # qkey_hi
+            smem_block(),   # qkey_lo
+            smem_block(),   # qvalid
+            pl.BlockSpec(memory_space=compat.HBM),  # digest plane
+            pl.BlockSpec(memory_space=compat.HBM),  # key_hi plane
+            pl.BlockSpec(memory_space=compat.HBM),  # key_lo plane
+            pl.BlockSpec((q_tile, g), lambda i, b1, b2: (i, 0)),
+            pl.BlockSpec(memory_space=compat.HBM),  # value plane (aliased)
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q_tile), lambda i, b1, b2: (i, 0)),
+            pl.BlockSpec(memory_space=compat.HBM),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, 1, s), jnp.uint8),    # bucket1 digests
+            pltpu.VMEM((2, 1, s), jnp.uint32),   # bucket1 key_hi
+            pltpu.VMEM((2, 1, s), jnp.uint32),   # bucket1 key_lo
+            pltpu.VMEM((2, 1, s), jnp.uint8),    # bucket2 digests
+            pltpu.VMEM((2, 1, s), jnp.uint32),   # bucket2 key_hi
+            pltpu.VMEM((2, 1, s), jnp.uint32),   # bucket2 key_lo
+            pltpu.VMEM((1, v), tvalues.dtype),   # value row (serialized RMW)
+            pltpu.SemaphoreType.DMA((2, 6)),
+            pltpu.SemaphoreType.DMA,   # value read semaphore
+            pltpu.SemaphoreType.DMA,   # value write semaphore
+        ],
+    )
+    found, vals = pl.pallas_call(
+        functools.partial(_pipeline_kernel, opt, dim, use_digest, q_tile, s),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((tiles, q_tile), jnp.int32),
+            jax.ShapeDtypeStruct(tvalues.shape, tvalues.dtype),
+        ],
+        input_output_aliases={10: 1},  # value plane updated in place
+        interpret=interpret,
+        name="hkv_update_scan_pipeline",
+    )(
+        bucket1, bucket2,
+        qdigest.reshape(tiles, q_tile),
+        qkey_hi.reshape(tiles, q_tile),
+        qkey_lo.reshape(tiles, q_tile),
+        qvalid.reshape(tiles, q_tile),
+        tdigests, tkey_hi, tkey_lo, grads, tvalues,
+    )
+    return found.reshape(n), vals

@@ -1,9 +1,10 @@
 """Stateful differential fuzz: random op sequences vs the sequential oracle.
 
 Random mixed op sequences — insert_or_assign / find / find_or_insert /
-assign / accum_or_assign / erase / clear, with duplicate keys, EMPTY
-padding, wide (high-plane) keys, and mixed caller key FORMS (numpy
-uint64, signed int64 with negative-as-padding, python int lists) — replay
+assign / update_rows (the structured gradient step) / accum_or_assign /
+erase / clear, with duplicate keys, EMPTY padding, wide (high-plane)
+keys, and mixed caller key FORMS (numpy uint64, signed int64 with
+negative-as-padding, python int lists) — replay
 against `core.oracle.OracleTable` on BOTH inserter backends (pure jnp and
 the fused Pallas path in interpret mode).
 
@@ -33,6 +34,7 @@ from repro.core.api import HKVTable, normalize_keys
 from repro.core.oracle import OracleTable
 from repro.core.predicates import SweepPredicate
 from repro.core.u64 import U64
+from repro.embedding.sparse_opt import SparseOptimizer
 
 try:
     from hypothesis import settings
@@ -98,6 +100,21 @@ def _session_read(t, kh, kl, v):
 @jax.jit
 def _assign(t, kh, kl, v):
     return t.assign(U64(kh, kl), v)
+
+
+# lr=0.5 keeps the sgd step EXACT in float32 over the integer value/grad
+# pools, so the oracle mirror is equality, not allclose
+_OPT = SparseOptimizer("sgd", lr=0.5)
+
+
+@jax.jit
+def _session_update(t, kh, kl, g):
+    """The apply_grads-shaped op: a structured RowUpdate committed through
+    a session — the fused ONE-launch gradient step on backend='kernel'."""
+    s = t.session()
+    r = s.update_rows(U64(kh, kl), ops.RowUpdate(_OPT, g))
+    t2 = s.commit()
+    return t2, r.get().found
 
 
 @jax.jit
@@ -223,6 +240,21 @@ class DifferentialHarness:
         self.table = _assign(self.table, *self._planes(caller), jnp.asarray(v))
         self.oracle.assign(canonical, v)
 
+    def update_rows(self, canonical, caller, g):
+        """Structured gradient step.  PRECONDITION (the apply_grads
+        contract): live lanes are unique — callers dedupe+segment-sum, so
+        the fuzz drivers dedupe too.  Misses train nothing."""
+        self.table, found = _session_update(
+            self.table, *self._planes(caller), jnp.asarray(g))
+        want_found, want_vals = self.oracle.find(canonical)
+        assert np.array_equal(np.asarray(found), want_found), \
+            "update_rows found mask"
+        # sgd mirror: rows[k] -= lr*g on hit lanes; oracle.assign is
+        # existing-only so miss/padding lanes are naturally ignored
+        self.oracle.assign(canonical,
+                           want_vals.astype(np.float32) - 0.5 * np.asarray(
+                               g, np.float32))
+
     def accum(self, canonical, caller, v):
         self.table, status = _accum(self.table, *self._planes(caller),
                                     jnp.asarray(v))
@@ -315,7 +347,8 @@ def to_caller_form(ids, form: str):
 
 
 OPS = ("upsert", "find_or_insert", "find", "find_rows", "session_read",
-       "assign", "accum", "erase", "erase_if", "evict_if", "clear")
+       "assign", "update_rows", "accum", "erase", "erase_if", "evict_if",
+       "clear")
 FORMS = ("uint64", "signed", "list")
 PRED_KINDS = ("always", "score_lt", "score_ge", "epoch_lt", "key_range")
 
@@ -350,6 +383,8 @@ def test_seeded_differential_replay(backend):
         ids = [int(x) for x in rng.integers(-2, 61, size=n)]
         if rng.random() < 0.2:   # wide keys: the high plane
             ids[0] = int(rng.integers(2**32, 2**32 + 5))
+        if op == "update_rows":     # the dedupe precondition (see harness)
+            ids = list(dict.fromkeys(ids))
         canonical, caller = to_caller_form(
             ids, FORMS[rng.integers(0, len(FORMS))])
         v = (rng.integers(0, 6, size=(LANES, 1)).astype(np.float32)
@@ -366,6 +401,8 @@ def test_seeded_differential_replay(backend):
             h.session_read(canonical, caller, v)
         elif op == "assign":
             h.assign(canonical, caller, v)
+        elif op == "update_rows":
+            h.update_rows(canonical, caller, v)
         elif op == "accum":
             h.accum(canonical, caller, v)
         elif op == "erase":
@@ -405,6 +442,13 @@ if HAVE_HYPOTHESIS:
         return to_caller_form(ids, draw(st.sampled_from(FORMS)))
 
     @st.composite
+    def unique_key_batch(draw):
+        """Deduped lanes — the update_rows/apply_grads precondition."""
+        ids = list(dict.fromkeys(draw(st.lists(
+            st.one_of(_SMALL, _WIDE, _PAD), min_size=1, max_size=LANES))))
+        return to_caller_form(ids, draw(st.sampled_from(FORMS)))
+
+    @st.composite
     def value_batch(draw):
         vals = draw(st.lists(st.integers(0, 5),
                              min_size=LANES, max_size=LANES))
@@ -441,6 +485,10 @@ if HAVE_HYPOTHESIS:
         @rule(kb=key_batch(), v=value_batch())
         def assign(self, kb, v):
             self.h.assign(kb[0], kb[1], v)
+
+        @rule(kb=unique_key_batch(), v=value_batch())
+        def update_rows(self, kb, v):
+            self.h.update_rows(kb[0], kb[1], v)
 
         @rule(kb=key_batch(), v=value_batch())
         def accum(self, kb, v):

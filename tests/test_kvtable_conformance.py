@@ -27,7 +27,9 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import HKVTable, KVTable, TieredHKVTable, U64
+from repro.core import ops as core_ops
 from repro.baselines import DictKVTable
+from repro.embedding.sparse_opt import SparseOptimizer
 
 BATCH = 64     # one jit cache entry per op across every test
 DIM = 4
@@ -53,18 +55,23 @@ CAPS = {
     # has_find_rows: full-row reads + session-fused read mixes (find /
     #             find_rows / contains over one shared locate) — the HKV
     #             handle surface the PR-6 fused find kernel serves
+    # has_row_update: session-structured `ops.RowUpdate` gradient steps
+    #             (the apply_grads surface; ONE fused update_scan launch
+    #             on backend='kernel') — flat HKV tables only: tiered
+    #             routes updates through the hot tier, dictionaries have
+    #             no updater surface
     "hkv_jnp": dict(has_export=True, caller_init=True, has_scores=True,
-                    has_find_rows=True),
+                    has_find_rows=True, has_row_update=True),
     "hkv_kernel": dict(has_export=True, caller_init=True, has_scores=True,
-                       has_find_rows=True),
+                       has_find_rows=True, has_row_update=True),
     "dict_oa": dict(has_export=True, caller_init=True, has_scores=False,
-                    has_find_rows=False),
+                    has_find_rows=False, has_row_update=False),
     "dict_p2c": dict(has_export=True, caller_init=True, has_scores=False,
-                     has_find_rows=False),
+                     has_find_rows=False, has_row_update=False),
     "tiered": dict(has_export=True, caller_init=True, has_scores=True,
-                   has_find_rows=False),
+                   has_find_rows=False, has_row_update=False),
     "sharded": dict(has_export=True, caller_init=False, has_scores=True,
-                    has_find_rows=False),
+                    has_find_rows=False, has_row_update=False),
 }
 
 _MESH = None
@@ -195,6 +202,33 @@ def _j_clear(t):
 @jax.jit
 def _j_size(t):
     return t.size()
+
+
+# lr=0.5 x integer grads: the sgd step is exact in float32, so the
+# updater contract below asserts equality, not allclose
+_OPT = SparseOptimizer("sgd", lr=0.5)
+
+
+@jax.jit
+def _j_row_update(t, kh, kl, g):
+    """The apply_grads shape: pre-update find + structured RowUpdate +
+    contains in ONE session (the find shares its locate with the update)."""
+    k = U64(kh, kl)
+    s = t.session()
+    f = s.find(k)
+    r = s.update_rows(k, core_ops.RowUpdate(_OPT, g))
+    c = s.contains(k)
+    t2 = s.commit()
+    return t2, f.get().values[:, :DIM], r.get().found, c.get()
+
+
+@jax.jit
+def _j_row_update_solo(t, kh, kl, g):
+    """Structured RowUpdate alone — the ONE-launch fused route."""
+    s = t.session()
+    r = s.update_rows(U64(kh, kl), core_ops.RowUpdate(_OPT, g))
+    t2 = s.commit()
+    return t2, r.get().found
 
 
 SWEEP_BUDGET = 32    # static per jit entry; >= every test's match count
@@ -413,6 +447,39 @@ class TestUpdaterContract:
         _, f999 = read(t2, pad_keys([999983]))
         assert not f999[0]
         assert size(t2) == len(KEYS)
+
+    def test_row_update_trains_residents_only(self, table):
+        """The apply_grads-shaped structured gradient step: residents move
+        by exactly -lr*g, misses/padding train nothing and are NOT
+        admitted, and both the fused solo route and the mixed session
+        (find sharing its locate with the update) agree."""
+        if not CAPS_CURRENT["has_row_update"]:
+            pytest.skip("no structured row-update surface on this impl")
+        k = pad_keys(KEYS)
+        t, _ = upsert(table, k, rows_for(k))
+        before = np.asarray(rows_for(k))
+        q = pad_keys(np.concatenate([KEYS[:8],
+                                     np.array([999983], np.uint64)]))
+        g = jnp.full((BATCH, DIM), 2.0, jnp.float32)
+        t2, pre_vals, found, cont = _j_row_update(t, *_planes(q), g)
+        assert found[:8].all() and not found[8:].any()
+        # the session's find ran BEFORE the update and sees pre-step rows
+        np.testing.assert_array_equal(pre_vals[:8], before[:8])
+        # contains after the update: same residency (updater != inserter)
+        np.testing.assert_array_equal(np.asarray(cont), found)
+        vals, vfound = read(t2, k)
+        np.testing.assert_array_equal(vals[:8], before[:8] - 1.0)  # .5*2
+        np.testing.assert_array_equal(vals[8: len(KEYS)],
+                                      before[8: len(KEYS)])
+        _, f999 = read(t2, pad_keys([999983]))
+        assert not f999[0]
+        assert size(t2) == len(KEYS)
+        # the solo structured route (fused ONE-launch path) lands the
+        # identical state
+        t3, found3 = _j_row_update_solo(t, *_planes(q), g)
+        np.testing.assert_array_equal(np.asarray(found3), found)
+        vals3, _ = read(t3, k)
+        np.testing.assert_array_equal(vals3, vals)
 
 
 class TestStructuralContract:

@@ -1,6 +1,6 @@
 """Checker 3: role/commutativity lint — the §3.5 triple-group taxonomy.
 
-Three layers are cross-checked:
+Four layers are cross-checked:
 
   unannotated-op     every public op entry point in ``repro.core.ops``
                      (module-level function whose first parameter is
@@ -19,6 +19,15 @@ Three layers are cross-checked:
                      singleton serialization group; and a reader AFTER an
                      inserter must issue a fresh locate (cached positions
                      died at the fence).
+  engine-purity      the serving engine's admission path must respect the
+                     taxonomy end-to-end: waves under
+                     ``miss_policy='readonly', promote=False`` are PURE
+                     READERS in BOTH admission modes (wave-granular and
+                     continuous splice) — no successor handle may be
+                     offered back to the source, and the engine's static
+                     ``_mutates`` flag must say so; conversely an
+                     ``admit`` engine that does not flag itself mutating
+                     would silently drop its admissions.
 """
 
 from __future__ import annotations
@@ -26,6 +35,7 @@ from __future__ import annotations
 import inspect
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.analysis.findings import Finding
 from repro.core import api as api_mod
@@ -181,6 +191,72 @@ def check_plan_taxonomy() -> list[Finding]:
     return out
 
 
+_ENGINE_PATH = "src/repro/serving/embedding_engine.py"
+
+
+def check_engine_purity() -> list[Finding]:
+    """Dynamic probe of the serving engine's admission path: a tiny
+    tiered table with cold-resident keys (so a forbidden promotion WOULD
+    be observable) is served under every admission mode.  Readonly
+    non-promoting waves must leave the source untouched; admit waves
+    must declare themselves mutating."""
+    from repro.core.tiered import TieredHKVTable
+    from repro.serving.embedding_engine import (EmbeddingRequest,
+                                                OnlineEmbeddingEngine)
+
+    out = []
+    keys = np.arange(1, 13, dtype=np.uint64)
+
+    def cold_resident():
+        t = TieredHKVTable.create(hot_capacity=64, cold_capacity=128, dim=4,
+                                  slots_per_bucket=8)
+        r = t.cold.insert_or_assign(
+            keys, jnp.ones((len(keys), 4), jnp.float32),
+            custom_scores=np.arange(1, len(keys) + 1, dtype=np.uint64))
+        return t.with_tiers(t.hot, r.table)
+
+    for admission in ("wave", "continuous"):
+        t = cold_resident()
+        eng = OnlineEmbeddingEngine(t, wave_size=8, miss_policy="readonly",
+                                    promote=False, admission=admission)
+        eng.submit(EmbeddingRequest(rid=0, keys=keys))   # spans two waves
+        eng.run_until_drained()
+        if eng._mutates:
+            out.append(Finding(
+                CHECKER, "engine-impure-reader",
+                f"OnlineEmbeddingEngine[{admission}]",
+                "readonly+promote=False waves are flagged mutating — the "
+                "pure-reader contract (no offer per wave) is broken",
+                path=_ENGINE_PATH))
+        if eng.source.table is not t:
+            out.append(Finding(
+                CHECKER, "engine-impure-reader",
+                f"OnlineEmbeddingEngine[{admission}]",
+                "readonly+promote=False admission installed a successor "
+                "handle — the wave was not a pure reader",
+                path=_ENGINE_PATH))
+        if bool(np.asarray(eng.source.table.hot.contains(keys)).any()):
+            out.append(Finding(
+                CHECKER, "engine-impure-reader",
+                f"OnlineEmbeddingEngine[{admission}]",
+                "readonly+promote=False waves promoted cold hits into the "
+                "hot tier (structural motion on a pure-reader path)",
+                path=_ENGINE_PATH))
+    # census completeness: the admit policy must flag itself mutating or
+    # its admissions would never be offered back to the source
+    eng = OnlineEmbeddingEngine(cold_resident(), wave_size=8,
+                                miss_policy="admit")
+    eng.submit(EmbeddingRequest(rid=0, keys=keys[:8]))
+    eng.run_until_drained()
+    if not eng._mutates:
+        out.append(Finding(
+            CHECKER, "engine-unflagged-mutator", "OnlineEmbeddingEngine",
+            "admit-policy waves are not flagged mutating — admission "
+            "successors would be dropped instead of offered",
+            path=_ENGINE_PATH))
+    return out
+
+
 def check_roles() -> list[Finding]:
     return (check_annotations() + check_session_roles()
-            + check_plan_taxonomy())
+            + check_plan_taxonomy() + check_engine_purity())

@@ -204,6 +204,29 @@ class KVTable(Protocol):
     def stats(self) -> Any: ...
 
 
+def table_signature(table: Any) -> tuple:
+    """Static identity of a KVTable handle, for caching compiled closures.
+
+    Long-lived consumers that bake a handle's STATIC properties into a
+    jitted closure (the serving engine's wave fn, the maintenance
+    scheduler's step fn) key the cache on this tuple and rebuild when a
+    published successor changes shape: table family, backend, dim /
+    total_value_dim (aux optimizer columns), and score policy.  Covers
+    every handle family — tiered handles recurse per tier, handles
+    without an `HKVConfig` (dict baselines, sharded) fall back to type +
+    backend + dim."""
+    hot, cold = getattr(table, "hot", None), getattr(table, "cold", None)
+    if hot is not None and cold is not None:
+        return (type(table).__name__, table_signature(hot),
+                table_signature(cold))
+    cfg = getattr(table, "cfg", None)
+    if cfg is not None and hasattr(cfg, "total_value_dim"):
+        return (type(table).__name__, getattr(table, "backend", None),
+                cfg.dim, cfg.total_value_dim, cfg.score_policy)
+    return (type(table).__name__, getattr(table, "backend", None),
+            int(getattr(table, "dim", 0)))
+
+
 # =============================================================================
 # HKVTable — the handle
 # =============================================================================

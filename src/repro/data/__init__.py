@@ -1,2 +1,11 @@
-from repro.data.synthetic import zipf_ranks, zipf_keys, TokenStream  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    ARRIVAL_KINDS,
+    TokenStream,
+    arrival_sizes,
+    poisson_burst_sizes,
+    sinusoidal_sizes,
+    steady_sizes,
+    zipf_keys,
+    zipf_ranks,
+)
 from repro.data.pipeline import HostPrefetcher, DataCursor  # noqa: F401

@@ -8,6 +8,14 @@ serving zipfian embedding lookups from a `TieredHKVTable` behind a
   PYTHONPATH=src python -m repro.launch.serve --smoke \
       --waves 16 --wave-size 256 --miss-policy admit
 
+`--arrival` picks the request-size process (steady | burst | diurnal)
+and `--admission continuous` turns on continuous-batch admission
+(per-lane splice + double-buffered staging); the summary line then
+reports the per-request queue-wait / service / total p50-p99 split:
+
+  PYTHONPATH=src python -m repro.launch.serve --smoke \
+      --arrival burst --admission continuous
+
 `--mode lm` keeps the LM prefill+decode loop over a small model:
 
   PYTHONPATH=src python -m repro.launch.serve --mode lm --arch qwen2-0.5b \
@@ -46,6 +54,20 @@ def main():
                     help="waves between maintenance steps")
     ap.add_argument("--update-read-ratio", type=float, default=0.25,
                     help="trainer steps per served wave")
+    ap.add_argument("--arrival", choices=("steady", "burst", "diurnal"),
+                    default="steady",
+                    help="request-size process per tick (data.synthetic "
+                         "arrival generators); steady submits exactly one "
+                         "wave-sized request per tick")
+    ap.add_argument("--admission", choices=("wave", "continuous"),
+                    default="wave",
+                    help="wave-granular admission or continuous batching "
+                         "(splice into partially-drained staging, "
+                         "double-buffered dispatch)")
+    ap.add_argument("--host-budget-ms", type=float, default=None,
+                    help="between-wave host slack budget (ms) that "
+                         "staging and maintenance compete for; default "
+                         "cadence-only maintenance")
     # lm mode
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--batch", type=int, default=4)
@@ -62,7 +84,7 @@ def _embedding_main(args):
     import numpy as np
 
     from repro.core import TieredHKVTable
-    from repro.data import zipf_keys
+    from repro.data import arrival_sizes, zipf_keys
     from repro.serving import (EmbeddingRequest, OnlineEmbeddingEngine,
                                OnlineTrainer, TablePublisher)
 
@@ -86,19 +108,28 @@ def _embedding_main(args):
             sweep_budget=args.sweep_budget))
     eng = OnlineEmbeddingEngine(
         pub, wave_size=args.wave_size, miss_policy=args.miss_policy,
-        promote=not args.no_promote, scheduler=sched)
+        promote=not args.no_promote, scheduler=sched,
+        admission=args.admission,
+        host_budget_s=(args.host_budget_ms / 1e3
+                       if args.host_budget_ms is not None else None))
 
     serve_rng = np.random.default_rng(args.seed)
     train_rng = np.random.default_rng(args.seed + 1)
     key_space = 2 * args.cold_capacity
     grads = jnp.ones((args.wave_size, args.dim), jnp.float32)
 
+    # per-tick arrivals: 'steady' keeps the legacy one-wave-per-tick
+    # load; 'burst'/'diurnal' modulate the offered key count, so the
+    # queue genuinely builds and drains (the SLO split below reports it)
+    sizes = arrival_sizes(args.arrival, np.random.default_rng(args.seed + 2),
+                          args.waves, args.wave_size,
+                          **({"base_load": 1.0}
+                             if args.arrival == "steady" else {}))
     due = 0.0
-    for i in range(args.waves):
+    for i, sz in enumerate(sizes):
         eng.submit(EmbeddingRequest(
             rid=i,
-            keys=zipf_keys(serve_rng, args.wave_size, args.zipf_alpha,
-                           key_space)))
+            keys=zipf_keys(serve_rng, int(sz), args.zipf_alpha, key_space)))
         r = eng.step()
         due += args.update_read_ratio
         while due >= 1.0:
@@ -106,14 +137,23 @@ def _embedding_main(args):
                 zipf_keys(train_rng, args.wave_size, args.zipf_alpha,
                           key_space), grads)
             due -= 1.0
-        if (i + 1) % max(args.waves // 4, 1) == 0:
+        if r is not None and (i + 1) % max(args.waves // 4, 1) == 0:
             print(f"[serve] wave {i+1:4d}: hit={r.hit_rate*100:5.1f}% "
                   f"kv/s={r.kv_per_s/1e3:.1f}k v{r.table_version}")
+    eng.run_until_drained()
     m = eng.metrics()
     print(f"[serve] {m.waves} waves, {m.keys} keys: hit={m.hit_rate*100:.1f}% "
           f"hot={m.hot_rate*100:.1f}% kv/s={m.kv_per_s/1e3:.1f}k "
           f"p50={m.p50_latency_s*1e3:.1f}ms p99={m.p99_latency_s*1e3:.1f}ms "
           f"published={pub.published} offered={pub.offered}")
+    print(f"[serve] SLO ({args.admission} admission, {args.arrival} "
+          f"arrivals): {m.requests} requests, "
+          f"queue-wait p50={m.p50_queue_wait_s*1e3:.1f}ms "
+          f"p99={m.p99_queue_wait_s*1e3:.1f}ms | "
+          f"service p50={m.p50_service_s*1e3:.1f}ms "
+          f"p99={m.p99_service_s*1e3:.1f}ms | "
+          f"total p50={m.p50_total_s*1e3:.1f}ms "
+          f"p99={m.p99_total_s*1e3:.1f}ms")
     if sched is not None:
         t = sched.totals
         print(f"[serve] maintenance: {t.runs} steps, demoted={t.demoted} "

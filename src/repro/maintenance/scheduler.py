@@ -40,6 +40,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.api import table_signature
 from repro.core.predicates import SweepPredicate
 from repro.core.tiered import TieredHKVTable
 from repro.maintenance.rebalance import rebalance as _rebalance
@@ -95,6 +96,10 @@ class MaintenanceTotals(NamedTuple):
     dropped: int
     skipped_offers: int  # steps whose successor lost the offer CAS
     time_s: float
+    deferred: int = 0    # steps skipped because the between-wave slack
+                         # budget was already spent on staging (the
+                         # engine's host_budget_s contract — one budget
+                         # for staging + maintenance)
 
 
 class MaintenanceScheduler:
@@ -116,6 +121,9 @@ class MaintenanceScheduler:
         self.reports: list[MaintenanceReport] = []
         self._waves = 0
         self._step_fn = None
+        self._step_sig = None     # table signature the step fn was built for
+        self._cost_ewma = None    # smoothed per-step host cost (slack gating)
+        self.deferred = 0         # steps skipped for lack of slack budget
 
     # -- step construction -----------------------------------------------------
 
@@ -166,27 +174,49 @@ class MaintenanceScheduler:
 
     def run(self, table: Any, *, version: int = 0
             ) -> tuple[Any, MaintenanceReport]:
-        """One maintenance step against a table the caller owns."""
-        if self._step_fn is None:
+        """One maintenance step against a table the caller owns.  The
+        compiled step is keyed on the table's static signature: a source
+        that starts publishing a structurally different successor
+        (flat→tiered retier, backend flip, dim change) gets a freshly
+        built step instead of one with stale baked-in flags."""
+        sig = table_signature(table)
+        if self._step_fn is None or sig != self._step_sig:
             self._step_fn = self._build(table)
+            self._step_sig = sig
         t0 = time.perf_counter()
         t2, expired, demoted, dropped = self._step_fn(table)
         expired, demoted, dropped = jax.block_until_ready(
             (expired, demoted, dropped))
+        elapsed = time.perf_counter() - t0
+        self._cost_ewma = (elapsed if self._cost_ewma is None
+                           else 0.7 * self._cost_ewma + 0.3 * elapsed)
         rep = MaintenanceReport(
             expired=int(expired), demoted=int(demoted), dropped=int(dropped),
-            elapsed_s=time.perf_counter() - t0, table_version=version,
+            elapsed_s=elapsed, table_version=version,
             applied=True)
         self.reports.append(rep)
         return t2, rep
 
-    def on_wave(self, source: Any) -> Optional[MaintenanceReport]:
+    def on_wave(self, source: Any,
+                slack_s: Optional[float] = None) -> Optional[MaintenanceReport]:
         """Wave-interleave hook: called by the engine after each wave.
         Runs a step every `every_waves` waves against the source's
         current snapshot and offers the successor back (CAS — a racing
-        trainer publish wins, same as admission offers)."""
+        trainer publish wins, same as admission offers).
+
+        `slack_s` is the remaining between-wave host budget after the
+        engine's own staging work (pack/unpack) spent its share — one
+        budget, competed for.  When the step's estimated cost (EWMA of
+        past runs) exceeds the remaining slack, the step DEFERS to the
+        next interval (`totals.deferred`); the first-ever step always
+        runs so the estimate exists.  `slack_s=None` keeps the
+        cadence-only contract."""
         self._waves += 1
         if self._waves % self.policy.every_waves:
+            return None
+        if (slack_s is not None and self._cost_ewma is not None
+                and self._cost_ewma > slack_s):
+            self.deferred += 1
             return None
         version, table = source.snapshot()
         table2, rep = self.run(table, version=version)
@@ -207,4 +237,5 @@ class MaintenanceScheduler:
             dropped=sum(r.dropped for r in self.reports),
             skipped_offers=sum(1 for r in self.reports if not r.applied),
             time_s=sum(r.elapsed_s for r in self.reports),
+            deferred=self.deferred,
         )

@@ -11,10 +11,35 @@ read path, built over ANY `KVTable` handle:
   * `ShardedHKVTable` — the same contract over a device mesh;
   * `DictKVTable` — the dictionary-semantic baselines, for A/B runs.
 
-Wave-batched admission: requests (batches of feature ids) queue and are
-packed into fixed-size WAVES of `wave_size` key lanes (EMPTY-padded), so
-every wave hits one jit cache entry; a request larger than a wave spans
-several.  One wave = one device launch = one host-timed latency sample.
+Admission comes in two modes (`admission=`):
+
+  'wave'        wave-granular (the original contract): requests queue
+                whole; each `step()` packs up to `wave_size` key lanes
+                (EMPTY-padded), launches, BLOCKS, and unpacks — one
+                serial cycle per wave.
+  'continuous'  continuous batching: ADMISSION IS DECOUPLED FROM THE
+                SERVING CYCLE.  A persistent staging buffer with per-lane
+                occupancy tracking splices arriving requests into the
+                partially-drained staging wave at `submit()` time, and
+                every time the buffer FILLS, the wave dispatches RIGHT
+                THERE — asynchronously, without waiting for the engine's
+                next `step()` — so a burst's waves queue back-to-back on
+                the device instead of one per serving cycle.  The
+                host↔device path is double-buffered through a deque of
+                in-flight waves: key-packs and result-unpacks happen in
+                the async-dispatch gap before `block_until_ready`
+                (`poll()` reaps finished waves without blocking; `step()`
+                flushes the partial staging wave and reaps).  Handle
+                chaining is safe: each wave snapshots the (possibly not
+                yet ready) successor the previous wave offered at
+                dispatch; XLA orders the launches through the data
+                dependency.  Under shallow load the pipeline collapses —
+                a lone in-flight wave with nothing staged behind it is
+                block-retired in the same step, so light traffic pays
+                wave-granular latency and only bursts pipeline.
+
+In both modes every wave is one jit cache entry; a request larger than a
+wave spans several, zero-length requests complete without a launch.
 
 Miss policy (the §3.5 role the read path plays):
 
@@ -31,15 +56,31 @@ Miss policy (the §3.5 role the read path plays):
               half of continuous ingestion; at λ=1.0 admission evicts
               low-score entries in place.
 
-Tables are drawn from a `TableSource` (see `repro.serving.publisher`) at
-WAVE granularity: each wave reads the source once and — when the policy
-mutated the table (admission / promotion) — publishes the successor back.
-A snapshot-consistent trainer publishes whole handles; a wave therefore
-never observes a half-published table (the consistency model documented
-at DESIGN.md §Serving).
+Served rows are exactly `table.dim` wide under BOTH policies: tables
+carrying in-row optimizer state (`aux_value_dim > 0`,
+`core/table.py::total_value_dim`) never leak aux columns to clients.
 
-Metrics: per-wave hit rate, keys/s, and host-timer latency; `metrics()`
-aggregates totals plus p50/p99 wave latency.
+Tables are drawn from a `TableSource` (see `repro.serving.publisher`) at
+DISPATCH granularity: each wave reads the source once when it launches
+and — when the policy mutated the table (admission / promotion) —
+publishes the successor back immediately, so under overlapped staging
+the next dispatch chains on the offered (async) handle.  A
+snapshot-consistent trainer publishes whole handles; a wave therefore
+never observes a half-published table (DESIGN.md §Serving).  The cached
+wave closure is keyed on the published table's static signature
+(type / backend / dims / score policy): a trainer that publishes a
+structurally different successor (flat→tiered retier, backend flip, dim
+change) gets a freshly built closure instead of stale static flags.
+
+Metrics split queue-wait from service per REQUEST, on top of the
+per-wave numbers:
+
+  queue-wait   submit → dispatch of the first wave carrying the request;
+  service      that dispatch → results unpacked into the request;
+  total        submit → done (== queue-wait + service).
+
+`metrics()` aggregates per-wave hit rate / keys/s / p50-p99 wave latency
+plus the per-request p50/p99 of all three latency components.
 """
 
 from __future__ import annotations
@@ -54,11 +95,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import u64
+from repro.core.api import table_signature
 from repro.core.tiered import TieredHKVTable
 from repro.core.u64 import U64
 from repro.serving.publisher import StaticSource, TableSource
 
 MISS_POLICIES = ("readonly", "admit")
+ADMISSION_MODES = ("wave", "continuous")
 
 
 # =============================================================================
@@ -75,12 +118,37 @@ class EmbeddingRequest:
     values: Optional[np.ndarray] = None  # float32 [n, dim] — filled on completion
     found: Optional[np.ndarray] = None   # bool [n]
     done: bool = False
+    # SLO accounting (host perf_counter stamps; see module doc)
+    t_submit: Optional[float] = None     # stamped by engine.submit()
+    t_admit: Optional[float] = None      # dispatch of the first carrying wave
+    t_done: Optional[float] = None       # last carrying wave unpacked
+
+    @property
+    def queue_wait_s(self) -> float:
+        """Time spent queued before the first carrying wave dispatched."""
+        if self.t_submit is None or self.t_admit is None:
+            return 0.0
+        return self.t_admit - self.t_submit
+
+    @property
+    def service_s(self) -> float:
+        """First dispatch → results unpacked (device + in-flight overlap)."""
+        if self.t_admit is None or self.t_done is None:
+            return 0.0
+        return self.t_done - self.t_admit
+
+    @property
+    def total_latency_s(self) -> float:
+        """submit → done == queue-wait + service."""
+        if self.t_submit is None or self.t_done is None:
+            return 0.0
+        return self.t_done - self.t_submit
 
 
 class WaveReport(NamedTuple):
     size: int           # live key lanes served (padding excluded)
     hits: int
-    latency_s: float    # host-timed wall clock of the wave launch
+    latency_s: float    # host wall clock: dispatch → results ready
     table_version: int  # publisher version the wave was served from
     hot_hits: int = 0   # lanes served from the HOT tier (tiered readonly
                         # waves; == hits elsewhere)
@@ -113,6 +181,25 @@ class EngineMetrics(NamedTuple):
     # 0 elsewhere) — the number exp7's scheduler-on/off comparison pins
     reactive_demotions: int = 0
     demotions_per_wave: float = 0.0
+    # per-REQUEST SLO split (completed requests; module doc):
+    requests: int = 0
+    p50_queue_wait_s: float = 0.0
+    p99_queue_wait_s: float = 0.0
+    p50_service_s: float = 0.0
+    p99_service_s: float = 0.0
+    p50_total_s: float = 0.0
+    p99_total_s: float = 0.0
+
+
+class _Inflight(NamedTuple):
+    """A dispatched, not-yet-retired wave (continuous mode holds one)."""
+
+    out: tuple          # (succ, vals, found, hot, dem) — async device values
+    segments: list      # (request, key offset, lane0, take)
+    used: int
+    lanes: np.ndarray
+    version: int
+    t_dispatch: float
 
 
 # =============================================================================
@@ -126,7 +213,8 @@ class OnlineEmbeddingEngine:
         table = TieredHKVTable.create(hot_capacity=8*128,
                                       cold_capacity=64*128, dim=16)
         eng = OnlineEmbeddingEngine(table, wave_size=512,
-                                    miss_policy="admit")
+                                    miss_policy="admit",
+                                    admission="continuous")
         eng.submit(EmbeddingRequest(rid=0, keys=ids))
         eng.run_until_drained()
         print(eng.metrics())
@@ -138,21 +226,35 @@ class OnlineEmbeddingEngine:
     except on SHARDED tables, whose admit path recomputes init rows
     owner-side from the key (caller rows are not routed); there the hook
     covers only the readonly fallback.
+
+    `host_budget_s` is the between-wave slack budget staging and
+    maintenance COMPETE for (ROADMAP): the host time this step spent
+    packing/unpacking is charged against it and only the remainder is
+    offered to the scheduler, which defers its step when its estimated
+    cost exceeds the remaining slack.  `None` (default) leaves the
+    scheduler cadence-only (the pre-continuous contract).
     """
 
     def __init__(self, table: Any, *, wave_size: int,
                  miss_policy: str = "readonly",
                  promote: Optional[bool] = None,
                  default_row: Optional[Callable[[U64], jax.Array]] = None,
-                 scheduler: Optional[Any] = None):
+                 scheduler: Optional[Any] = None,
+                 admission: str = "wave",
+                 host_budget_s: Optional[float] = None):
         if miss_policy not in MISS_POLICIES:
             raise ValueError(
                 f"miss_policy {miss_policy!r}; one of {MISS_POLICIES}")
+        if admission not in ADMISSION_MODES:
+            raise ValueError(
+                f"admission {admission!r}; one of {ADMISSION_MODES}")
         self.source: TableSource = (
             table if isinstance(table, TableSource) else StaticSource(table))
         self.wave_size = wave_size
         self.miss_policy = miss_policy
         self.promote = promote
+        self.admission = admission
+        self.host_budget_s = host_budget_s
         self._default_row = default_row
         # wave-interleaved maintenance (repro.maintenance.scheduler):
         # after each wave the scheduler gets the hand-off gap — it
@@ -161,7 +263,16 @@ class OnlineEmbeddingEngine:
         # time is the scheduler's own metric, never wave latency.
         self.scheduler = scheduler
         self._queue: deque = deque()      # (request, key offset)
-        self._wave_fn = None              # jitted per engine (one cache entry)
+        # staging buffer: the NEXT wave, with per-lane occupancy — a
+        # spanning request's remainder and fresh arrivals splice into its
+        # free lanes between steps (continuous mode packs it eagerly)
+        self._stage_lanes = np.full(wave_size, _EMPTY_KEY, np.uint64)
+        self._stage_segments: list = []
+        self._stage_used = 0
+        self._stage_age = 0               # steps a partial stage has waited
+        self._flights: deque = deque()    # dispatched, not yet retired
+        self._wave_fn = None              # jitted; keyed on table signature
+        self._wave_sig = None
         self._mutates = False             # resolved with the wave fn
         self.completed: list = []
         self.reports: list[WaveReport] = []
@@ -172,23 +283,52 @@ class OnlineEmbeddingEngine:
         req.values = None
         req.found = None
         req.done = False
+        if req.t_submit is None:
+            req.t_submit = time.perf_counter()
         self._queue.append((req, 0))
+        if self.admission == "continuous":
+            # splice into the partially-drained staging wave right away:
+            # free lanes don't wait for the next step's pack — and every
+            # wave the splice FILLS dispatches immediately (async), so a
+            # burst chains onto the device without waiting out the
+            # serving cycle
+            while True:
+                self._fill_staging()
+                if self._stage_used < self.wave_size:
+                    break
+                lanes, segments, used = self._take_staging()
+                flight = self._dispatch(lanes, segments, used)
+                if flight is not None:
+                    self._flights.append(flight)
 
-    def _admit_wave(self):
-        """Pack queued requests into one EMPTY-padded wave of `wave_size`
-        lanes.  Returns (keys uint64 [wave_size], segments) where segments
-        maps lane ranges back to (request, offset)."""
-        lanes = np.full(self.wave_size, _EMPTY_KEY, np.uint64)
-        segments = []
-        used = 0
-        while self._queue and used < self.wave_size:
+    @property
+    def idle(self) -> bool:
+        return (not self._queue and self._stage_used == 0
+                and not self._stage_segments and not self._flights)
+
+    def _fill_staging(self):
+        """Move queued keys into the staging buffer's free lanes (per-lane
+        occupancy: `_stage_used` is the first free lane)."""
+        while self._queue and self._stage_used < self.wave_size:
             req, off = self._queue.popleft()
-            take = min(len(req.keys) - off, self.wave_size - used)
-            lanes[used:used + take] = req.keys[off:off + take]
-            segments.append((req, off, used, take))
-            used += take
-            if off + take < len(req.keys):   # request spans into the next wave
+            take = min(len(req.keys) - off, self.wave_size - self._stage_used)
+            lane0 = self._stage_used
+            self._stage_lanes[lane0:lane0 + take] = req.keys[off:off + take]
+            self._stage_segments.append((req, off, lane0, take))
+            self._stage_used += take
+            if off + take < len(req.keys):   # spans into the next wave
                 self._queue.appendleft((req, off + take))
+                break
+
+    def _take_staging(self):
+        """Claim the staged wave and reset the buffer for the next one."""
+        self._fill_staging()
+        lanes, segments, used = (self._stage_lanes, self._stage_segments,
+                                 self._stage_used)
+        self._stage_lanes = np.full(self.wave_size, _EMPTY_KEY, np.uint64)
+        self._stage_segments = []
+        self._stage_used = 0
+        self._stage_age = 0
         return lanes, segments, used
 
     # -- the wave step ---------------------------------------------------------
@@ -224,10 +364,12 @@ class OnlineEmbeddingEngine:
                     # returned rows ARE the stored rows — `default_row`
                     # applies only to the readonly fallback here
                     r = table.find_or_insert(k)
-                    vals = r.values
                 else:
                     r = table.find_or_insert(k, init)
-                    vals = r.values
+                # clients get exactly dim columns: rows on aux-carrying
+                # tables (total_value_dim > dim) keep optimizer state
+                # server-side
+                vals = r.values[:, : table.dim]
                 # reactive demotion count: what THIS wave's admissions
                 # pushed hot->cold in-line (tiered handles report it)
                 dem = getattr(r, "demoted", zero)
@@ -249,27 +391,56 @@ class OnlineEmbeddingEngine:
             return wave   # shard_map ops jit internally; outer jit is per-mesh
         return jax.jit(wave)
 
-    def step(self) -> Optional[WaveReport]:
-        """Serve one wave; returns its report (None when the queue is idle)."""
-        if not self._queue:
-            return None
-        lanes, segments, used = self._admit_wave()
-        version, table = self.source.snapshot()   # ONE read: wave-consistent
-        if self._wave_fn is None:
+    def _wave_fn_for(self, table):
+        """The compiled wave closure for this table, rebuilt when the
+        published handle's static signature changed (type / backend /
+        dims / score policy) — a trainer may retier or reshape the table
+        mid-stream and the closure's baked-in flags must follow."""
+        sig = table_signature(table)
+        if self._wave_fn is None or sig != self._wave_sig:
             self._wave_fn = self._build_wave_fn(table)
+            self._wave_sig = sig
+        return self._wave_fn
+
+    def _dispatch(self, lanes, segments, used) -> Optional[_Inflight]:
+        """Launch one wave asynchronously (no block).  Zero-live waves
+        (only zero-length requests) complete immediately without a
+        launch."""
+        version, table = self.source.snapshot()  # ONE read: wave-consistent
+        if used == 0:
+            now = time.perf_counter()
+            for req, _off, _lane0, _take in segments:
+                req.values = np.zeros((0, table.dim), np.float32)
+                req.found = np.zeros(0, bool)
+                req.t_admit = req.t_admit or now
+                req.t_done = now
+                req.done = True
+                self.completed.append(req)
+            return None
+        fn = self._wave_fn_for(table)
         k = u64.from_uint64(lanes)
         t0 = time.perf_counter()
-        succ, vals, found, hot, dem = self._wave_fn(table, k.hi, k.lo)
+        out = fn(table, k.hi, k.lo)
+        if self._mutates:         # admission / promotion built a successor;
+            # offer the (possibly still computing) handle NOW so the next
+            # dispatch chains on it — XLA orders launches by data deps
+            self.source.offer(version, out[0])
+        for req, _off, _lane0, _take in segments:
+            if req.t_admit is None:
+                req.t_admit = t0
+        return _Inflight(out=out, segments=segments, used=used, lanes=lanes,
+                         version=version, t_dispatch=t0)
+
+    def _retire(self, flight: _Inflight) -> WaveReport:
+        """Block on a dispatched wave, unpack results into its requests."""
+        _succ, vals, found, hot, dem = flight.out
         vals, found, hot, dem = jax.block_until_ready((vals, found, hot, dem))
-        dt = time.perf_counter() - t0
-        if self._mutates:         # admission / promotion built a successor
-            self.source.offer(version, succ)
-        if self.scheduler is not None:   # between-waves maintenance slot
-            self.scheduler.on_wave(self.source)
+        dt = time.perf_counter() - flight.t_dispatch
         vals = np.asarray(vals)
         found = np.asarray(found)
         hot = np.asarray(hot)
-        for req, off, lane0, take in segments:
+        now = time.perf_counter()
+        for req, off, lane0, take in flight.segments:
             if req.values is None:
                 req.values = np.zeros((len(req.keys), vals.shape[1]),
                                       vals.dtype)
@@ -278,39 +449,141 @@ class OnlineEmbeddingEngine:
             req.found[off:off + take] = found[lane0:lane0 + take]
             if off + take == len(req.keys):
                 req.done = True
+                req.t_done = now
                 self.completed.append(req)
-        live = ~_is_empty_np(lanes[:used])
+        used = flight.used
+        live = ~_is_empty_np(flight.lanes[:used])
         report = WaveReport(size=int(live.sum()),
                             hits=int(found[:used][live].sum()),
-                            latency_s=dt, table_version=version,
+                            latency_s=dt, table_version=flight.version,
                             hot_hits=int(hot[:used][live].sum()),
                             demotions=int(dem))
         self.reports.append(report)
         return report
 
+    def _maintenance_slot(self, staging_s: float):
+        """The between-wave hand-off gap: staging already spent
+        `staging_s` of the host budget; maintenance competes for the
+        remainder (one budget — ROADMAP's slack contract)."""
+        if self.scheduler is None:
+            return
+        slack = None
+        if self.host_budget_s is not None:
+            slack = max(0.0, self.host_budget_s - staging_s)
+        try:
+            self.scheduler.on_wave(self.source, slack_s=slack)
+        except TypeError:   # older scheduler without the slack seam
+            self.scheduler.on_wave(self.source)
+
+    def step(self) -> Optional[WaveReport]:
+        """Serve one wave; returns its report.
+
+        'wave' mode: pack → dispatch → block → unpack, serially (None
+        when the queue is idle).  'continuous' mode: flush the partial
+        staging wave (waves the splice filled already dispatched at
+        submit), reap finished flights without blocking, and
+        block-retire the oldest wave when draining or when a lone
+        shallow-load wave is in flight (pipeline collapse).  The report
+        may cover an earlier wave than the one dispatched this step;
+        None when nothing retired (check `.idle` to drive draining, or
+        use `run_until_drained`)."""
+        if self.idle:
+            return None
+        t_host0 = time.perf_counter()
+        if self.admission == "wave":
+            lanes, segments, used = self._take_staging()
+            flight = self._dispatch(lanes, segments, used)
+            pack_s = time.perf_counter() - t_host0
+            report = self._retire(flight) if flight is not None else None
+            self._maintenance_slot(pack_s)
+            return report
+        # continuous: full waves already dispatched at submit.  The
+        # PARTIAL staging wave flushes when the pipeline is SHALLOW
+        # (<= 1 in flight: the device has spare capacity, so a padded
+        # wave costs no one anything) or once it has waited out two
+        # whole steps without filling (the straggler cap — a lone
+        # request must not wait out a deep drain).  While the pipeline
+        # is deep, staged keys keep accepting splices so backlog
+        # traffic rides densely packed waves: EMPTY-padded lanes cost
+        # full compute, and flushing every step at half fill would put
+        # the device at saturation and grow the chain without bound
+        flight = None
+        if ((self._queue or self._stage_used or self._stage_segments)
+                and (len(self._flights) <= 1 or self._stage_age >= 2)):
+            lanes, segments, used = self._take_staging()
+            flight = self._dispatch(lanes, segments, used)
+            if flight is not None:
+                self._flights.append(flight)
+        elif self._stage_used or self._stage_segments:
+            self._stage_age += 1
+        pack_s = time.perf_counter() - t_host0
+        # non-blocking reap of finished waves, in chain order
+        report = None
+        reaped = False
+        while self._flights and _flight_ready(self._flights[0]):
+            report = self._retire(self._flights.popleft())
+            reaped = True
+        if self._flights and flight is None and not reaped:
+            # nothing dispatched, nothing ready: block on the oldest so
+            # every step makes progress (the drain path)
+            report = self._retire(self._flights.popleft())
+        elif (flight is not None and len(self._flights) == 1
+                and not self._queue and self._stage_used == 0
+                and not self._stage_segments):
+            # pipeline collapse: a lone shallow-load wave with nothing
+            # staged behind it retires in the step it dispatched —
+            # wave-granular latency instead of waiting out a reap cycle
+            report = self._retire(self._flights.popleft())
+        unpack_s = time.perf_counter() - t_host0 - pack_s
+        self._maintenance_slot(pack_s + unpack_s)
+        return report
+
+    def poll(self) -> Optional[WaveReport]:
+        """Non-blocking reap: retire every in-flight wave whose results
+        are ready, without dispatching anything.  The event-loop seam for
+        continuous admission — callers waiting on arrivals poll between
+        submits so finished waves complete their requests at device pace
+        rather than at the serving-cycle cadence.  Returns the last
+        retired wave's report (None if nothing was ready)."""
+        report = None
+        while self._flights and _flight_ready(self._flights[0]):
+            report = self._retire(self._flights.popleft())
+        return report
+
     def run_until_drained(self, max_waves: int = 100_000) -> list:
         for _ in range(max_waves):
-            if self.step() is None:
+            self.step()
+            if self.idle:
                 break
         return self.completed
 
     # -- metrics ---------------------------------------------------------------
 
     def metrics(self, *, skip_warmup: bool = True) -> EngineMetrics:
-        """Aggregate wave reports.  Counts (waves/keys/hits and the rates)
-        cover EVERY wave; the timing aggregates (kv_per_s, p50/p99) skip
-        the first wave by default — it pays the jit compile and would
-        otherwise dominate the percentiles (`skip_warmup=False` keeps it;
-        per-wave numbers incl. the compile wave stay in `self.reports`)."""
-        if not self.reports:
+        """Aggregate wave reports + per-request SLO latencies.  Counts
+        (waves/keys/hits and the rates) cover EVERY wave; the timing
+        aggregates (kv_per_s, wave p50/p99) skip the first wave by
+        default — it pays the jit compile and would otherwise dominate
+        the percentiles (`skip_warmup=False` keeps it; per-wave numbers
+        incl. the compile wave stay in `self.reports`).  The per-request
+        queue-wait / service / total percentiles cover every COMPLETED
+        request (including warmup — queue-wait is a property of arrival
+        pressure, not of compilation)."""
+        if not self.reports and not self.completed:
             return EngineMetrics(0, 0, 0, 0.0, 0.0, 0.0, 0.0, 0.0)
         keys = sum(r.size for r in self.reports)
         hits = sum(r.hits for r in self.reports)
         demos = sum(r.demotions for r in self.reports)
         timed = (self.reports[1:] if skip_warmup and len(self.reports) > 1
                  else self.reports)
-        lat = np.array([r.latency_s for r in timed])
+        lat = (np.array([r.latency_s for r in timed]) if timed
+               else np.zeros(1))
         tkeys = sum(r.size for r in timed)
+        reqs = [r for r in self.completed if r.t_done is not None]
+        qw = np.array([r.queue_wait_s for r in reqs]) if reqs else np.zeros(1)
+        sv = np.array([r.service_s for r in reqs]) if reqs else np.zeros(1)
+        tot = (np.array([r.total_latency_s for r in reqs]) if reqs
+               else np.zeros(1))
         return EngineMetrics(
             waves=len(self.reports), keys=keys, hits=hits,
             hit_rate=hits / max(keys, 1),
@@ -320,6 +593,13 @@ class OnlineEmbeddingEngine:
             p99_latency_s=float(np.percentile(lat, 99)),
             reactive_demotions=demos,
             demotions_per_wave=demos / max(len(self.reports), 1),
+            requests=len(reqs),
+            p50_queue_wait_s=float(np.percentile(qw, 50)),
+            p99_queue_wait_s=float(np.percentile(qw, 99)),
+            p50_service_s=float(np.percentile(sv, 50)),
+            p99_service_s=float(np.percentile(sv, 99)),
+            p50_total_s=float(np.percentile(tot, 50)),
+            p99_total_s=float(np.percentile(tot, 99)),
         )
 
 
@@ -328,3 +608,14 @@ _EMPTY_KEY = u64.EMPTY_KEY
 
 def _is_empty_np(keys: np.ndarray) -> np.ndarray:
     return keys == _EMPTY_KEY
+
+
+def _flight_ready(flight: _Inflight) -> bool:
+    """True when a dispatched wave's device results are ready (its
+    retire would not block).  Conservative on backends without
+    `is_ready`: report not-ready and let the blocking paths retire."""
+    try:
+        return all(x.is_ready()
+                   for x in jax.tree_util.tree_leaves(flight.out[1:]))
+    except AttributeError:  # pragma: no cover - backend without is_ready
+        return False

@@ -16,7 +16,13 @@ Two publication paths:
                 `offer(version, table)` — a compare-and-swap that the
                 trainer's own publication beats (admission effects on the
                 read path are advisory; the trainer republishes promptly
-                and re-admission costs one miss).
+                and re-admission costs one miss).  Under the engine's
+                continuous admission the cadence is per DISPATCH: the
+                snapshot is read when a wave launches and the successor
+                is offered immediately — as a handle of still-computing
+                async arrays, which is safe because handles are pytrees
+                of device futures and the next wave's launch chains on
+                them through ordinary data dependencies.
   delta export  cross-process: `export_delta(table)` drains the table
                 through `export_batch` into a picklable numpy
                 `TableDelta`; `ingest_delta(table, delta)` replays it via
@@ -63,17 +69,29 @@ class TableSource(Protocol):
 
 
 class StaticSource:
-    """Single-writer source: the engine owns the table (no trainer).
-    Offers always apply — there is nobody to race with."""
+    """Engine-owned source (no trainer) with the SAME compare-and-swap
+    offer contract as `TablePublisher`: an offer only applies when the
+    offerer's snapshot version is still current, and the new version bumps
+    from the CURRENT snapshot — never from the caller's argument.  Even
+    without a trainer, two offer paths race here (the engine's wave
+    admissions and the maintenance scheduler's between-wave steps), and a
+    stale offer must lose rather than silently clobber a newer table or
+    reuse a version number."""
 
     def __init__(self, table: Any):
         self._snap = (0, table)
+        self.offered = 0             # offers accepted
+        self.rejected_offers = 0     # offers beaten by a newer successor
 
     def snapshot(self) -> tuple:
         return self._snap
 
     def offer(self, version: int, table: Any) -> bool:
-        self._snap = (version + 1, table)
+        if self._snap[0] != version:
+            self.rejected_offers += 1
+            return False
+        self._snap = (self._snap[0] + 1, table)
+        self.offered += 1
         return True
 
     @property

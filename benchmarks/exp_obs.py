@@ -1,0 +1,68 @@
+"""Obs experiment: the unified metrics registry as a bench artifact.
+
+Runs a small instrumented workload — fill an HKV table to a couple of
+load-factor points, then drive telemetry-on `find` + `insert_or_assign`
+batches through a `TelemetrySink` — and folds the resulting
+`MetricsRegistry` snapshot (accumulated `OpTelemetry` counters, derived
+rates, and end-state `TableStats`) into the standard Csv rows, so
+`benchmarks/run.py --json-out` lands the whole gauge set in the
+`BENCH_obs.json` trajectory artifact alongside the perf experiments.
+
+The row format reuses the `name,us_per_call,derived` contract with the
+gauge value in `derived` (`gauge=<value>`); us_per_call stays empty —
+these are counters, not timings.  The λ-flatness headline (probe count
+independent of load factor) is therefore checkable straight off the
+trajectory: compare `lf*.op.find.probes_per_query` rows across commits.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, fill_batches
+from repro.core import HKVTable, u64
+from repro.obs import MetricsRegistry, TelemetrySink
+
+CAPACITY = 64 * 128
+DIM = 16
+BATCH = 2048
+LAMBDAS = (0.5, 1.0)
+
+
+def _instrumented_point(target_lf: float, rng, *, smoke: bool):
+    """Fill to `target_lf`, then run telemetry-on find over the live keys."""
+    capacity = CAPACITY // 4 if smoke else CAPACITY
+    table = HKVTable.create(capacity=capacity, dim=DIM, backend="jnp")
+    sink = TelemetrySink()
+    n = int(target_lf * capacity)
+    keys = rng.integers(1, 2**50, size=n).astype(np.uint64)
+    zeros = jnp.zeros((BATCH, DIM), jnp.float32)
+    for kb in fill_batches(keys, BATCH):
+        k = u64.from_uint64(kb)
+        table = table.insert_or_assign(k, zeros, telemetry=sink).table
+    for kb in fill_batches(keys[: min(n, 4 * BATCH)], BATCH):
+        k = u64.from_uint64(kb)
+        table.find(k, telemetry=sink)
+    return table, sink
+
+
+def run(smoke: bool = False, csv: Csv | None = None):
+    csv = csv or Csv("Obs: metrics-registry snapshot "
+                     "(telemetry counters as trajectory gauges)")
+    rng = np.random.default_rng(7)
+    for lam in LAMBDAS:
+        table, sink = _instrumented_point(lam, rng, smoke=smoke)
+        reg = MetricsRegistry()
+        reg.observe_telemetry(sink)
+        reg.observe_table(table.stats())
+        find = sink.by_op["find"].rates()
+        csv.row(f"lf{lam:.2f}.op.find.probes_per_query", None,
+                f"gauge={find['probes_per_query']:.4f}")
+        csv.row(f"lf{lam:.2f}.op.find.digest_pass_rate", None,
+                f"gauge={find['digest_pass_rate']:.4f}")
+        csv.row(f"lf{lam:.2f}.op.find.hit_rate", None,
+                f"gauge={find['hit_rate']:.4f}")
+        for name, value in sorted(reg.snapshot().items()):
+            csv.row(f"lf{lam:.2f}.{name}", None, f"gauge={value:g}")
+    return csv

@@ -22,6 +22,24 @@ if [ "${1:-}" = "--analyze" ]; then
 fi
 if [ "${1:-}" = "--fast" ]; then
     shift
+    # Trace-export smoke: serve a few waves with the span tracer wired
+    # and validate the Chrome trace-event JSON schema (ph/ts/name on
+    # every event) — the observability stack's end-to-end gate.  The
+    # trace lands in runs/trace/ so CI can upload it as an artifact
+    # next to the bench-trajectory JSONs.
+    mkdir -p runs/trace
+    python -m repro.launch.serve --smoke --waves 4 --wave-size 64 \
+        --maintain --trace-out runs/trace/serve_trace.json \
+        --metrics-out runs/trace/serve_metrics.prom
+    python - <<'PY'
+import json
+doc = json.load(open("runs/trace/serve_trace.json"))
+evs = doc["traceEvents"]
+assert evs, "trace smoke produced no events"
+for ev in evs:
+    assert "ph" in ev and "ts" in ev and "name" in ev, f"bad event: {ev}"
+print(f"trace smoke OK: {len(evs)} events")
+PY
     # Coverage gate: floor is a RATCHET (raise it when coverage rises,
     # never lower it to make a PR pass).  Where pytest-cov is absent
     # (minimal containers) the gate degrades to plain pytest — CI always
@@ -31,7 +49,7 @@ if [ "${1:-}" = "--fast" ]; then
     if [ "$#" -eq 0 ] && python -c "import pytest_cov" >/dev/null 2>&1; then
         exec python -m pytest -x -q -m "not slow" \
             --cov=repro --cov-report=term --cov-report=xml:coverage.xml \
-            --cov-fail-under=66
+            --cov-fail-under=67
     fi
     exec python -m pytest -x -q -m "not slow" "$@"
 fi

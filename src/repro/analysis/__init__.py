@@ -1,6 +1,6 @@
 """hkv-lint: static contract checking for the HierarchicalKV repro.
 
-Four checkers, one findings model:
+Five checkers, one findings model:
 
   kernel-contracts   trace every registered Pallas kernel in interpret
                      mode and walk the jaxpr for DMA start/wait pairing,
@@ -16,6 +16,11 @@ Four checkers, one findings model:
                      one liveness formula (``core.u64.empty_lanes``),
                      referenced from every kernel stage; inline hi/lo
                      re-derivations are findings.
+  telemetry          every ``@roles.*``-annotated op threads the optional
+                     ``telemetry=`` device-counter channel or carries a
+                     reviewed exemption (``analysis.telemetry
+                     .TELEMETRY_EXEMPT``) — the observability surface
+                     stays complete by construction.
 
 Run with ``python -m repro.analysis`` (add ``--format github`` in CI).
 """
@@ -35,15 +40,18 @@ def _checkers():
     from repro.analysis.kernel_contracts import check_hmem_seam, check_kernels
     from repro.analysis.oracle_coupling import check_oracle_coupling
     from repro.analysis.roles import check_roles
+    from repro.analysis.telemetry import check_telemetry
     return {
         "kernel-contracts": lambda: check_kernels() + check_hmem_seam(),
         "compile-cache": check_compile_cache,
         "roles": check_roles,
         "oracle-coupling": check_oracle_coupling,
+        "telemetry": check_telemetry,
     }
 
 
-CHECKERS = ("kernel-contracts", "compile-cache", "roles", "oracle-coupling")
+CHECKERS = ("kernel-contracts", "compile-cache", "roles", "oracle-coupling",
+            "telemetry")
 
 
 def run_all(only=None) -> list:

@@ -17,7 +17,14 @@ def mystery_op(state, cfg, keys):
 
 @roles.reader
 def annotated_op(state, cfg, keys):
-    """Correctly annotated control case."""
+    """Correctly annotated control case — but BUG for the telemetry
+    lint: annotated without a ``telemetry=`` seam or exemption."""
+    return keys
+
+
+@roles.reader
+def telemetered_op(state, cfg, keys, *, telemetry=None):
+    """Threads the telemetry seam — the telemetry lint's control case."""
     return keys
 
 

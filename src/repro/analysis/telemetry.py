@@ -1,0 +1,99 @@
+"""Checker 5: telemetry-seam lint — the device op-telemetry contract.
+
+Every `@roles.*`-annotated op entry point in ``repro.core.ops`` must
+either thread the optional ``telemetry=`` channel (a keyword-only
+parameter; see the module docstring of ``core.ops`` and DESIGN.md
+§Observability) or carry an explicit exemption HERE, with a rationale.
+The rule keeps the observability surface complete by construction: a new
+op lands with counters, or with a reviewed reason why counters are
+meaningless for it — never silently without.
+
+Exemptions are RULE-LOCAL, not global waivers: ``findings.WAIVERS`` is
+pinned empty by ``tests/test_analysis.py`` (shipped code must be clean),
+so ops that legitimately have no telemetry story register in
+``TELEMETRY_EXEMPT`` below instead.
+
+Two rules:
+
+  missing-telemetry-seam   an annotated op with no ``telemetry``
+                           keyword parameter and no exemption.
+  stale-exemption          an exempted op that no longer exists, or that
+                           HAS grown the seam — the entry is dead weight
+                           and must be pruned so the list stays honest.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+from repro.analysis.findings import Finding
+from repro.analysis.roles import public_ops
+from repro.core import ops as ops_mod
+from repro.core import roles as roles_mod
+
+CHECKER = "telemetry"
+_OPS_PATH = "src/repro/core/ops.py"
+
+# op name -> rationale.  Each entry is a REVIEWED decision that device
+# counters are meaningless for the op, not a deferral.
+TELEMETRY_EXEMPT: dict[str, str] = {
+    "size": "whole-table scalar reduction; no probe path to count",
+    "load_factor": "derived scalar over size(); no probe path to count",
+    "export_batch": "bucket-range dump (checkpoint drain); traversal is "
+                    "exhaustive by construction, not probe-driven",
+    "export_batch_if": "predicated bucket-range dump; same exhaustive "
+                       "traversal as export_batch",
+    "clear": "unconditional state reset; nothing probe- or "
+             "admission-shaped to observe",
+}
+
+
+def _has_telemetry_seam(fn) -> bool:
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # pragma: no cover - builtins only
+        return False
+    p = params.get("telemetry")
+    return p is not None and p.default is None
+
+
+def check_telemetry(module=ops_mod, path: str = _OPS_PATH,
+                    exempt: dict | None = None) -> list[Finding]:
+    out = []
+    if exempt is None:
+        exempt = TELEMETRY_EXEMPT
+    ops = public_ops(module)
+    annotated = {name: fn for name, fn in ops.items()
+                 if roles_mod.role_of(fn) is not None}
+    for name, fn in sorted(annotated.items()):
+        if _has_telemetry_seam(fn):
+            continue
+        if name in exempt:
+            continue
+        line = None
+        try:
+            line = inspect.getsourcelines(fn)[1]
+        except OSError:  # pragma: no cover
+            pass
+        out.append(Finding(
+            CHECKER, "missing-telemetry-seam", name,
+            "@roles-annotated op has neither a `telemetry=` keyword "
+            "channel nor a TELEMETRY_EXEMPT entry — thread the seam "
+            "(record via ops._obs() under `telemetry is not None`) or "
+            "register a reviewed exemption in analysis/telemetry.py",
+            path=path, line=line))
+    for name, why in sorted(exempt.items()):
+        fn = ops.get(name)
+        if fn is None:
+            out.append(Finding(
+                CHECKER, "stale-exemption", name,
+                f"TELEMETRY_EXEMPT lists an op that no longer exists "
+                f"(rationale was: {why!r}) — prune the entry",
+                path="src/repro/analysis/telemetry.py"))
+        elif _has_telemetry_seam(fn):
+            out.append(Finding(
+                CHECKER, "stale-exemption", name,
+                "TELEMETRY_EXEMPT lists an op that now threads the "
+                "seam — prune the entry so the list stays honest",
+                path="src/repro/analysis/telemetry.py"))
+    return out

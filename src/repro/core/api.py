@@ -310,22 +310,27 @@ class HKVTable:
     # find_scan pass (one launch: match + scores + values) with no API
     # change — every handle-based consumer (tiered probes, shard bodies,
     # engine waves) inherits it automatically (DESIGN.md §Readers).
+    #
+    # Every keyed method also forwards the optional `telemetry=` sink to
+    # the underlying op (DESIGN.md §Observability); `None` is the exact
+    # pre-telemetry path.
 
-    def find(self, keys: Any) -> ops_mod.FindResult:
+    def find(self, keys: Any, *, telemetry=None) -> ops_mod.FindResult:
         return ops_mod.find(self.state, self.cfg, normalize_keys(keys),
-                            backend=self.backend)
+                            backend=self.backend, telemetry=telemetry)
 
-    def find_ptr(self, keys: Any) -> find_mod.Locate:
+    def find_ptr(self, keys: Any, *, telemetry=None) -> find_mod.Locate:
         return ops_mod.find_ptr(self.state, self.cfg, normalize_keys(keys),
-                                backend=self.backend)
+                                backend=self.backend, telemetry=telemetry)
 
-    def find_rows(self, keys: Any) -> ops_mod.FindRowsResult:
+    def find_rows(self, keys: Any, *,
+                  telemetry=None) -> ops_mod.FindRowsResult:
         return ops_mod.find_rows(self.state, self.cfg, normalize_keys(keys),
-                                 backend=self.backend)
+                                 backend=self.backend, telemetry=telemetry)
 
-    def contains(self, keys: Any) -> jax.Array:
+    def contains(self, keys: Any, *, telemetry=None) -> jax.Array:
         return ops_mod.contains(self.state, self.cfg, normalize_keys(keys),
-                                backend=self.backend)
+                                backend=self.backend, telemetry=telemetry)
 
     def probe_keys(self, keys: Any) -> find_mod.Probe:
         return find_mod.probe_keys(self.cfg, normalize_keys(keys))
@@ -350,75 +355,86 @@ class HKVTable:
     # -- updaters (non-structural; return the successor handle) ---------------
 
     def assign(self, keys: Any, values: jax.Array,
-               update_scores: bool = False) -> "HKVTable":
+               update_scores: bool = False, *,
+               telemetry=None) -> "HKVTable":
         return self.with_state(ops_mod.assign(
             self.state, self.cfg, normalize_keys(keys), values,
-            update_scores=update_scores,
+            update_scores=update_scores, telemetry=telemetry,
         ))
 
-    def assign_add(self, keys: Any, deltas: jax.Array) -> "HKVTable":
+    def assign_add(self, keys: Any, deltas: jax.Array, *,
+                   telemetry=None) -> "HKVTable":
         return self.with_state(ops_mod.assign_add(
             self.state, self.cfg, normalize_keys(keys), deltas,
+            telemetry=telemetry,
         ))
 
-    def assign_scores(self, keys: Any, scores: Any) -> "HKVTable":
+    def assign_scores(self, keys: Any, scores: Any, *,
+                      telemetry=None) -> "HKVTable":
         return self.with_state(ops_mod.assign_scores(
             self.state, self.cfg, normalize_keys(keys),
-            normalize_keys(scores),
+            normalize_keys(scores), telemetry=telemetry,
         ))
 
     # -- inserters (structural; return result tuples with `.table`) -----------
 
     def insert_or_assign(self, keys: Any, values: jax.Array,
-                         custom_scores: Optional[Any] = None) -> TableUpsert:
+                         custom_scores: Optional[Any] = None, *,
+                         telemetry=None) -> TableUpsert:
         res = ops_mod.insert_or_assign(
             self.state, self.cfg, normalize_keys(keys), values,
             custom_scores=_opt_keys(custom_scores), backend=self.backend,
+            telemetry=telemetry,
         )
         return TableUpsert(table=self.with_state(res.state), status=res.status)
 
     def insert_and_evict(self, keys: Any, values: jax.Array,
-                         custom_scores: Optional[Any] = None,
-                         ) -> TableInsertAndEvict:
+                         custom_scores: Optional[Any] = None, *,
+                         telemetry=None) -> TableInsertAndEvict:
         res = ops_mod.insert_and_evict(
             self.state, self.cfg, normalize_keys(keys), values,
             custom_scores=_opt_keys(custom_scores), backend=self.backend,
+            telemetry=telemetry,
         )
         return TableInsertAndEvict(table=self.with_state(res.state),
                                    status=res.status, evicted=res.evicted)
 
     def find_or_insert(self, keys: Any, init_values: jax.Array,
                        custom_scores: Optional[Any] = None,
-                       return_evicted: bool = False,
-                       ) -> TableFindOrInsert:
+                       return_evicted: bool = False, *,
+                       telemetry=None) -> TableFindOrInsert:
         res = ops_mod.find_or_insert(
             self.state, self.cfg, normalize_keys(keys), init_values,
             custom_scores=_opt_keys(custom_scores), backend=self.backend,
-            return_evicted=return_evicted,
+            return_evicted=return_evicted, telemetry=telemetry,
         )
         return TableFindOrInsert(table=self.with_state(res.state),
                                  values=res.values, found=res.found,
                                  status=res.status, evicted=res.evicted)
 
     def ingest(self, keys: Any, init_values: jax.Array,
-               custom_scores: Optional[Any] = None) -> TableUpsert:
+               custom_scores: Optional[Any] = None, *,
+               telemetry=None) -> TableUpsert:
         res = ops_mod.ingest(
             self.state, self.cfg, normalize_keys(keys), init_values,
             custom_scores=_opt_keys(custom_scores), backend=self.backend,
+            telemetry=telemetry,
         )
         return TableUpsert(table=self.with_state(res.state), status=res.status)
 
     def accum_or_assign(self, keys: Any, values: jax.Array,
-                        custom_scores: Optional[Any] = None) -> TableUpsert:
+                        custom_scores: Optional[Any] = None, *,
+                        telemetry=None) -> TableUpsert:
         res = ops_mod.accum_or_assign(
             self.state, self.cfg, normalize_keys(keys), values,
-            custom_scores=_opt_keys(custom_scores),
+            custom_scores=_opt_keys(custom_scores), telemetry=telemetry,
         )
         return TableUpsert(table=self.with_state(res.state), status=res.status)
 
-    def erase(self, keys: Any) -> "HKVTable":
+    def erase(self, keys: Any, *, telemetry=None) -> "HKVTable":
         return self.with_state(ops_mod.erase(self.state, self.cfg,
-                                             normalize_keys(keys)))
+                                             normalize_keys(keys),
+                                             telemetry=telemetry))
 
     def clear(self) -> "HKVTable":
         return self.with_state(ops_mod.clear(self.state, self.cfg))
@@ -426,20 +442,22 @@ class HKVTable:
     # -- maintenance (predicated sweeps + observability; DESIGN.md
     # §Maintenance) --------------------------------------------------------
 
-    def erase_if(self, pred: SweepPredicate) -> TableSweep:
+    def erase_if(self, pred: SweepPredicate, *, telemetry=None) -> TableSweep:
         """Inserter (structural). Remove every live entry matching `pred`
         (TTL expiry: `SweepPredicate.expire_before(epoch)`)."""
         res = ops_mod.erase_if(self.state, self.cfg, pred,
-                               backend=self.backend)
+                               backend=self.backend, telemetry=telemetry)
         return TableSweep(table=self.with_state(res.state), swept=res.swept)
 
     def evict_if(self, pred: SweepPredicate, budget: int,
-                 limit: Optional[jax.Array] = None) -> TableEvictIf:
+                 limit: Optional[jax.Array] = None, *,
+                 telemetry=None) -> TableEvictIf:
         """Inserter (structural). Remove up to `budget` matching entries,
         coldest first, returning them as an `EvictionStream` (the
         maintenance primitive tier rebalancing demotes through)."""
         res = ops_mod.evict_if(self.state, self.cfg, pred, budget,
-                               limit=limit, backend=self.backend)
+                               limit=limit, backend=self.backend,
+                               telemetry=telemetry)
         return TableEvictIf(table=self.with_state(res.state),
                             evicted=res.evicted, count=res.count)
 

@@ -54,6 +54,20 @@ kernels run in interpret mode — correct but slow, so it is opt-in).
 size/export_batch*, assign_scores, erase, clear, and accum_or_assign
 remain jnp-only: they are trivial reductions or metadata-plane scatters
 with no kernel to win.
+
+Telemetry channel (DESIGN.md §Observability): every keyed op takes an
+optional keyword-only `telemetry=` sink (`repro.obs.TelemetrySink`).
+When supplied, the op records a device-computed `OpTelemetry` counter
+record (probes, digest-prefilter passes, hits/misses, the upsert status
+histogram) — computed by a pure OBSERVER over the pre-op state using the
+same `probe_keys`/`match_lanes` formulas the op itself uses, so both
+backends report identical numbers and op results stay bit-identical.
+`telemetry=None` (the default) is literally the pre-telemetry code path:
+the observer import and every counter expression live inside the
+`telemetry is not None` branch, so the default adds zero launches and
+zero jaxpr growth (pinned by tests/test_obs.py).  Whole-table scans
+(size, load_factor, export_batch*) and clear carry no per-key probe and
+are exempt (`repro.analysis.telemetry.TELEMETRY_EXEMPT`).
 """
 
 from __future__ import annotations
@@ -80,6 +94,14 @@ from repro.core.merge import (
 )
 from repro.core.table import HKVConfig, HKVState
 from repro.core.u64 import U64
+
+def _obs():
+    """Deferred observer import — only the `telemetry is not None` branch
+    pays it, keeping the default path free of the obs subsystem."""
+    from repro.obs import telemetry as obs_telemetry
+
+    return obs_telemetry
+
 
 # =============================================================================
 # Readers
@@ -118,7 +140,7 @@ def _gather_shared(state: HKVState, cfg: HKVConfig, loc, dim):
 @roles.reader
 def find(state: HKVState, cfg: HKVConfig, keys: U64,
          loc: Optional[find_mod.Locate] = None, *,
-         backend: str = "auto") -> FindResult:
+         backend: str = "auto", telemetry=None) -> FindResult:
     """Reader. Digest-accelerated lookup with value copy (paper `find`).
 
     backend='kernel' (or 'auto' on TPU) runs the FUSED find_scan pass when
@@ -131,6 +153,9 @@ def find(state: HKVState, cfg: HKVConfig, keys: U64,
     if loc is None:
         r = _fused_find(state, cfg, keys, backend)
         if r is not None:
+            if telemetry is not None:
+                telemetry.record(
+                    "find", _obs().observe_find(state, cfg, keys, r.found))
             return FindResult(values=r.values[:, : cfg.dim], found=r.found,
                               score_hi=r.score_hi, score_lo=r.score_lo)
         loc = find_mod.locate(state, cfg, keys)
@@ -139,6 +164,9 @@ def find(state: HKVState, cfg: HKVConfig, keys: U64,
         vals = _gather_shared(state, cfg, loc, cfg.dim)
     else:
         vals = find_mod.gather_values(state, loc, cfg.dim, cfg.value_tier)
+    if telemetry is not None:
+        telemetry.record(
+            "find", _obs().observe_find(state, cfg, keys, loc.found))
     shi = jnp.where(loc.found, state.score_hi[loc.bucket, loc.slot], 0)
     slo = jnp.where(loc.found, state.score_lo[loc.bucket, loc.slot], 0)
     return FindResult(values=vals, found=loc.found, score_hi=shi, score_lo=slo)
@@ -146,7 +174,7 @@ def find(state: HKVState, cfg: HKVConfig, keys: U64,
 
 @roles.reader
 def find_ptr(state: HKVState, cfg: HKVConfig, keys: U64, *,
-             backend: str = "auto") -> find_mod.Locate:
+             backend: str = "auto", telemetry=None) -> find_mod.Locate:
     """Reader. The paper's pointer-returning `find*`: key-side work only.
 
     Returns position handles (bucket, slot, row) instead of copying values —
@@ -158,17 +186,25 @@ def find_ptr(state: HKVState, cfg: HKVConfig, keys: U64, *,
     if _resolve_backend(backend) == "kernel":
         from repro.kernels import ops as kernel_ops
 
-        return kernel_ops.locate_kernel(state, cfg, keys)
-    return find_mod.locate(state, cfg, keys)
+        loc = kernel_ops.locate_kernel(state, cfg, keys)
+    else:
+        loc = find_mod.locate(state, cfg, keys)
+    if telemetry is not None:
+        telemetry.record(
+            "find_ptr", _obs().observe_find(state, cfg, keys, loc.found))
+    return loc
 
 
 @roles.reader
 def contains(state: HKVState, cfg: HKVConfig, keys: U64,
              loc: Optional[find_mod.Locate] = None, *,
-             backend: str = "auto") -> jax.Array:
+             backend: str = "auto", telemetry=None) -> jax.Array:
     """Reader. Membership only (no value traffic)."""
     if loc is None:
         loc = find_ptr(state, cfg, keys, backend=backend)
+    if telemetry is not None:
+        telemetry.record(
+            "contains", _obs().observe_find(state, cfg, keys, loc.found))
     return loc.found
 
 
@@ -183,7 +219,7 @@ class FindRowsResult(NamedTuple):
 @roles.reader
 def find_rows(state: HKVState, cfg: HKVConfig, keys: U64,
               loc: Optional[find_mod.Locate] = None, *,
-              backend: str = "auto") -> FindRowsResult:
+              backend: str = "auto", telemetry=None) -> FindRowsResult:
     """Reader. Full-width row gather (embedding + aux optimizer columns).
 
     The sparse-optimizer path: gathers the entire stored row so slot state
@@ -197,6 +233,10 @@ def find_rows(state: HKVState, cfg: HKVConfig, keys: U64,
     if loc is None:
         r = _fused_find(state, cfg, keys, backend)
         if r is not None:
+            if telemetry is not None:
+                telemetry.record(
+                    "find_rows",
+                    _obs().observe_find(state, cfg, keys, r.found))
             return FindRowsResult(rows=r.values, found=r.found, row=r.row,
                                   score_hi=r.score_hi, score_lo=r.score_lo)
         loc = find_mod.locate(state, cfg, keys)
@@ -205,6 +245,9 @@ def find_rows(state: HKVState, cfg: HKVConfig, keys: U64,
         rows = _gather_shared(state, cfg, loc, None)
     else:
         rows = find_mod.gather_values(state, loc, None, cfg.value_tier)
+    if telemetry is not None:
+        telemetry.record(
+            "find_rows", _obs().observe_find(state, cfg, keys, loc.found))
     shi = jnp.where(loc.found, state.score_hi[loc.bucket, loc.slot], 0)
     slo = jnp.where(loc.found, state.score_lo[loc.bucket, loc.slot], 0)
     return FindRowsResult(rows=rows, found=loc.found, row=loc.row,
@@ -289,6 +332,8 @@ def assign(
     values: jax.Array,
     update_scores: bool = False,
     loc: Optional[find_mod.Locate] = None,
+    *,
+    telemetry=None,
 ) -> HKVState:
     """Updater. Write values of *existing* keys in place; misses are no-ops.
 
@@ -300,6 +345,9 @@ def assign(
     """
     if loc is None:
         loc = find_mod.locate(state, cfg, keys)
+    if telemetry is not None:
+        telemetry.record(
+            "assign", _obs().observe_update(state, cfg, keys, loc.found))
     b, s = cfg.num_buckets, cfg.slots_per_bucket
     # last-writer-wins on within-batch duplicates: scatter in batch order
     row = jnp.where(loc.found, loc.row, b * s)
@@ -336,6 +384,8 @@ def assign(
 def assign_add(
     state: HKVState, cfg: HKVConfig, keys: U64, deltas: jax.Array,
     loc: Optional[find_mod.Locate] = None,
+    *,
+    telemetry=None,
 ) -> HKVState:
     """Updater. values[k] += delta for existing keys (duplicates accumulate).
 
@@ -345,6 +395,9 @@ def assign_add(
     """
     if loc is None:
         loc = find_mod.locate(state, cfg, keys)
+    if telemetry is not None:
+        telemetry.record(
+            "assign_add", _obs().observe_update(state, cfg, keys, loc.found))
     b, s = cfg.num_buckets, cfg.slots_per_bucket
     row = jnp.where(loc.found, loc.row, b * s)
     if deltas.shape[1] < state.values.shape[1]:
@@ -361,10 +414,16 @@ def assign_add(
 def assign_scores(
     state: HKVState, cfg: HKVConfig, keys: U64, scores: U64,
     loc: Optional[find_mod.Locate] = None,
+    *,
+    telemetry=None,
 ) -> HKVState:
     """Updater. Overwrite scores of existing keys (paper `assign_scores`)."""
     if loc is None:
         loc = find_mod.locate(state, cfg, keys)
+    if telemetry is not None:
+        telemetry.record(
+            "assign_scores",
+            _obs().observe_update(state, cfg, keys, loc.found))
     hb = jnp.where(loc.found, loc.bucket, cfg.num_buckets)
     return state._replace(
         score_hi=state.score_hi.at[hb, loc.slot].set(scores.hi, mode="drop"),
@@ -403,6 +462,7 @@ def update_rows(
     update_scores: bool = False,
     loc: Optional[find_mod.Locate] = None,
     backend: str = "auto",
+    telemetry=None,
 ) -> UpdateRowsResult:
     """Updater. The gradient step: apply the sparse optimizer `opt` (a
     static `SparseOptimizer` variant) to each *existing* key's full row
@@ -428,6 +488,10 @@ def update_rows(
         from repro.kernels import ops as kernel_ops  # deferred: kernels import core
 
         r = kernel_ops.update_rows_kernel(state, cfg, keys, grads, opt)
+        if telemetry is not None:
+            telemetry.record(
+                "update_rows",
+                _obs().observe_update(state, cfg, keys, r.found))
         return UpdateRowsResult(state=r.state, found=r.found)
     if loc is None:
         loc = find_mod.locate(state, cfg, keys)
@@ -436,6 +500,9 @@ def update_rows(
         rows = _gather_shared(state, cfg, loc, None)
     else:
         rows = find_mod.gather_values(state, loc, None, cfg.value_tier)
+    if telemetry is not None:
+        telemetry.record(
+            "update_rows", _obs().observe_update(state, cfg, keys, loc.found))
     new_rows = opt.apply(rows, grads, cfg.dim).astype(state.values.dtype)
     new_rows = jnp.where(loc.found[:, None], new_rows, rows)
     state = assign(state, cfg, keys, new_rows, update_scores=update_scores,
@@ -484,6 +551,7 @@ def insert_or_assign(
     custom_scores: Optional[U64] = None,
     *,
     backend: str = "auto",
+    telemetry=None,
 ) -> UpsertResult:
     """Inserter. Update-or-insert with in-line eviction/admission (Alg. 2/3).
 
@@ -493,6 +561,10 @@ def insert_or_assign(
         state, cfg, keys, _pad_aux(values, state), custom_scores=custom_scores,
         stages=_upsert_stages(backend, cfg),
     )
+    if telemetry is not None:
+        telemetry.record(
+            "insert_or_assign",
+            _obs().observe_upsert(state, cfg, keys, res.status))
     return UpsertResult(state=res.state, status=res.status)
 
 
@@ -512,6 +584,7 @@ def insert_and_evict(
     *,
     backend: str = "auto",
     loc: Optional[find_mod.Locate] = None,
+    telemetry=None,
 ) -> InsertAndEvictResult:
     """Inserter. insert_or_assign that returns the displaced entries in the
     same launch as a typed `EvictionStream` (the paper's single-kernel
@@ -529,6 +602,10 @@ def insert_and_evict(
         stages=_upsert_stages(backend, cfg),
         loc=loc,
     )
+    if telemetry is not None:
+        telemetry.record(
+            "insert_and_evict",
+            _obs().observe_upsert(state, cfg, keys, res.status))
     return InsertAndEvictResult(state=res.state, status=res.status,
                                 evicted=res.evicted)
 
@@ -555,6 +632,7 @@ def find_or_insert(
     backend: str = "auto",
     return_evicted: bool = False,
     loc: Optional[find_mod.Locate] = None,
+    telemetry=None,
 ) -> FindOrInsertResult:
     """Inserter. Lookup; insert `init_values` for missing keys (cold-start).
 
@@ -583,6 +661,11 @@ def find_or_insert(
         loc=loc,
     )
     vals = _gather_post(res, cfg, init_values, backend)
+    if telemetry is not None:
+        telemetry.record(
+            "find_or_insert",
+            _obs().observe_upsert(state, cfg, keys, res.status,
+                                  found=res.found))
     return FindOrInsertResult(state=res.state, values=vals, found=res.found,
                               status=res.status, evicted=res.evicted)
 
@@ -608,6 +691,8 @@ def accum_or_assign(
     keys: U64,
     values: jax.Array,
     custom_scores: Optional[U64] = None,
+    *,
+    telemetry=None,
 ) -> UpsertResult:
     """Inserter. Paper API: ACCUMULATE into existing entries (+=), ASSIGN new
     ones — the one-shot gradient-accumulation upsert.
@@ -635,7 +720,12 @@ def accum_or_assign(
     # group's representative slot carries the group status (the masked
     # duplicates are INVALID) — d.inverse maps every original position to
     # its group's representative slot.
-    return UpsertResult(state=res.state, status=res.status[d.inverse])
+    status = res.status[d.inverse]
+    if telemetry is not None:
+        telemetry.record(
+            "accum_or_assign",
+            _obs().observe_upsert(state, cfg, keys, status))
+    return UpsertResult(state=res.state, status=status)
 
 
 @roles.inserter
@@ -647,6 +737,7 @@ def ingest(
     custom_scores: Optional[U64] = None,
     *,
     backend: str = "auto",
+    telemetry=None,
 ) -> UpsertResult:
     """Inserter. Admission-only upsert: misses insert `init_values`
     (admission-controlled), hits keep their stored value with scores
@@ -657,13 +748,21 @@ def ingest(
         custom_scores=custom_scores, write_hit_values=False,
         stages=_upsert_stages(backend, cfg),
     )
+    if telemetry is not None:
+        telemetry.record(
+            "ingest", _obs().observe_upsert(state, cfg, keys, res.status,
+                                            found=res.found))
     return UpsertResult(state=res.state, status=res.status)
 
 
 @roles.inserter
-def erase(state: HKVState, cfg: HKVConfig, keys: U64) -> HKVState:
+def erase(state: HKVState, cfg: HKVConfig, keys: U64, *,
+          telemetry=None) -> HKVState:
     """Inserter (structural). Remove keys; freed slots return to the pool."""
     loc = find_mod.locate(state, cfg, keys)
+    if telemetry is not None:
+        telemetry.record(
+            "erase", _obs().observe_erase(state, cfg, keys, loc.found))
     b, s = cfg.num_buckets, cfg.slots_per_bucket
     hb = jnp.where(loc.found, loc.bucket, b)
     row = jnp.where(loc.found, loc.row, b * s)
@@ -747,7 +846,7 @@ def _erase_slots(state: HKVState, cfg: HKVConfig, mask: jax.Array) -> HKVState:
 
 @roles.inserter
 def erase_if(state: HKVState, cfg: HKVConfig, pred, *,
-             backend: str = "auto") -> SweepResult:
+             backend: str = "auto", telemetry=None) -> SweepResult:
     """Inserter (structural). Remove EVERY live entry matching `pred` —
     the paper-family `erase_if` bulk op (TTL/epoch expiry rides on this
     with the `expire_before` canned predicate).
@@ -755,14 +854,16 @@ def erase_if(state: HKVState, cfg: HKVConfig, pred, *,
     Consumer code: prefer `HKVTable.erase_if` (repro.core.api).
     """
     mask = _sweep_mask(state, cfg, pred, backend)
-    return SweepResult(state=_erase_slots(state, cfg, mask),
-                       swept=jnp.sum(mask.astype(jnp.int32)))
+    swept = jnp.sum(mask.astype(jnp.int32))
+    if telemetry is not None:
+        telemetry.record("erase_if", _obs().observe_sweep(cfg, swept))
+    return SweepResult(state=_erase_slots(state, cfg, mask), swept=swept)
 
 
 @roles.inserter
 def evict_if(state: HKVState, cfg: HKVConfig, pred, budget: int, *,
              limit: Optional[jax.Array] = None,
-             backend: str = "auto") -> EvictIfResult:
+             backend: str = "auto", telemetry=None) -> EvictIfResult:
     """Inserter (structural). Remove up to `budget` matching entries,
     COLDEST FIRST (ascending score, ties by ascending key — deterministic
     and backend-independent), and hand them back as an `EvictionStream`.
@@ -839,8 +940,10 @@ def evict_if(state: HKVState, cfg: HKVConfig, pred, budget: int, *,
             jnp.zeros((nlanes, state.values.shape[1]), state.values.dtype),
         ),
     )
-    return EvictIfResult(state=state, evicted=stream,
-                         count=jnp.sum(lane.astype(jnp.int32)))
+    count = jnp.sum(lane.astype(jnp.int32))
+    if telemetry is not None:
+        telemetry.record("evict_if", _obs().observe_evict_if(cfg, count))
+    return EvictIfResult(state=state, evicted=stream, count=count)
 
 
 # =============================================================================

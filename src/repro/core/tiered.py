@@ -284,11 +284,12 @@ class TieredHKVTable:
 
     # -- readers -------------------------------------------------------------
 
-    def contains(self, keys: Any) -> jax.Array:
+    def contains(self, keys: Any, *, telemetry=None) -> jax.Array:
         """Pure reader: membership in either tier (never promotes)."""
         k = normalize_keys(keys)
-        in_hot = self.hot.contains(k)
-        return in_hot | self.cold.contains(_mask_keys(k, ~in_hot))
+        in_hot = self.hot.contains(k, telemetry=telemetry)
+        return in_hot | self.cold.contains(_mask_keys(k, ~in_hot),
+                                           telemetry=telemetry)
 
     def size(self) -> jax.Array:
         """Distinct live keys across the hierarchy.  Inclusive-on-access
@@ -385,7 +386,8 @@ class TieredHKVTable:
     # -- inserters -----------------------------------------------------------
 
     def insert_or_assign(self, keys: Any, values: jax.Array,
-                         custom_scores: Optional[Any] = None) -> TieredUpsert:
+                         custom_scores: Optional[Any] = None, *,
+                         telemetry=None) -> TieredUpsert:
         """Upsert into the hot tier; displaced pairs — victims evicted by
         admission AND incoming pairs the hot tier rejected — cascade into
         the cold tier.  `status` reports the hot tier's verdict; `.ok`
@@ -395,13 +397,16 @@ class TieredHKVTable:
         values = ops_mod.pad_rows(values, self.hot.state.values)
         res = ops_mod.insert_and_evict(
             self.hot.state, self.hot.cfg, k, values,
-            custom_scores=cs, backend=self.hot.backend,
+            custom_scores=cs, backend=self.hot.backend, telemetry=telemetry,
         )
         hot = self.hot.with_state(res.state)
         first, rep_orig = _dedupe_lanes(k)
         dk, dv, ds, dm = self._displaced(k, values, res, rej_custom=cs,
                                          first=first)
         dem = self._demote(self.cold, dk, dv, ds, dm)
+        if telemetry is not None:
+            telemetry.record("tier", ops_mod._obs().tier_motion(
+                demoted=dem.demoted, dropped=dem.dropped))
         return TieredUpsert(
             table=self.with_tiers(hot, dem.cold), status=res.status,
             demoted=dem.demoted, dropped=dem.dropped,
@@ -409,8 +414,8 @@ class TieredHKVTable:
         )
 
     def find_or_insert(self, keys: Any, init_values: jax.Array,
-                       custom_scores: Optional[Any] = None,
-                       ) -> TieredFindOrInsert:
+                       custom_scores: Optional[Any] = None, *,
+                       telemetry=None) -> TieredFindOrInsert:
         """The training-path op: lookup across the hierarchy, admit
         misses, promote cold hits.
 
@@ -444,6 +449,7 @@ class TieredHKVTable:
         res = ops_mod.find_or_insert(
             self.hot.state, self.hot.cfg, k, admit_rows, custom_scores=cs,
             backend=self.hot.backend, return_evicted=True, loc=pre,
+            telemetry=telemetry,
         )
         hot = self.hot.with_state(res.state)
         first, rep_orig = _dedupe_lanes(k)
@@ -455,15 +461,19 @@ class TieredHKVTable:
                                          first=first,
                                          already_cold=cold_hit)
         dem = self._demote(self.cold, dk, dv, ds, dm)
+        promoted = jnp.sum((cold_hit & first
+                            & (res.status >= ops_mod.STATUS_UPDATED)
+                            & (res.status <= ops_mod.STATUS_EVICTED))
+                           .astype(jnp.int32))
+        if telemetry is not None:
+            telemetry.record("tier", ops_mod._obs().tier_motion(
+                promoted=promoted, demoted=dem.demoted, dropped=dem.dropped))
         return TieredFindOrInsert(
             table=self.with_tiers(hot, dem.cold),
             values=res.values,
             found=hot_pre | cold_hit,
             status=res.status,
-            promoted=jnp.sum((cold_hit & first
-                              & (res.status >= ops_mod.STATUS_UPDATED)
-                              & (res.status <= ops_mod.STATUS_EVICTED))
-                             .astype(jnp.int32)),
+            promoted=promoted,
             demoted=dem.demoted, dropped=dem.dropped,
             # rejected cold hits never left the cold tier: resident by
             # definition, without appearing in the demotion batch
@@ -516,7 +526,8 @@ class TieredHKVTable:
         return keys, vals, scores, st.mask | rej
 
     def ingest(self, keys: Any, init_values: jax.Array,
-               custom_scores: Optional[Any] = None) -> TieredUpsert:
+               custom_scores: Optional[Any] = None, *,
+               telemetry=None) -> TieredUpsert:
         """Deferred-structural admit (the overlapped-ingest schedule):
         find_or_insert without the value readback.  Runs the FULL
         hierarchy motion — a cold-resident key must be PROMOTED, not
@@ -524,13 +535,15 @@ class TieredHKVTable:
         value from every later read).  The readback is dead code XLA
         eliminates under jit."""
         r = self.find_or_insert(keys, init_values,
-                                custom_scores=custom_scores)
+                                custom_scores=custom_scores,
+                                telemetry=telemetry)
         return TieredUpsert(table=r.table, status=r.status,
                             demoted=r.demoted, dropped=r.dropped, ok=r.ok)
 
     # -- find with miss-path promotion ----------------------------------------
 
-    def find(self, keys: Any, *, promote: Optional[bool] = None) -> TieredFind:
+    def find(self, keys: Any, *, promote: Optional[bool] = None,
+             telemetry=None) -> TieredFind:
         """Hierarchy lookup.  Hot misses probe the cold tier; cold hits
         are re-admitted into the hot tier (unless promotion is off), whose
         displaced victims cascade back down — the inclusive-on-access
@@ -543,8 +556,9 @@ class TieredHKVTable:
         # both probe legs go through the handle readers, so on the kernel
         # backend each is ONE fused find_scan pass (hot: values in-line;
         # cold hmem values cross tiers via the locate+tier_gather split)
-        h = self.hot.find(k)
-        cold_rows = self.cold.find_rows(_mask_keys(k, ~h.found))
+        h = self.hot.find(k, telemetry=telemetry)
+        cold_rows = self.cold.find_rows(_mask_keys(k, ~h.found),
+                                        telemetry=telemetry)
         cold_hit = cold_rows.found
         values = jnp.where(h.found[:, None], h.values,
                            cold_rows.rows[:, : self.dim].astype(h.values.dtype))
@@ -577,6 +591,9 @@ class TieredHKVTable:
         promoted = jnp.sum(
             ((res.status == ops_mod.STATUS_INSERTED)
              | (res.status == ops_mod.STATUS_EVICTED)).astype(jnp.int32))
+        if telemetry is not None:
+            telemetry.record("tier", ops_mod._obs().tier_motion(
+                promoted=promoted, demoted=dem.demoted, dropped=dem.dropped))
         return TieredFind(
             table=self.with_tiers(hot, dem.cold), values=values, found=found,
             hot_hit=h.found, promoted=promoted, demoted=dem.demoted,
@@ -595,11 +612,12 @@ class TieredHKVTable:
             self, hot=self.hot.assign(keys, values,
                                       update_scores=update_scores))
 
-    def erase(self, keys: Any) -> "TieredHKVTable":
+    def erase(self, keys: Any, *, telemetry=None) -> "TieredHKVTable":
         """Structural: remove keys from BOTH tiers (an inclusive-cache
         erase must kill the cold copy too or the key would resurrect on
         the next miss)."""
-        return self.with_tiers(self.hot.erase(keys), self.cold.erase(keys))
+        return self.with_tiers(self.hot.erase(keys, telemetry=telemetry),
+                               self.cold.erase(keys, telemetry=telemetry))
 
     def clear(self) -> "TieredHKVTable":
         return self.with_tiers(self.hot.clear(), self.cold.clear())
@@ -607,19 +625,20 @@ class TieredHKVTable:
     # -- maintenance (predicated sweeps + observability; DESIGN.md
     # §Maintenance) -----------------------------------------------------------
 
-    def erase_if(self, pred) -> TieredSweep:
+    def erase_if(self, pred, *, telemetry=None) -> TieredSweep:
         """Structural sweep of BOTH tiers: like `erase`, an inclusive-cache
         removal must kill the cold copy too, or an expired key would
         resurrect on the next miss.  Works for TTL expiry on the default
         tier policies because demoted scores are translated verbatim into
         the cold tier's 'custom' domain — the epoch plane survives the
         crossing (`translate_scores`)."""
-        hr = self.hot.erase_if(pred)
-        cr = self.cold.erase_if(pred)
+        hr = self.hot.erase_if(pred, telemetry=telemetry)
+        cr = self.cold.erase_if(pred, telemetry=telemetry)
         return TieredSweep(table=self.with_tiers(hr.table, cr.table),
                            swept=hr.swept + cr.swept)
 
-    def evict_if(self, pred, budget: int) -> TieredEvictIf:
+    def evict_if(self, pred, budget: int, *,
+                 telemetry=None) -> TieredEvictIf:
         """Remove up to `budget` matching entries per tier, coldest first,
         returning them as one concatenated stream (hot lanes first).  An
         evicted entry leaves the WHOLE hierarchy: a hot-evicted key's
@@ -630,9 +649,9 @@ class TieredHKVTable:
         slot is freed but whose lane is masked out of the stream (the hot
         copy is authoritative — same rule as `export_batch`)."""
         hr = ops_mod.evict_if(self.hot.state, self.hot.cfg, pred, budget,
-                              backend=self.hot.backend)
+                              backend=self.hot.backend, telemetry=telemetry)
         cr = ops_mod.evict_if(self.cold.state, self.cold.cfg, pred, budget,
-                              backend=self.cold.backend)
+                              backend=self.cold.backend, telemetry=telemetry)
         dup = self.hot.contains(cr.evicted.masked_keys())  # pre-sweep hot
         cmask = cr.evicted.mask & ~dup
         # hot-evicted keys: kill any surviving stale cold copy (the cold

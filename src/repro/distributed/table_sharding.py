@@ -55,6 +55,14 @@ from repro.distributed.sharding import shard_map
 from repro.embedding.dynamic import HKVEmbedding
 
 
+def _obs_tel():
+    """Deferred observer import (the telemetry branch only — same
+    discipline as `repro.core.ops._obs`)."""
+    from repro.obs import telemetry as obs_telemetry
+
+    return obs_telemetry
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardedHKVEmbedding:
     """HKVEmbedding sharded over mesh axes (default: every mesh axis)."""
@@ -111,12 +119,14 @@ class ShardedHKVEmbedding:
     # -- shard-local bodies ---------------------------------------------------
 
     def _lookup_body(self, n_shards, cap, train, state, khi, klo,
-                     promote=True):
+                     promote=True, telemetry=None):
         """Executes per shard under shard_map: khi/klo are the LOCAL tokens'
         unique keys (padded with EMPTY).  Returns (state, rows, found, ovf).
 
         `promote=False` makes the read a PURE READER on tiered shards
-        (no miss-path re-admission — the membership-query path)."""
+        (no miss-path re-admission — the membership-query path).
+        `telemetry` is a SHARD-LOCAL sink (the caller psums its total
+        across the mesh — see `find_keys`)."""
         axis = self.axis_names
         local = self.local_embedding(n_shards)
         keys = U64(khi, klo)
@@ -131,16 +141,16 @@ class ShardedHKVEmbedding:
         # embedding config ('auto' -> fused Pallas on TPU)
         t = local.wrap(state)
         if train:
-            res = t.find_or_insert(rk, init)
+            res = t.find_or_insert(rk, init, telemetry=telemetry)
             state, rows = res.table.state, res.values
             present = res.found  # pre-existing (find_or_insert contract)
         else:
             # handle readers carry the backend: shard-local finds run the
             # fused find_scan pass when the embedding config picked kernel
             if isinstance(t, TieredHKVTable):
-                fr = t.find(rk, promote=promote)
+                fr = t.find(rk, promote=promote, telemetry=telemetry)
             else:
-                fr = t.find(rk)
+                fr = t.find(rk, telemetry=telemetry)
             rows = jnp.where(fr.found[:, None], fr.values, init[:, : local.dim])
             present = fr.found
             succ = getattr(fr, "table", None)  # tiered find promotes:
@@ -198,7 +208,8 @@ class ShardedHKVEmbedding:
         s.update_rows(uniq, ops_mod.RowUpdate(local.optimizer, g_sum))
         return s.commit().state
 
-    def _upsert_body(self, n_shards, cap, state, khi, klo, values):
+    def _upsert_body(self, n_shards, cap, state, khi, klo, values,
+                     telemetry=None):
         """insert_or_assign with caller values routed to owners; statuses
         routed back (the ShardedHKVTable protocol path)."""
         axis = self.axis_names
@@ -218,7 +229,7 @@ class ShardedHKVEmbedding:
                                     tiled=True).reshape(n_shards * cap, -1)
         rk = U64(recv_hi.reshape(-1), recv_lo.reshape(-1))
         t = local.wrap(state)
-        res = t.insert_or_assign(rk, recv_v)
+        res = t.insert_or_assign(rk, recv_v, telemetry=telemetry)
         sbuf = res.status.astype(jnp.int32).reshape(n_shards, cap)
         back = jax.lax.all_to_all(sbuf, axis, 0, 0, tiled=True).reshape(-1)
         st_u = jnp.where(key_slot >= 0, back[jnp.clip(key_slot, 0)], 0)
@@ -316,60 +327,101 @@ class ShardedHKVEmbedding:
         return state, rows.reshape(tokens.shape + (self.emb.dim,)), jnp.sum(ovf)
 
     def find_keys(self, mesh, state, keys: U64, *, train: bool = False,
-                  promote: bool = True):
+                  promote: bool = True, telemetry=None):
         """Key-level lookup: keys U64 [N] (N divisible by the dp world size).
 
         Returns (state, values [N, dim], found [N], overflow).  Misses
         return ZERO rows (the table-surface contract, unlike the embedding
-        path's deterministic init fallback)."""
+        path's deterministic init fallback).
+
+        `telemetry=` records ONE whole-mesh `OpTelemetry` into the sink
+        (shard-local sinks inside the body, leaves psum-summed over every
+        mesh axis, so the record is replicated and exact — DESIGN.md
+        §Observability).  None is the exact pre-telemetry path."""
         n_shards = int(np.prod([mesh.shape[a] for a in self.axis_names]))
         dp = self._dp_axes(mesh)
         per_shard = max(keys.hi.shape[0] // max(np.prod([mesh.shape[a] for a in dp]), 1), 1)
         cap = self._cap(per_shard, n_shards)
+        with_tel = telemetry is not None
+        all_axes = tuple(mesh.axis_names)
 
         def body(state, khi, klo):
+            sink = None
+            if with_tel:
+                obs_telemetry = _obs_tel()
+                sink = obs_telemetry.TelemetrySink()
             d = dedupe_keys(U64(khi, klo))
             state, rows, found, ovf = self._lookup_body(
                 n_shards, cap, train, state, d.unique.hi, d.unique.lo,
-                promote=promote,
+                promote=promote, telemetry=sink,
             )
             rows_o = rows[d.inverse]
             found_o = found[d.inverse] & ~u64.is_empty(U64(khi, klo))
             if not train:  # reader contract: zeros where not found
                 rows_o = jnp.where(found_o[:, None], rows_o, 0.0)
+            if with_tel:
+                tel = obs_telemetry.psum_telemetry(sink.total(), all_axes)
+                return state, rows_o, found_o, ovf.reshape(1), tel
             return state, rows_o, found_o, ovf.reshape(1)
 
         specs = self.state_specs()
-        state, rows, found, ovf = shard_map(
+        out_specs = (specs, P(dp, None), P(dp), P(dp))
+        if with_tel:
+            out_specs = out_specs + (P(),)  # psum-replicated counters
+        out = shard_map(
             body, mesh=mesh,
             in_specs=(specs, P(dp), P(dp)),
-            out_specs=(specs, P(dp, None), P(dp), P(dp)),
+            out_specs=out_specs,
             check_vma=False,
         )(state, keys.hi, keys.lo)
+        if with_tel:
+            state, rows, found, ovf, tel = out
+            telemetry.record(
+                "sharded_find_or_insert" if train else "sharded_find", tel)
+        else:
+            state, rows, found, ovf = out
         return state, rows, found, jnp.sum(ovf)
 
-    def upsert_keys(self, mesh, state, keys: U64, values):
+    def upsert_keys(self, mesh, state, keys: U64, values, *, telemetry=None):
         """Key-level insert_or_assign: values routed to owner shards.
 
-        Returns (state, status [N] int8, overflow)."""
+        Returns (state, status [N] int8, overflow).  `telemetry=` records
+        one whole-mesh `OpTelemetry` (same psum pattern as `find_keys`)."""
         n_shards = int(np.prod([mesh.shape[a] for a in self.axis_names]))
         dp = self._dp_axes(mesh)
         per_shard = max(keys.hi.shape[0] // max(np.prod([mesh.shape[a] for a in dp]), 1), 1)
         cap = self._cap(per_shard, n_shards)
+        with_tel = telemetry is not None
+        all_axes = tuple(mesh.axis_names)
 
         def body(state, khi, klo, v):
+            sink = None
+            if with_tel:
+                obs_telemetry = _obs_tel()
+                sink = obs_telemetry.TelemetrySink()
             state, status, ovf = self._upsert_body(
-                n_shards, cap, state, khi, klo, v
+                n_shards, cap, state, khi, klo, v, telemetry=sink,
             )
+            if with_tel:
+                tel = obs_telemetry.psum_telemetry(sink.total(), all_axes)
+                return state, status, ovf.reshape(1), tel
             return state, status, ovf.reshape(1)
 
         specs = self.state_specs()
-        state, status, ovf = shard_map(
+        out_specs = (specs, P(dp), P(dp))
+        if with_tel:
+            out_specs = out_specs + (P(),)
+        out = shard_map(
             body, mesh=mesh,
             in_specs=(specs, P(dp), P(dp), P(dp, None)),
-            out_specs=(specs, P(dp), P(dp)),
+            out_specs=out_specs,
             check_vma=False,
         )(state, keys.hi, keys.lo, values)
+        if with_tel:
+            state, status, ovf, tel = out
+            telemetry.record("sharded_insert_or_assign", tel)
+        else:
+            state, status, ovf = out
         return state, status, jnp.sum(ovf)
 
     def assign_keys(self, mesh, state, keys: U64, values):
@@ -544,7 +596,8 @@ class ShardedHKVTable:
 
     # -- KVTable protocol ------------------------------------------------------
 
-    def find(self, keys, *, promote: bool = True) -> ShardedFind:
+    def find(self, keys, *, promote: bool = True,
+             telemetry=None) -> ShardedFind:
         """Lookup.  On tiered shards the default runs the miss-path
         promotion (keep `.table` to retain its effects); pass
         `promote=False` for the pure-reader form — serve-style callers
@@ -552,24 +605,27 @@ class ShardedHKVTable:
         two structural upserts per shard that are then thrown away."""
         state, values, found, ovf = self.semb.find_keys(
             self.mesh, self.state, normalize_keys(keys), train=False,
-            promote=promote,
+            promote=promote, telemetry=telemetry,
         )
         return ShardedFind(values=values, found=found, overflow=ovf,
                            table=self.with_state(state))
 
-    def insert_or_assign(self, keys, values) -> ShardedUpsert:
+    def insert_or_assign(self, keys, values, *,
+                         telemetry=None) -> ShardedUpsert:
         state, status, ovf = self.semb.upsert_keys(
-            self.mesh, self.state, normalize_keys(keys), values
+            self.mesh, self.state, normalize_keys(keys), values,
+            telemetry=telemetry,
         )
         return ShardedUpsert(table=self.with_state(state), status=status,
                              overflow=ovf)
 
-    def find_or_insert(self, keys) -> ShardedFindOrInsert:
+    def find_or_insert(self, keys, *, telemetry=None) -> ShardedFindOrInsert:
         """Admission-controlled lookup; misses insert the deterministic
         hash-derived init rows (routing caller init rows is not supported —
         owner shards recompute the init from the key)."""
         state, values, found, ovf = self.semb.find_keys(
-            self.mesh, self.state, normalize_keys(keys), train=True
+            self.mesh, self.state, normalize_keys(keys), train=True,
+            telemetry=telemetry,
         )
         return ShardedFindOrInsert(table=self.with_state(state), values=values,
                                    found=found, overflow=ovf)

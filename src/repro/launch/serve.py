@@ -68,6 +68,13 @@ def main():
                     help="between-wave host slack budget (ms) that "
                          "staging and maintenance compete for; default "
                          "cadence-only maintenance")
+    # observability (repro.obs; DESIGN.md §Observability)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON (Perfetto-"
+                         "loadable) of the serve run's span timeline")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the end-of-run MetricsRegistry snapshot "
+                         "in Prometheus text exposition format")
     # lm mode
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--batch", type=int, default=4)
@@ -94,10 +101,16 @@ def _embedding_main(args):
         args.wave_size = min(args.wave_size, 256)
         args.waves = min(args.waves, 12)
 
+    tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer
+
+        tracer = Tracer()
+
     table = TieredHKVTable.create(
         hot_capacity=args.hot_capacity, cold_capacity=args.cold_capacity,
         dim=args.dim)
-    pub = TablePublisher(table)
+    pub = TablePublisher(table, tracer=tracer)
     trainer = OnlineTrainer(publisher=pub, publish_every=1)
     sched = None
     if args.maintain:
@@ -105,13 +118,14 @@ def _embedding_main(args):
 
         sched = MaintenanceScheduler(MaintenancePolicy(
             every_waves=args.maintain_every,
-            sweep_budget=args.sweep_budget))
+            sweep_budget=args.sweep_budget), tracer=tracer)
     eng = OnlineEmbeddingEngine(
         pub, wave_size=args.wave_size, miss_policy=args.miss_policy,
         promote=not args.no_promote, scheduler=sched,
         admission=args.admission,
         host_budget_s=(args.host_budget_ms / 1e3
-                       if args.host_budget_ms is not None else None))
+                       if args.host_budget_ms is not None else None),
+        tracer=tracer)
 
     serve_rng = np.random.default_rng(args.seed)
     train_rng = np.random.default_rng(args.seed + 1)
@@ -157,8 +171,33 @@ def _embedding_main(args):
     if sched is not None:
         t = sched.totals
         print(f"[serve] maintenance: {t.runs} steps, demoted={t.demoted} "
-              f"dropped={t.dropped} time={t.time_s*1e3:.0f}ms; "
+              f"dropped={t.dropped} deferred={t.deferred} "
+              f"time={t.time_s*1e3:.0f}ms; "
               f"reactive demotions/wave={m.demotions_per_wave:.1f}")
+    # end-of-run table occupancy (TableStats, the state half of the
+    # observability story; the wave counters above are the runtime half)
+    hot_stats, cold_stats = pub.table.tier_stats()
+    print(f"[serve] table: hot {hot_stats.size}/{hot_stats.capacity} "
+          f"(lf={hot_stats.load_factor:.2f}) | "
+          f"cold {cold_stats.size}/{cold_stats.capacity} "
+          f"(lf={cold_stats.load_factor:.2f})")
+    if args.trace_out or args.metrics_out:
+        from repro.obs import MetricsRegistry
+
+        reg = MetricsRegistry()
+        reg.observe_engine(m)
+        if sched is not None:
+            reg.observe_maintenance(sched.totals)
+        reg.observe_table(hot_stats, tier="hot")
+        reg.observe_table(cold_stats, tier="cold")
+        if args.metrics_out:
+            reg.save(args.metrics_out, format="prometheus")
+            print(f"[serve] metrics snapshot ({len(reg)} gauges) -> "
+                  f"{args.metrics_out}")
+        if args.trace_out:
+            tracer.save(args.trace_out)
+            print(f"[serve] trace ({len(tracer)} events) -> "
+                  f"{args.trace_out}")
     return m
 
 

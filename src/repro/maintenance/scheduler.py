@@ -44,6 +44,7 @@ from repro.core.api import table_signature
 from repro.core.predicates import SweepPredicate
 from repro.core.tiered import TieredHKVTable
 from repro.maintenance.rebalance import rebalance as _rebalance
+from repro.obs.trace import as_tracer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,7 +117,8 @@ class MaintenanceScheduler:
     Also usable directly (no engine): `table, report = sched.run(table)`.
     """
 
-    def __init__(self, policy: MaintenancePolicy = MaintenancePolicy()):
+    def __init__(self, policy: MaintenancePolicy = MaintenancePolicy(),
+                 *, tracer: Optional[Any] = None):
         self.policy = policy
         self.reports: list[MaintenanceReport] = []
         self._waves = 0
@@ -124,6 +126,9 @@ class MaintenanceScheduler:
         self._step_sig = None     # table signature the step fn was built for
         self._cost_ewma = None    # smoothed per-step host cost (slack gating)
         self.deferred = 0         # steps skipped for lack of slack budget
+        # span tracing: maintenance.run spans + maintenance.deferred
+        # instants (repro.obs.trace; noop when unwired)
+        self.tracer = as_tracer(tracer)
 
     # -- step construction -----------------------------------------------------
 
@@ -184,9 +189,10 @@ class MaintenanceScheduler:
             self._step_fn = self._build(table)
             self._step_sig = sig
         t0 = time.perf_counter()
-        t2, expired, demoted, dropped = self._step_fn(table)
-        expired, demoted, dropped = jax.block_until_ready(
-            (expired, demoted, dropped))
+        with self.tracer.span("maintenance.run", version=version):
+            t2, expired, demoted, dropped = self._step_fn(table)
+            expired, demoted, dropped = jax.block_until_ready(
+                (expired, demoted, dropped))
         elapsed = time.perf_counter() - t0
         self._cost_ewma = (elapsed if self._cost_ewma is None
                            else 0.7 * self._cost_ewma + 0.3 * elapsed)
@@ -217,6 +223,8 @@ class MaintenanceScheduler:
         if (slack_s is not None and self._cost_ewma is not None
                 and self._cost_ewma > slack_s):
             self.deferred += 1
+            self.tracer.instant("maintenance.deferred", slack_s=slack_s,
+                                cost_ewma_s=self._cost_ewma)
             return None
         version, table = source.snapshot()
         table2, rep = self.run(table, version=version)

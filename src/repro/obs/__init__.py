@@ -1,0 +1,37 @@
+"""hkv-obs — the observability subsystem (ISSUE 10).
+
+Three parts, one layering rule (obs imports core, never the reverse —
+`repro.core.ops` reaches back only through a deferred import inside the
+`telemetry is not None` branch, so the default path stays import-free):
+
+  telemetry   `OpTelemetry` + `TelemetrySink`: device-computed per-op
+              counters (buckets probed, digest-prefilter pass counts,
+              dual-bucket second probes, hits/misses, eviction vs
+              admission-rejection splits, tier motion) threaded through
+              the core op families via an optional `telemetry=` channel.
+              Contract: op results are bit-identical with telemetry on or
+              off, and `telemetry=None` (the default) adds zero kernel
+              launches and zero jaxpr growth.
+  trace       host-side span tracer (nestable spans + instant events)
+              exporting Chrome trace-event JSON loadable in Perfetto —
+              wired through the serving wave lifecycle, the maintenance
+              scheduler, and the publisher.
+  metrics     one `MetricsRegistry` aggregating `EngineMetrics`,
+              `MaintenanceTotals`, `TableStats`, and accumulated
+              `OpTelemetry` into a single snapshot with Prometheus
+              text-format exposition and a bench-trajectory JSON dump.
+"""
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.telemetry import OpTelemetry, TelemetrySink
+from repro.obs.trace import NOOP_TRACER, NoopTracer, Tracer, as_tracer
+
+__all__ = [
+    "MetricsRegistry",
+    "OpTelemetry",
+    "TelemetrySink",
+    "Tracer",
+    "NoopTracer",
+    "NOOP_TRACER",
+    "as_tracer",
+]

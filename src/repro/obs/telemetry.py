@@ -1,0 +1,310 @@
+"""Device op telemetry — typed counters for the core op families.
+
+The paper's headline claims are observability claims: find throughput
+"stable across load factors 0.50–1.00 (<5% variation)" and in-place
+eviction instead of capacity failure are only checkable with per-op
+counters.  This module computes those counters ON DEVICE, as a pure
+observer over the same probe/match formulas the ops themselves use
+(`find.probe_keys` + `find.match_lanes` — the single key-match oracle),
+so the jnp and kernel backends report identical numbers by construction.
+
+Wiring contract (enforced by `tests/test_obs.py` and the hkv-lint
+`telemetry` checker):
+
+  * every `@roles.*`-annotated op in `repro.core.ops` takes an optional
+    keyword-only `telemetry=` argument (or carries an explicit exemption
+    in `repro.analysis.telemetry.TELEMETRY_EXEMPT`);
+  * `telemetry=None` (the default) is LITERALLY the pre-telemetry code
+    path: zero extra launches, zero jaxpr growth, results untouched;
+  * `telemetry=sink` records an `OpTelemetry` pytree per op call into the
+    sink.  Results stay bit-identical — the observer never feeds back.
+
+Counter semantics (all int32 device scalars):
+
+  lanes            valid (non-EMPTY) key lanes in the batch
+  hits / misses    keys found resident / not (pre-op state for inserters)
+  probed_buckets   bucket rows FETCHED by the batch implementation: the
+                   vectorized probe reads both candidate rows in
+                   dual-bucket mode (1 + [bucket2 != bucket1] per valid
+                   lane — the `meta_rows` term of exp1), one in single
+  probed_slots     probed_buckets × slots_per_bucket
+  digest_pass      occupied probed slots passing the 8-bit digest
+                   prefilter (the slots that go on to a full 64-bit
+                   compare; ≈ hits + ~1/256 false positives)
+  second_probe     valid lanes whose bucket-1 row did NOT resolve them —
+                   the serialized second-probe demand a sequential
+                   implementation would pay (dual-bucket mode only)
+  updated/inserted/evicted/rejected
+                   upsert status histogram: in-place update, fresh-slot
+                   insert, insert-by-eviction, admission rejection
+  swept            entries removed by a predicated sweep / erase
+  promoted/demoted/dropped
+                   tier motion (cold→hot promotion, hot→cold demotion,
+                   pairs lost at the cold boundary) — recorded by the
+                   tier hierarchy (`core/tiered.py`)
+
+Under `jax.jit`, create the sink INSIDE the jitted function and return
+`sink.total()` (or `sink.by_op`) as an output — the recorded values are
+tracers and must leave through the function's return value.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import find as find_mod
+from repro.core import u64
+from repro.core.merge import (STATUS_EVICTED, STATUS_INSERTED,
+                              STATUS_REJECTED, STATUS_UPDATED)
+from repro.core.table import HKVConfig, HKVState
+from repro.core.u64 import U64
+
+_COUNTERS = (
+    "lanes", "hits", "misses",
+    "probed_buckets", "probed_slots", "digest_pass", "second_probe",
+    "updated", "inserted", "evicted", "rejected", "swept",
+    "promoted", "demoted", "dropped",
+)
+
+
+class OpTelemetry(NamedTuple):
+    """One op call's device-computed counters (int32 scalars; a pytree —
+    returnable from jit, summable across shards with `lax.psum`)."""
+
+    lanes: jax.Array
+    hits: jax.Array
+    misses: jax.Array
+    probed_buckets: jax.Array
+    probed_slots: jax.Array
+    digest_pass: jax.Array
+    second_probe: jax.Array
+    updated: jax.Array
+    inserted: jax.Array
+    evicted: jax.Array
+    rejected: jax.Array
+    swept: jax.Array
+    promoted: jax.Array
+    demoted: jax.Array
+    dropped: jax.Array
+
+    @classmethod
+    def zero(cls) -> "OpTelemetry":
+        z = jnp.int32(0)
+        return cls(*([z] * len(_COUNTERS)))
+
+    @classmethod
+    def of(cls, **counters) -> "OpTelemetry":
+        """Build from a subset of named counters (the rest zero)."""
+        z = jnp.int32(0)
+        return cls(**{name: counters.get(name, z) for name in _COUNTERS})
+
+    def merge(self, other: "OpTelemetry") -> "OpTelemetry":
+        return OpTelemetry(*[a + b for a, b in zip(self, other)])
+
+    def to_dict(self) -> dict:
+        """Host-side {counter: int} (blocks on the device values)."""
+        return {name: int(v) for name, v in zip(_COUNTERS, self)}
+
+    def rates(self) -> dict:
+        """Host-side derived rates (the claim-anchoring numbers):
+
+          probes_per_query    probed_buckets / lanes — exp1's meta_rows
+                              term, the λ-stability claim's flat curve
+          digest_pass_rate    digest_pass / probed_slots — the prefilter's
+                              full-compare escape fraction
+          second_probe_rate   second_probe / lanes — dual-bucket serial
+                              probe demand
+          hit_rate            hits / lanes
+        """
+        d = self.to_dict()
+        lanes = max(d["lanes"], 1)
+        return {
+            "probes_per_query": d["probed_buckets"] / lanes,
+            "digest_pass_rate": d["digest_pass"] / max(d["probed_slots"], 1),
+            "second_probe_rate": d["second_probe"] / lanes,
+            "hit_rate": d["hits"] / lanes,
+        }
+
+
+class TelemetrySink:
+    """Accumulates `OpTelemetry` records keyed by op name.
+
+    Outside jit the recorded counters are concrete device scalars;
+    inside jit they are tracers — create the sink inside the traced
+    function and return `sink.total()` as an output.
+    """
+
+    def __init__(self):
+        self.by_op: dict[str, OpTelemetry] = {}
+        self.calls: dict[str, int] = {}
+
+    def record(self, op: str, tel: OpTelemetry) -> None:
+        prev = self.by_op.get(op)
+        self.by_op[op] = tel if prev is None else prev.merge(tel)
+        self.calls[op] = self.calls.get(op, 0) + 1
+
+    def total(self) -> OpTelemetry:
+        tel = OpTelemetry.zero()
+        for t in self.by_op.values():
+            tel = tel.merge(t)
+        return tel
+
+    def snapshot(self) -> dict:
+        """Host-side {op: {counter: int}} (blocks on device values)."""
+        return {op: t.to_dict() for op, t in sorted(self.by_op.items())}
+
+    def __bool__(self) -> bool:  # a sink with no records is still a sink
+        return True
+
+
+# =============================================================================
+# Observers — pure counter math over (pre-op state, keys, op outputs)
+# =============================================================================
+
+
+def probe_counters(state: HKVState, cfg: HKVConfig, keys: U64) -> dict:
+    """The probe-side counters every keyed op family shares, computed
+    from the SAME formulas the ops use (`probe_keys` + `match_lanes`) —
+    backend-independent by construction.
+
+    `probed_buckets` counts bucket rows the batch implementation fetches
+    (both candidate rows in dual mode — exp1's meta_rows term, flat
+    across λ); `second_probe` counts lanes bucket 1 failed to resolve
+    (the sequential implementation's conditional second fetch).
+    """
+    probe = find_mod.probe_keys(cfg, keys)
+    valid = probe.valid
+    s = cfg.slots_per_bucket
+    khi1 = state.key_hi[probe.bucket1]
+    klo1 = state.key_lo[probe.bucket1]
+    if cfg.use_digest:
+        m1 = find_mod.match_lanes(khi1, klo1, keys.hi[:, None],
+                                  keys.lo[:, None],
+                                  state.digests[probe.bucket1],
+                                  probe.digest[:, None])
+    else:
+        m1 = find_mod.match_lanes(khi1, klo1, keys.hi[:, None],
+                                  keys.lo[:, None])
+    hit1 = jnp.any(m1, axis=1) & valid
+    occ1 = ~u64.is_empty(U64(khi1, klo1))
+    pass1 = ((state.digests[probe.bucket1] == probe.digest[:, None])
+             & occ1 & valid[:, None])
+    digest_pass = jnp.sum(pass1.astype(jnp.int32))
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+    if cfg.buckets_per_key == 2:
+        distinct2 = valid & (probe.bucket2 != probe.bucket1)
+        probed = n_valid + jnp.sum(distinct2.astype(jnp.int32))
+        second = jnp.sum((valid & ~hit1).astype(jnp.int32))
+        khi2 = state.key_hi[probe.bucket2]
+        klo2 = state.key_lo[probe.bucket2]
+        occ2 = ~u64.is_empty(U64(khi2, klo2))
+        pass2 = ((state.digests[probe.bucket2] == probe.digest[:, None])
+                 & occ2 & distinct2[:, None])
+        digest_pass = digest_pass + jnp.sum(pass2.astype(jnp.int32))
+    else:
+        probed = n_valid
+        second = jnp.int32(0)
+    return {
+        "lanes": n_valid,
+        "probed_buckets": probed,
+        "probed_slots": probed * jnp.int32(s),
+        "digest_pass": digest_pass,
+        "second_probe": second,
+    }
+
+
+def _with_hits(state, cfg, keys, found) -> dict:
+    c = probe_counters(state, cfg, keys)
+    valid = ~u64.is_empty(keys)
+    hits = jnp.sum((found & valid).astype(jnp.int32))
+    c["hits"] = hits
+    c["misses"] = c["lanes"] - hits
+    return c
+
+
+def observe_find(state: HKVState, cfg: HKVConfig, keys: U64,
+                 found: jax.Array) -> OpTelemetry:
+    """Reader-family observer (find / find_ptr / find_rows / contains)."""
+    return OpTelemetry.of(**_with_hits(state, cfg, keys, found))
+
+
+def observe_update(state: HKVState, cfg: HKVConfig, keys: U64,
+                   found: jax.Array) -> OpTelemetry:
+    """Updater-family observer (assign*, update_rows): a resident lane's
+    row/score write counts as `updated`.  `state` is the PRE-op state (the
+    probe ran against its planes)."""
+    c = _with_hits(state, cfg, keys, found)
+    c["updated"] = c["hits"]
+    return OpTelemetry.of(**c)
+
+
+def observe_upsert(state: HKVState, cfg: HKVConfig, keys: U64,
+                   status: jax.Array,
+                   found: Optional[jax.Array] = None) -> OpTelemetry:
+    """Inserter-family observer: probe counters against the PRE-op state
+    plus the merge-status histogram — the eviction-vs-admission-rejection
+    split the paper's cache-semantics claim rides on.  `found` (when the
+    op reports it, e.g. find_or_insert) overrides the hit derivation;
+    otherwise a hit is an in-place update (STATUS_UPDATED)."""
+    c = probe_counters(state, cfg, keys)
+    updated = jnp.sum((status == STATUS_UPDATED).astype(jnp.int32))
+    if found is None:
+        hits = updated
+    else:
+        valid = ~u64.is_empty(keys)
+        hits = jnp.sum((found & valid).astype(jnp.int32))
+    c["hits"] = hits
+    c["misses"] = c["lanes"] - hits
+    c["updated"] = updated
+    c["inserted"] = jnp.sum((status == STATUS_INSERTED).astype(jnp.int32))
+    c["evicted"] = jnp.sum((status == STATUS_EVICTED).astype(jnp.int32))
+    c["rejected"] = jnp.sum((status == STATUS_REJECTED).astype(jnp.int32))
+    return OpTelemetry.of(**c)
+
+
+def observe_erase(state: HKVState, cfg: HKVConfig, keys: U64,
+                  found: jax.Array) -> OpTelemetry:
+    """Keyed-erase observer: each resident key removed counts as swept."""
+    c = _with_hits(state, cfg, keys, found)
+    c["swept"] = c["hits"]
+    return OpTelemetry.of(**c)
+
+
+def observe_sweep(cfg: HKVConfig, swept: jax.Array) -> OpTelemetry:
+    """Predicated whole-table sweep (erase_if): every slot is scanned —
+    probed_slots reports the full table pass, not a per-key probe."""
+    cap = jnp.int32(cfg.num_buckets * cfg.slots_per_bucket)
+    return OpTelemetry.of(
+        probed_buckets=jnp.int32(cfg.num_buckets), probed_slots=cap,
+        swept=swept.astype(jnp.int32))
+
+
+def observe_evict_if(cfg: HKVConfig, count: jax.Array) -> OpTelemetry:
+    """Budgeted coldest-first eviction sweep."""
+    cap = jnp.int32(cfg.num_buckets * cfg.slots_per_bucket)
+    return OpTelemetry.of(
+        probed_buckets=jnp.int32(cfg.num_buckets), probed_slots=cap,
+        evicted=count.astype(jnp.int32), swept=count.astype(jnp.int32))
+
+
+def tier_motion(promoted=0, demoted=0, dropped=0) -> OpTelemetry:
+    """Tier-hierarchy motion record (`core/tiered.py` folds its result
+    counters in through this)."""
+    i32 = lambda x: jnp.asarray(x, jnp.int32).reshape(())  # noqa: E731
+    return OpTelemetry.of(promoted=i32(promoted), demoted=i32(demoted),
+                          dropped=i32(dropped))
+
+
+def psum_telemetry(tel: OpTelemetry, axis_names) -> OpTelemetry:
+    """Sum per-shard counters across the mesh (call under shard_map) —
+    the distributed layer's one-liner for whole-mesh telemetry."""
+    return jax.tree.map(lambda x: jax.lax.psum(x, axis_names), tel)
+
+
+def host_telemetry(tel: OpTelemetry) -> OpTelemetry:
+    """Materialize a (possibly async) telemetry record on the host."""
+    return OpTelemetry(*[np.int64(np.asarray(v)) for v in tel])

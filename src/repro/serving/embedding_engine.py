@@ -98,6 +98,7 @@ from repro.core import u64
 from repro.core.api import table_signature
 from repro.core.tiered import TieredHKVTable
 from repro.core.u64 import U64
+from repro.obs.trace import as_tracer
 from repro.serving.publisher import StaticSource, TableSource
 
 MISS_POLICIES = ("readonly", "admit")
@@ -190,6 +191,14 @@ class EngineMetrics(NamedTuple):
     p50_total_s: float = 0.0
     p99_total_s: float = 0.0
 
+    @classmethod
+    def zero(cls) -> "EngineMetrics":
+        """The well-formed empty snapshot (no waves, no requests) —
+        field-safe against the NamedTuple growing, unlike a positional
+        zero literal."""
+        return cls(waves=0, keys=0, hits=0, hit_rate=0.0, hot_rate=0.0,
+                   kv_per_s=0.0, p50_latency_s=0.0, p99_latency_s=0.0)
+
 
 class _Inflight(NamedTuple):
     """A dispatched, not-yet-retired wave (continuous mode holds one)."""
@@ -241,7 +250,8 @@ class OnlineEmbeddingEngine:
                  default_row: Optional[Callable[[U64], jax.Array]] = None,
                  scheduler: Optional[Any] = None,
                  admission: str = "wave",
-                 host_budget_s: Optional[float] = None):
+                 host_budget_s: Optional[float] = None,
+                 tracer: Optional[Any] = None):
         if miss_policy not in MISS_POLICIES:
             raise ValueError(
                 f"miss_policy {miss_policy!r}; one of {MISS_POLICIES}")
@@ -256,6 +266,11 @@ class OnlineEmbeddingEngine:
         self.admission = admission
         self.host_budget_s = host_budget_s
         self._default_row = default_row
+        # span tracing (repro.obs.trace): engine.submit / wave.splice /
+        # wave.dispatch / wave.reap / request lifetimes.  `as_tracer`
+        # normalizes None to the shared noop so call sites stay
+        # unconditional.
+        self.tracer = as_tracer(tracer)
         # wave-interleaved maintenance (repro.maintenance.scheduler):
         # after each wave the scheduler gets the hand-off gap — it
         # snapshots the source, runs one budgeted step, and offers the
@@ -285,6 +300,7 @@ class OnlineEmbeddingEngine:
         req.done = False
         if req.t_submit is None:
             req.t_submit = time.perf_counter()
+        self.tracer.instant("engine.submit", rid=req.rid, keys=len(req.keys))
         self._queue.append((req, 0))
         if self.admission == "continuous":
             # splice into the partially-drained staging wave right away:
@@ -322,7 +338,8 @@ class OnlineEmbeddingEngine:
 
     def _take_staging(self):
         """Claim the staged wave and reset the buffer for the next one."""
-        self._fill_staging()
+        with self.tracer.span("wave.splice"):
+            self._fill_staging()
         lanes, segments, used = (self._stage_lanes, self._stage_segments,
                                  self._stage_used)
         self._stage_lanes = np.full(self.wave_size, _EMPTY_KEY, np.uint64)
@@ -416,15 +433,18 @@ class OnlineEmbeddingEngine:
                 req.t_done = now
                 req.done = True
                 self.completed.append(req)
+                self.tracer.complete_abs("request", req.t_submit, now,
+                                         rid=req.rid, keys=len(req.keys))
             return None
         fn = self._wave_fn_for(table)
         k = u64.from_uint64(lanes)
         t0 = time.perf_counter()
-        out = fn(table, k.hi, k.lo)
-        if self._mutates:         # admission / promotion built a successor;
-            # offer the (possibly still computing) handle NOW so the next
-            # dispatch chains on it — XLA orders launches by data deps
-            self.source.offer(version, out[0])
+        with self.tracer.span("wave.dispatch", used=used, version=version):
+            out = fn(table, k.hi, k.lo)
+            if self._mutates:     # admission / promotion built a successor;
+                # offer the (possibly still computing) handle NOW so the next
+                # dispatch chains on it — XLA orders launches by data deps
+                self.source.offer(version, out[0])
         for req, _off, _lane0, _take in segments:
             if req.t_admit is None:
                 req.t_admit = t0
@@ -433,24 +453,31 @@ class OnlineEmbeddingEngine:
 
     def _retire(self, flight: _Inflight) -> WaveReport:
         """Block on a dispatched wave, unpack results into its requests."""
-        _succ, vals, found, hot, dem = flight.out
-        vals, found, hot, dem = jax.block_until_ready((vals, found, hot, dem))
-        dt = time.perf_counter() - flight.t_dispatch
-        vals = np.asarray(vals)
-        found = np.asarray(found)
-        hot = np.asarray(hot)
-        now = time.perf_counter()
-        for req, off, lane0, take in flight.segments:
-            if req.values is None:
-                req.values = np.zeros((len(req.keys), vals.shape[1]),
-                                      vals.dtype)
-                req.found = np.zeros(len(req.keys), bool)
-            req.values[off:off + take] = vals[lane0:lane0 + take]
-            req.found[off:off + take] = found[lane0:lane0 + take]
-            if off + take == len(req.keys):
-                req.done = True
-                req.t_done = now
-                self.completed.append(req)
+        with self.tracer.span("wave.reap", used=flight.used,
+                              version=flight.version):
+            _succ, vals, found, hot, dem = flight.out
+            vals, found, hot, dem = jax.block_until_ready(
+                (vals, found, hot, dem))
+            dt = time.perf_counter() - flight.t_dispatch
+            vals = np.asarray(vals)
+            found = np.asarray(found)
+            hot = np.asarray(hot)
+            now = time.perf_counter()
+            for req, off, lane0, take in flight.segments:
+                if req.values is None:
+                    req.values = np.zeros((len(req.keys), vals.shape[1]),
+                                          vals.dtype)
+                    req.found = np.zeros(len(req.keys), bool)
+                req.values[off:off + take] = vals[lane0:lane0 + take]
+                req.found[off:off + take] = found[lane0:lane0 + take]
+                if off + take == len(req.keys):
+                    req.done = True
+                    req.t_done = now
+                    self.completed.append(req)
+                    # the request's full submit→done lifetime, from the
+                    # engine's own SLO stamps (raw perf_counter epoch)
+                    self.tracer.complete_abs("request", req.t_submit, now,
+                                             rid=req.rid, keys=len(req.keys))
         used = flight.used
         live = ~_is_empty_np(flight.lanes[:used])
         report = WaveReport(size=int(live.sum()),
@@ -570,7 +597,7 @@ class OnlineEmbeddingEngine:
         request (including warmup — queue-wait is a property of arrival
         pressure, not of compilation)."""
         if not self.reports and not self.completed:
-            return EngineMetrics(0, 0, 0, 0.0, 0.0, 0.0, 0.0, 0.0)
+            return EngineMetrics.zero()
         keys = sum(r.size for r in self.reports)
         hits = sum(r.hits for r in self.reports)
         demos = sum(r.demotions for r in self.reports)

@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.core import u64
 from repro.core.u64 import U64
+from repro.obs.trace import as_tracer
 
 
 # =============================================================================
@@ -109,12 +110,15 @@ class TablePublisher:
     tuple itself is immutable.
     """
 
-    def __init__(self, table: Any):
+    def __init__(self, table: Any, *, tracer: Optional[Any] = None):
         self._snap = (0, table)
         self._lock = threading.Lock()
         self.published = 0           # trainer publications
         self.offered = 0             # engine offers accepted
         self.rejected_offers = 0     # engine offers beaten by a publish
+        # span tracing: publisher.publish / publisher.offer instants
+        # (repro.obs.trace; noop when unwired)
+        self.tracer = as_tracer(tracer)
 
     def snapshot(self) -> tuple:
         return self._snap
@@ -134,7 +138,8 @@ class TablePublisher:
             v = self._snap[0] + 1
             self._snap = (v, table)
             self.published += 1
-            return v
+        self.tracer.instant("publisher.publish", version=v)
+        return v
 
     def offer(self, version: int, table: Any) -> bool:
         """Compare-and-swap from the read path: applies only if the reader's
@@ -143,10 +148,14 @@ class TablePublisher:
         with self._lock:
             if self._snap[0] != version:
                 self.rejected_offers += 1
-                return False
-            self._snap = (version + 1, table)
-            self.offered += 1
-            return True
+                accepted = False
+            else:
+                self._snap = (version + 1, table)
+                self.offered += 1
+                accepted = True
+        self.tracer.instant("publisher.offer", version=version,
+                            accepted=accepted)
+        return accepted
 
 
 # =============================================================================
@@ -166,11 +175,17 @@ class TableDelta(NamedTuple):
         return int(self.keys.shape[0])
 
 
-def export_delta(table: Any, *, chunk_buckets: int = 64) -> TableDelta:
+def export_delta(table: Any, *, chunk_buckets: int = 64,
+                 tracer: Optional[Any] = None) -> TableDelta:
     """Drain a table's live entries through `export_batch` in
     `chunk_buckets`-bucket chunks (any handle exposing
     `num_buckets`/`export_batch`: flat, tiered — whose concatenated bucket
     space dedupes inclusive copies — or the dict baselines)."""
+    with as_tracer(tracer).span("delta.export"):
+        return _export_delta(table, chunk_buckets=chunk_buckets)
+
+
+def _export_delta(table: Any, *, chunk_buckets: int) -> TableDelta:
     ks, vs, ss = [], [], []
     nb = table.num_buckets
     for start in range(0, nb, chunk_buckets):
@@ -196,28 +211,35 @@ def export_delta(table: Any, *, chunk_buckets: int = 64) -> TableDelta:
 
 
 def ingest_delta(table: Any, delta: TableDelta, *, batch: int = 1024,
-                 carry_scores: bool = False) -> Any:
+                 carry_scores: bool = False,
+                 tracer: Optional[Any] = None,
+                 telemetry: Optional[Any] = None) -> Any:
     """Replay a delta into any inserter-capable handle via `ingest`
     (admission-controlled: the destination's cache semantics decide what
     sticks — the cross-process analogue of the demotion cascade's
     boundary).  `carry_scores=True` forwards the exported scores as custom
     scores; only meaningful when the destination runs the 'custom' policy
-    (other policies stamp their own, `translate_scores` semantics)."""
+    (other policies stamp their own, `translate_scores` semantics).
+    `telemetry=` threads the device counter sink through every replayed
+    `ingest` call (the op-telemetry seam, DESIGN.md §Observability)."""
     dim = delta.values.shape[1] if delta.values.ndim == 2 else 0
-    for start in range(0, delta.count, batch):
-        kb = delta.keys[start:start + batch]
-        vb = delta.values[start:start + batch]
-        sb = delta.scores[start:start + batch]
-        if len(kb) < batch:   # constant shapes: one jit entry per delta
-            pad = batch - len(kb)
-            kb = np.concatenate([kb, np.full(pad, _EMPTY_KEY, np.uint64)])
-            vb = np.concatenate([vb, np.zeros((pad, dim), vb.dtype)])
-            sb = np.concatenate([sb, np.zeros(pad, np.uint64)])
-        kw = {}
-        if carry_scores:
-            kw["custom_scores"] = u64.from_uint64(sb)
-        res = table.ingest(u64.from_uint64(kb), jnp.asarray(vb), **kw)
-        table = res.table
+    with as_tracer(tracer).span("delta.ingest", count=delta.count):
+        for start in range(0, delta.count, batch):
+            kb = delta.keys[start:start + batch]
+            vb = delta.values[start:start + batch]
+            sb = delta.scores[start:start + batch]
+            if len(kb) < batch:   # constant shapes: one jit entry per delta
+                pad = batch - len(kb)
+                kb = np.concatenate([kb, np.full(pad, _EMPTY_KEY, np.uint64)])
+                vb = np.concatenate([vb, np.zeros((pad, dim), vb.dtype)])
+                sb = np.concatenate([sb, np.zeros(pad, np.uint64)])
+            kw = {}
+            if carry_scores:
+                kw["custom_scores"] = u64.from_uint64(sb)
+            if telemetry is not None:
+                kw["telemetry"] = telemetry
+            res = table.ingest(u64.from_uint64(kb), jnp.asarray(vb), **kw)
+            table = res.table
     return table
 
 
@@ -240,6 +262,11 @@ class OnlineTrainer:
 
     `update_fn(rows, grads) -> rows` sees full-width rows [n, dim+aux];
     the default is plain SGD on the embedding columns.
+
+    `telemetry=` (a `repro.obs.telemetry.TelemetrySink`) accumulates the
+    admission op's device counters across steps — the trainer-side half
+    of the op-telemetry story (the update half runs through a session,
+    which is out of the telemetry seam's scope).
     """
 
     publisher: TablePublisher
@@ -247,6 +274,7 @@ class OnlineTrainer:
     lr: float = 0.1
     update_fn: Optional[Callable] = None
     steps: int = 0
+    telemetry: Optional[Any] = None
 
     def __post_init__(self):
         self._table = self.publisher.table
@@ -259,7 +287,10 @@ class OnlineTrainer:
         t = self._table
         dim = grads.shape[1]
         init = jnp.zeros((grads.shape[0], dim), jnp.float32)
-        res = t.find_or_insert(keys, init)
+        if self.telemetry is not None:
+            res = t.find_or_insert(keys, init, telemetry=self.telemetry)
+        else:
+            res = t.find_or_insert(keys, init)
         t = res.table
         fn = self.update_fn or (
             lambda rows, g: rows.at[:, :dim].add(-self.lr * g))

@@ -19,6 +19,7 @@ from repro.analysis import kernel_contracts as kc
 from repro.analysis import oracle_coupling as oc
 from repro.analysis import registry
 from repro.analysis import roles as roles_checker
+from repro.analysis import telemetry as tel_checker
 from repro.analysis.fixtures import bad_kernels, bad_ops
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
@@ -68,6 +69,31 @@ class TestRolesFixture:
         assert "annotated_op" not in subjects
         assert "free_function" not in subjects
         assert "_private_helper" not in subjects
+
+
+class TestTelemetryFixture:
+    def test_missing_seam_flagged(self):
+        fs = tel_checker.check_telemetry(bad_ops, path="fixture", exempt={})
+        assert [(f.rule, f.subject) for f in fs] == \
+            [("missing-telemetry-seam", "annotated_op")]
+
+    def test_seamed_unannotated_and_exempt_not_flagged(self):
+        # telemetered_op threads the seam; mystery_op has no role (the
+        # roles checker owns that); an exemption silences annotated_op
+        fs = tel_checker.check_telemetry(
+            bad_ops, path="fixture",
+            exempt={"annotated_op": "fixture rationale"})
+        assert fs == []
+
+    def test_stale_exemptions_flagged(self):
+        fs = tel_checker.check_telemetry(
+            bad_ops, path="fixture",
+            exempt={"annotated_op": "ok",
+                    "ghost_op": "no longer exists",
+                    "telemetered_op": "grew the seam"})
+        assert [(f.rule, f.subject) for f in fs] == \
+            [("stale-exemption", "ghost_op"),
+             ("stale-exemption", "telemetered_op")]
 
 
 class TestForkFixture:
@@ -124,6 +150,11 @@ class TestShippedTreeClean:
 
     def test_oracle_coupling_clean(self):
         assert oc.check_oracle_coupling() == []
+
+    def test_telemetry_clean(self):
+        # every @roles-annotated op threads telemetry= or carries a
+        # reviewed TELEMETRY_EXEMPT rationale, and no exemption is stale
+        assert tel_checker.check_telemetry() == []
 
     def test_registry_covers_every_pallas_file(self):
         assert registry.unregistered_kernel_files() == []

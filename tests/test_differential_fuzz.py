@@ -532,3 +532,129 @@ if HAVE_HYPOTHESIS:
     TestJnpDifferential.settings = _SETTINGS
     TestKernelDifferential = KernelDifferential.TestCase
     TestKernelDifferential.settings = _SETTINGS
+
+
+# =============================================================================
+# Driver 3: telemetry neutrality (the obs PR's hard contract)
+# =============================================================================
+#
+# The `telemetry=` seam must be a pure observer: op results bit-identical
+# with the channel on or off, and `telemetry=None` (the default) must
+# compile to exactly the same launch set — zero extra pallas_calls.
+
+
+def _tel_wrappers():
+    """Telemetry-on twins of the jitted op wrappers: the sink lives
+    INSIDE the jitted fn (created per trace, returned as a pytree leaf
+    set via `total()`), so accumulation composes with jit."""
+    from repro.obs.telemetry import TelemetrySink
+
+    @jax.jit
+    def upsert_tel(t, kh, kl, v):
+        sink = TelemetrySink()
+        r = t.insert_or_assign(U64(kh, kl), v, telemetry=sink)
+        return t_out(r.table, r.status), sink.total()
+
+    @jax.jit
+    def foi_tel(t, kh, kl, init):
+        sink = TelemetrySink()
+        r = t.find_or_insert(U64(kh, kl), init, telemetry=sink)
+        return t_out(r.table, r.values, r.found, r.status), sink.total()
+
+    @jax.jit
+    def find_tel(t, kh, kl):
+        sink = TelemetrySink()
+        r = t.find(U64(kh, kl), telemetry=sink)
+        return t_out(r.values, r.found), sink.total()
+
+    @jax.jit
+    def erase_tel(t, kh, kl):
+        sink = TelemetrySink()
+        return t_out(t.erase(U64(kh, kl), telemetry=sink)), sink.total()
+
+    def t_out(*xs):
+        return xs if len(xs) > 1 else xs[0]
+
+    return upsert_tel, foi_tel, find_tel, erase_tel
+
+
+@pytest.mark.parametrize("backend", ["jnp", "kernel"])
+def test_telemetry_on_replay_is_bit_identical(backend):
+    """Two identical tables driven by the same seeded op sequence — one
+    through the plain wrappers, one with a TelemetrySink threaded.  Every
+    result and the drained end state must match bit-for-bit, and the
+    sink must actually have observed the traffic."""
+    upsert_tel, foi_tel, find_tel, erase_tel = _tel_wrappers()
+    rng = np.random.default_rng(777)
+    t_plain = HKVTable.create(capacity=CAP, dim=DIM, buckets_per_key=DUAL,
+                              score_policy=POLICY, backend=backend)
+    t_tel = HKVTable.create(capacity=CAP, dim=DIM, buckets_per_key=DUAL,
+                            score_policy=POLICY, backend=backend)
+    lanes_seen = 0
+    for step in range(24):
+        n = int(rng.integers(1, LANES + 1))
+        ids = [int(x) for x in rng.integers(-2, 61, size=n)]
+        if rng.random() < 0.2:
+            ids[0] = int(rng.integers(2**32, 2**32 + 5))
+        canonical, _ = to_caller_form(ids, "uint64")
+        k = normalize_keys(canonical)
+        v = (rng.integers(0, 6, size=(LANES, 1)).astype(np.float32)
+             * np.ones((1, DIM), np.float32))
+        op = step % 4
+        if op == 0:
+            t_plain, st_p = _upsert(t_plain, k.hi, k.lo, jnp.asarray(v))
+            (t_tel, st_t), tel = upsert_tel(t_tel, k.hi, k.lo,
+                                            jnp.asarray(v))
+            assert np.array_equal(np.asarray(st_p), np.asarray(st_t))
+        elif op == 1:
+            t_plain, vals_p, f_p, st_p = _foi(t_plain, k.hi, k.lo,
+                                              jnp.asarray(v))
+            (t_tel, vals_t, f_t, st_t), tel = foi_tel(t_tel, k.hi, k.lo,
+                                                      jnp.asarray(v))
+            assert np.array_equal(np.asarray(vals_p), np.asarray(vals_t))
+            assert np.array_equal(np.asarray(f_p), np.asarray(f_t))
+            assert np.array_equal(np.asarray(st_p), np.asarray(st_t))
+        elif op == 2:
+            vals_p, f_p = _find(t_plain, k.hi, k.lo)
+            (vals_t, f_t), tel = find_tel(t_tel, k.hi, k.lo)
+            assert np.array_equal(np.asarray(vals_p), np.asarray(vals_t))
+            assert np.array_equal(np.asarray(f_p), np.asarray(f_t))
+        else:
+            t_plain = _erase(t_plain, k.hi, k.lo)
+            t_tel, tel = erase_tel(t_tel, k.hi, k.lo)
+        lanes_seen += int(np.asarray(tel.lanes))
+        # bit-identity of the full state after every mutating step
+        ep, et = _export(t_plain), _export(t_tel)
+        for field in ep._fields:
+            assert np.array_equal(np.asarray(getattr(ep, field)),
+                                  np.asarray(getattr(et, field))), \
+                f"state field {field} diverged at step {step} ({backend})"
+    assert lanes_seen > 0   # the sink really observed the traffic
+
+
+def test_telemetry_none_compiles_to_same_launch_set():
+    """`telemetry=None` (the default) must add ZERO pallas_calls: the
+    jaxpr of the kernel-backed find with the kwarg spelled out equals the
+    kwarg-free jaxpr — same equation count, same number of pallas_call
+    primitives (the launch-count pin, same accounting as
+    test_find_kernel.py::TestLaunchBudget)."""
+    t = HKVTable.create(capacity=CAP, dim=DIM, buckets_per_key=DUAL,
+                        score_policy=POLICY, backend="kernel")
+    k = normalize_keys(np.arange(1, LANES + 1, dtype=np.uint64))
+
+    def n_pallas(jaxpr):
+        return sum(1 for eqn in jaxpr.jaxpr.eqns
+                   if "pallas" in eqn.primitive.name)
+
+    plain = jax.make_jaxpr(lambda tt, kh, kl: _count_probe(tt, kh, kl))(
+        t, k.hi, k.lo)
+    spelled = jax.make_jaxpr(
+        lambda tt, kh, kl: _count_probe(tt, kh, kl, telemetry=None))(
+        t, k.hi, k.lo)
+    assert n_pallas(plain) == n_pallas(spelled)
+    assert len(plain.jaxpr.eqns) == len(spelled.jaxpr.eqns)
+
+
+def _count_probe(tt, kh, kl, **kw):
+    r = tt.find(U64(kh, kl), **kw)
+    return r.values, r.found
